@@ -1,0 +1,110 @@
+//! End-to-end serving driver (DESIGN.md §e2e-serving): starts the TCP
+//! server on the AOT-compiled tiny model, fires a batch of concurrent
+//! client requests (mixed sequential/speculative), and reports
+//! latency/throughput percentiles. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_requests`
+
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
+use ghidorah::arca::tree_builder::build_tree;
+use ghidorah::coordinator::server::Client;
+use ghidorah::coordinator::{Scheduler, Server};
+use ghidorah::runtime::{Artifacts, Runtime};
+use ghidorah::util::json::Json;
+use ghidorah::util::stats::Samples;
+
+const N_CLIENTS: usize = 4;
+const REQS_PER_CLIENT: usize = 6;
+const MAX_NEW: usize = 24;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Artifacts::default_dir();
+    anyhow::ensure!(
+        Artifacts::available(&dir),
+        "artifacts missing at {} — run `make artifacts` first",
+        dir.display()
+    );
+
+    println!("== Ghidorah end-to-end serving driver ==");
+    let cfg = Artifacts::load(&dir)?.cfg;
+    let fit = fit_profile(&PAPER_TABLE1[0]);
+    let heads: Vec<Vec<f64>> = fit.profile.heads.iter().take(cfg.n_medusa).cloned().collect();
+    let tree = build_tree(&heads, 16);
+
+    let sched = Scheduler::spawn(move || Runtime::load_widths(&Artifacts::default_dir(), &[1, 16, 64]), tree, 64, 4);
+    let server = Server::new(sched, N_CLIENTS + 2);
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = Arc::new(server);
+    let server2 = Arc::clone(&server);
+    let handle = std::thread::spawn(move || {
+        server2.serve("127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv()?;
+    println!("server listening on {addr}");
+
+    let prompts = [
+        "the quick brown fox",
+        "edge inference is",
+        "speculative decoding can",
+        "unified memory lets",
+        "fn main() {",
+        "SELECT * FROM",
+    ];
+
+    let started = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..N_CLIENTS {
+        let prompts: Vec<String> = prompts.iter().map(|s| s.to_string()).collect();
+        workers.push(std::thread::spawn(move || -> anyhow::Result<Vec<(f64, usize, f64)>> {
+            let mut client = Client::connect(addr)?;
+            let mut out = Vec::new();
+            for r in 0..REQS_PER_CLIENT {
+                let engine = if (c + r) % 2 == 0 { "ghidorah" } else { "sequential" };
+                let prompt = &prompts[(c * REQS_PER_CLIENT + r) % prompts.len()];
+                let t0 = Instant::now();
+                let resp = client.request((c * 100 + r) as u64, prompt, MAX_NEW, engine)?;
+                let wall = t0.elapsed().as_secs_f64();
+                anyhow::ensure!(resp.get("error").is_none(), "server error: {}", resp.dump());
+                let tokens = resp.get("tokens").and_then(Json::as_usize).unwrap_or(0);
+                let acc = resp.get("mean_acceptance").and_then(Json::as_f64).unwrap_or(0.0);
+                out.push((wall, tokens, acc));
+            }
+            Ok(out)
+        }));
+    }
+
+    let mut lat = Samples::new();
+    let mut total_tokens = 0usize;
+    for w in workers {
+        for (wall, tokens, _acc) in w.join().unwrap()? {
+            lat.push(wall * 1e3);
+            total_tokens += tokens;
+        }
+    }
+    let wall = started.elapsed().as_secs_f64();
+
+    // server-side stats
+    let mut c = Client::connect(addr)?;
+    let stats = c.roundtrip(&Json::obj(vec![("cmd", Json::str("stats"))]))?;
+    let _ = c.roundtrip(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
+    let _ = TcpStream::connect(addr); // kick the accept loop
+    handle.join().unwrap();
+
+    let n = N_CLIENTS * REQS_PER_CLIENT;
+    println!("\n== results ==");
+    println!("requests: {n}   wall: {wall:.2}s   tokens out: {total_tokens}");
+    println!(
+        "request latency: p50 {:.1} ms  p95 {:.1} ms  mean {:.1} ms",
+        lat.p50(),
+        lat.p95(),
+        lat.mean()
+    );
+    println!("aggregate throughput: {:.1} tok/s  ({:.2} req/s)", total_tokens as f64 / wall, n as f64 / wall);
+    println!("server metrics: {}", stats.dump());
+    Ok(())
+}

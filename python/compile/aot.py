@@ -1,0 +1,186 @@
+"""AOT pipeline: lower the L2 model (with the L1 Pallas kernel inlined) to
+HLO **text** artifacts + weights.npz + manifest.json for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once per model change: ``make artifacts``. Python is never on the
+request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+DECODE_WIDTHS = [1, 2, 4, 8, 16, 32, 64]
+SHARD_DEMO_WIDTH = 16
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_decode(cfg: M.ModelConfig, w: int) -> str:
+    L, C, H, Dh = cfg.n_layers, cfg.max_ctx, cfg.n_heads, cfg.head_dim
+
+    def fn(params, tokens, pos, mask, k_cache, v_cache, cache_len):
+        return M.decode_step(cfg, params, tokens, pos, mask, k_cache, v_cache, cache_len)
+
+    lowered = jax.jit(fn).lower(
+        M.param_specs(cfg),
+        i32(w),
+        i32(w),
+        f32(w, w),
+        f32(L, C, H, Dh),
+        f32(L, C, H, Dh),
+        i32(),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_shard_demos(cfg: M.ModelConfig, w: int) -> dict[str, str]:
+    """HCMP demonstration executables (see model.py §sharding)."""
+    d, f = cfg.d_model, cfg.ffn
+    H, Dh, C = cfg.n_heads, cfg.head_dim, cfg.max_ctx
+    half_f, half_d = f // 2, d // 2
+    scale = float(Dh) ** -0.5
+    out = {}
+
+    def stage1(w_gate_shard, w_up_shard, x):
+        return (M.mlp_stage1_shard(cfg, w_gate_shard, w_up_shard, x),)
+
+    out["mlp_stage1_shard"] = to_hlo_text(
+        jax.jit(stage1).lower(f32(d, half_f), f32(d, half_f), f32(w, d))
+    )
+
+    def stage2(w_down_shard, h_full):
+        return (M.mlp_stage2_shard(cfg, w_down_shard, h_full),)
+
+    out["mlp_stage2_shard"] = to_hlo_text(
+        jax.jit(stage2).lower(f32(f, half_d), f32(w, f))
+    )
+
+    def dense_part(q, kc, vc, cache_len):
+        return M.attn_dense_part(q, kc, vc, cache_len, scale)
+
+    out["attn_dense_part"] = to_hlo_text(
+        jax.jit(dense_part).lower(f32(H, w, Dh), f32(C, H, Dh), f32(C, H, Dh), i32())
+    )
+
+    def sparse_part(q, kn, vn, mask):
+        return M.attn_sparse_part(q, kn, vn, mask, scale)
+
+    out["attn_sparse_part"] = to_hlo_text(
+        jax.jit(sparse_part).lower(f32(H, w, Dh), f32(H, w, Dh), f32(H, w, Dh), f32(w, w))
+    )
+    return out
+
+
+def build(out_dir: str, cfg: M.ModelConfig, seed: int = 0) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    names = M.param_names(cfg)
+    params = M.init_params(cfg, seed=seed)
+
+    # --- weights.npz (xla crate reads npz straight into PJRT buffers) ------
+    np.savez(
+        os.path.join(out_dir, "weights.npz"),
+        **{n: np.asarray(p) for n, p in zip(names, params)},
+    )
+
+    manifest: dict = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+            "n_medusa": cfg.n_medusa,
+            "max_ctx": cfg.max_ctx,
+            "rope_base": cfg.rope_base,
+            "seed": seed,
+        },
+        "params": names,
+        "decode_widths": DECODE_WIDTHS,
+        "prefill_width": max(DECODE_WIDTHS),
+        "shard_demo_width": SHARD_DEMO_WIDTH,
+        "executables": {},
+    }
+
+    # --- decode steps (decode_w64 doubles as the chunked-prefill step) -----
+    for w in DECODE_WIDTHS:
+        name = f"decode_w{w}"
+        text = lower_decode(cfg, w)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["executables"][name] = {
+            "file": f"{name}.hlo.txt",
+            "width": w,
+            "inputs": ["params..."]
+            + [
+                f"tokens:i32[{w}]",
+                f"pos:i32[{w}]",
+                f"mask:f32[{w},{w}]",
+                f"k_cache:f32[{cfg.n_layers},{cfg.max_ctx},{cfg.n_heads},{cfg.head_dim}]",
+                f"v_cache:f32[{cfg.n_layers},{cfg.max_ctx},{cfg.n_heads},{cfg.head_dim}]",
+                "cache_len:i32[]",
+            ],
+            "outputs": [
+                f"logits:f32[{w},{cfg.vocab}]",
+                f"medusa:f32[{cfg.n_medusa},{w},{cfg.vocab}]",
+                f"k_new:f32[{cfg.n_layers},{w},{cfg.n_heads},{cfg.head_dim}]",
+                f"v_new:f32[{cfg.n_layers},{w},{cfg.n_heads},{cfg.head_dim}]",
+            ],
+        }
+        print(f"lowered {name}: {len(text)} chars")
+
+    # --- HCMP shard demos ---------------------------------------------------
+    for name, text in lower_shard_demos(cfg, SHARD_DEMO_WIDTH).items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        manifest["executables"][name] = {"file": f"{name}.hlo.txt", "width": SHARD_DEMO_WIDTH}
+        print(f"lowered {name}: {len(text)} chars")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    print(f"wrote {out_dir}/manifest.json and weights.npz "
+          f"({sum(int(np.asarray(p).size) for p in params)} params)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build(args.out, M.ModelConfig(), seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

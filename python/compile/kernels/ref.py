@@ -1,0 +1,63 @@
+"""Pure-jnp oracle for the Pallas tree-attention kernel and the split
+(dense + sparse, online-softmax merged) attention.
+
+pytest compares the kernel (and the L2 split attention) against these
+references — this is the CORE correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def tree_attention_ref(q, k, v, mask, scale=None):
+    """Dense masked-softmax attention, plus partials, over the draft span.
+
+    q, k, v: [H, W, Dh]; mask: [W, W] additive. Returns (o, m, l).
+    """
+    h, w, dh = q.shape
+    if scale is None:
+        scale = float(dh) ** -0.5
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale + mask[None, :, :]
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", p, v) / l[..., None]
+    return o, m, l
+
+
+def full_attention_ref(q, k_cache, v_cache, cache_len, k_new, v_new, mask, scale=None):
+    """Oracle for the *whole* attention of a decode step: queries attend to
+    `cache_len` committed tokens (dense span) plus the W drafted tokens under
+    the tree mask (sparse span), in one softmax.
+
+    q: [H, W, Dh]; k_cache/v_cache: [C, H, Dh]; k_new/v_new: [H, W, Dh]
+    (pre-transposed like q); mask: [W, W] additive. Returns o: [H, W, Dh].
+    """
+    h, w, dh = q.shape
+    c = k_cache.shape[0]
+    if scale is None:
+        scale = float(dh) ** -0.5
+    kc = jnp.transpose(k_cache, (1, 0, 2))  # [H, C, Dh]
+    vc = jnp.transpose(v_cache, (1, 0, 2))
+    s_dense = jnp.einsum("hqd,hkd->hqk", q, kc) * scale  # [H, W, C]
+    col = jnp.arange(c)[None, None, :]
+    s_dense = jnp.where(col < cache_len, s_dense, NEG_INF)
+    s_tree = jnp.einsum("hqd,hkd->hqk", q, k_new) * scale + mask[None, :, :]
+    s = jnp.concatenate([s_dense, s_tree], axis=-1)  # [H, W, C+W]
+    s = s - jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    v_all = jnp.concatenate([vc, v_new], axis=1)  # [H, C+W, Dh]
+    return jnp.einsum("hqk,hkd->hqd", p, v_all)
+
+
+def merge_partials_ref(o1, m1, l1, o2, m2, l2):
+    """Reference online-softmax merge (same math as the kernel module's)."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m) * l1
+    a2 = jnp.exp(m2 - m) * l2
+    o = (o1 * a1[..., None] + o2 * a2[..., None]) / (a1 + a2)[..., None]
+    return o

@@ -1,0 +1,111 @@
+"""Layer-1 Pallas kernel: tree-masked attention over the drafted block.
+
+This is the paper's *sparse* attention component (Ghidorah §III-B.2): in
+speculative decoding only a subset of (query, key) token pairs — those on the
+same verification-tree path — need their correlation computed. The kernel
+returns *online-softmax partials* (o, m, l) so the coordinator (or the L2
+graph) can merge them with the *dense* component (queries vs. the committed
+KV cache) exactly as HCMP does across processing units, with a single scaling
+at the end (§III-B, "online softmax technique").
+
+Hardware adaptation (DESIGN.md §3): the CUDA formulation in the paper
+schedules warps over COO entries; on the TPU/XLA model we instead make the
+verification width W the tile minor dimension, keep the additive tree-mask
+tile resident in VMEM, and iterate heads on the Pallas grid. The HBM↔VMEM
+schedule the paper expresses with threadblocks is expressed here with
+BlockSpec index maps.
+
+interpret=True is mandatory on this image: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute. Correctness is pinned by
+``ref.py`` + pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Additive mask value for disallowed pairs. Large-but-finite so that a fully
+# masked row still produces finite partials (they get weight ~0 in the merge).
+NEG_INF = -1e9
+
+
+def _tree_attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, *, scale: float):
+    """One head per grid step. Block shapes: q/k/v [1, W, Dh], mask [W, W]."""
+    q = q_ref[0, :, :]  # [W, Dh]
+    k = k_ref[0, :, :]  # [W, Dh]
+    v = v_ref[0, :, :]  # [W, Dh]
+    mask = mask_ref[...]  # [W, W] additive (0 = allowed, NEG_INF = masked)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale + mask  # [W, W]
+    m = jnp.max(s, axis=1)  # [W]
+    p = jnp.exp(s - m[:, None])  # [W, W]
+    l = jnp.sum(p, axis=1)  # [W]
+    o = jnp.dot(p, v, preferred_element_type=jnp.float32) / l[:, None]  # [W, Dh]
+
+    o_ref[0, :, :] = o
+    m_ref[0, :] = m
+    l_ref[0, :] = l
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def tree_attention(q, k, v, mask, *, scale: float | None = None, interpret: bool = True):
+    """Tree-masked attention partials over the drafted block.
+
+    Args:
+      q, k, v: ``[H, W, Dh]`` — per-head query/key/value of the W drafted
+        tokens (keys/values are the *newly generated* ones, not the cache).
+      mask: ``[W, W]`` additive tree mask; ``mask[i, j] = 0`` iff token j is
+        an ancestor-or-self of token i in the verification tree.
+      scale: attention scale; defaults to ``Dh ** -0.5``.
+
+    Returns:
+      ``(o, m, l)`` with ``o: [H, W, Dh]`` (softmax-normalized within this
+      span), ``m: [H, W]`` row maxima, ``l: [H, W]`` row partition sums —
+      the online-softmax partials to merge with the dense-span partials.
+    """
+    h, w, dh = q.shape
+    if scale is None:
+        scale = float(dh) ** -0.5
+    kernel = functools.partial(_tree_attn_kernel, scale=scale)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1, w, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((w, w), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, w, dh), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+            pl.BlockSpec((1, w), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, w, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+    return o, m, l
+
+
+def merge_partials(o1, m1, l1, o2, m2, l2):
+    """Merge two online-softmax partial attention results (FlashAttention /
+    RingAttention combine). Shapes: o [..., W, Dh], m/l [..., W].
+
+    This is the "scaling factor applied at the end of the attention module"
+    of Ghidorah §III-B.2 — it is what lets the dense span (GPU) and the
+    sparse span (CPU) each run their own softmax.
+    """
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m) * l1
+    a2 = jnp.exp(m2 - m) * l2
+    denom = a1 + a2
+    o = (o1 * a1[..., None] + o2 * a2[..., None]) / denom[..., None]
+    return o, m, denom

@@ -1,0 +1,294 @@
+"""Layer-2: the JAX model — a LLaMA-style transformer with Medusa drafting
+heads, written so that one jitted function is the *entire* decode step
+(speculative, width W) and lowers to a single HLO module.
+
+The attention of every layer is computed exactly the way Ghidorah's HCMP
+architecture partitions it (paper §III-B.2):
+
+  * a *dense span*: queries vs. the committed KV cache (what the GPU gets),
+  * a *sparse span*: queries vs. the newly drafted K/V under the tree mask —
+    the Layer-1 Pallas kernel (what the CPU gets),
+  * an online-softmax merge of the two partials (the "scaling at the end").
+
+The same function serves as (chunked) prefill: call width-64 with a causal
+mask and cache_len = number of already-committed tokens.
+
+This module is build-time only: `aot.py` lowers it to HLO text artifacts that
+the Rust runtime loads; Python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.tree_attention import tree_attention, merge_partials, NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-but-real model served end-to-end by the Rust coordinator.
+
+    The simulator experiments (Fig 9 / 10) additionally use a Vicuna-7B-shaped
+    *cost* config on the Rust side; this config is the one that actually runs.
+    """
+
+    vocab: int = 512  # byte-level: 256 bytes + specials
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    head_dim: int = 32
+    ffn: int = 512
+    n_medusa: int = 4  # drafting heads (Medusa-style)
+    max_ctx: int = 256  # committed-KV capacity C
+    rope_base: float = 10000.0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+# ----------------------------------------------------------------------------
+# Parameters. A *flat ordered list* (not a dict) so the HLO parameter order is
+# explicit and recorded in the manifest for the Rust runtime.
+# ----------------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    names = ["tok_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}_attn_norm",
+            f"l{i}_wq",
+            f"l{i}_wk",
+            f"l{i}_wv",
+            f"l{i}_wo",
+            f"l{i}_mlp_norm",
+            f"l{i}_w_gate",
+            f"l{i}_w_up",
+            f"l{i}_w_down",
+        ]
+    names += ["final_norm", "w_lm"]
+    names += [f"medusa{h}_w" for h in range(cfg.n_medusa)]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, f, v = cfg.d_model, cfg.ffn, cfg.vocab
+    shapes: dict[str, tuple[int, ...]] = {"tok_emb": (v, d)}
+    for i in range(cfg.n_layers):
+        shapes[f"l{i}_attn_norm"] = (d,)
+        shapes[f"l{i}_wq"] = (d, cfg.qkv_dim)
+        shapes[f"l{i}_wk"] = (d, cfg.qkv_dim)
+        shapes[f"l{i}_wv"] = (d, cfg.qkv_dim)
+        shapes[f"l{i}_wo"] = (cfg.qkv_dim, d)
+        shapes[f"l{i}_mlp_norm"] = (d,)
+        shapes[f"l{i}_w_gate"] = (d, f)
+        shapes[f"l{i}_w_up"] = (d, f)
+        shapes[f"l{i}_w_down"] = (f, d)
+    shapes["final_norm"] = (d,)
+    shapes["w_lm"] = (d, v)
+    for h in range(cfg.n_medusa):
+        shapes[f"medusa{h}_w"] = (d, d)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> list[jnp.ndarray]:
+    """Deterministic init. Norm weights are ones; matrices N(0, 0.02)."""
+    key = jax.random.PRNGKey(seed)
+    shapes = param_shapes(cfg)
+    params = []
+    for name in param_names(cfg):
+        shape = shapes[name]
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> list[jax.ShapeDtypeStruct]:
+    shapes = param_shapes(cfg)
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in param_names(cfg)]
+
+
+class _P:
+    """Name-indexed view over the flat parameter list."""
+
+    def __init__(self, cfg: ModelConfig, params):
+        self._idx = {n: i for i, n in enumerate(param_names(cfg))}
+        self._params = params
+
+    def __getitem__(self, name: str):
+        return self._params[self._idx[name]]
+
+
+# ----------------------------------------------------------------------------
+# Building blocks
+# ----------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, base: float):
+    """Rotary embedding. x: [W, H, Dh]; pos: [W] int32 absolute positions."""
+    w, h, dh = x.shape
+    half = dh // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)  # [half]
+    angles = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # [W, half]
+    cos = jnp.cos(angles)[:, None, :]  # [W, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def dense_span_partials(q, k_cache, v_cache, cache_len, scale):
+    """Online-softmax partials of queries vs. the committed KV cache.
+
+    This is HCMP's *dense* component (GPU-affine). q: [H, W, Dh];
+    k_cache/v_cache: [C, H, Dh]. Returns (o, m, l): [H,W,Dh], [H,W], [H,W].
+    """
+    c = k_cache.shape[0]
+    kc = jnp.transpose(k_cache, (1, 0, 2))  # [H, C, Dh]
+    vc = jnp.transpose(v_cache, (1, 0, 2))
+    s = jnp.einsum("hqd,hkd->hqk", q, kc) * scale  # [H, W, C]
+    col = jnp.arange(c)[None, None, :]
+    s = jnp.where(col < cache_len, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    # Guard l == 0 (cache_len == 0 during the first prefill chunk): emit
+    # l = 0 partials with finite o; the merge weights them to zero.
+    safe_l = jnp.maximum(l, 1e-30)
+    o = jnp.einsum("hqk,hkd->hqd", p, vc) / safe_l[..., None]
+    return o, m, l
+
+
+def split_attention(q, k_cache, v_cache, cache_len, k_new, v_new, mask, scale, *, interpret=True):
+    """The full HCMP attention: dense span ⊕ (Pallas) sparse span, merged via
+    online softmax. Shapes as in ref.full_attention_ref. Returns [H, W, Dh]."""
+    o1, m1, l1 = dense_span_partials(q, k_cache, v_cache, cache_len, scale)
+    o2, m2, l2 = tree_attention(q, k_new, v_new, mask, scale=scale, interpret=interpret)
+    o, _, _ = merge_partials(o1, m1, l1, o2, m2, l2)
+    return o
+
+
+# ----------------------------------------------------------------------------
+# The decode step (also chunked prefill)
+# ----------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params, tokens, pos, mask, k_cache, v_cache, cache_len, *, interpret=True):
+    """One speculative decode step of width W (== tokens.shape[0]).
+
+    Args:
+      params: flat list, order = param_names(cfg).
+      tokens: int32 [W] drafted token ids (tokens[0] is the committed token
+        whose successors are being verified; for prefill, a prompt chunk).
+      pos: int32 [W] absolute positions (cache_len + node depth).
+      mask: f32 [W, W] additive tree mask (0 allowed / NEG_INF disallowed);
+        causal for prefill chunks.
+      k_cache, v_cache: f32 [L, C, H, Dh] committed (already-roped) cache.
+      cache_len: int32 scalar — number of valid cache positions.
+
+    Returns:
+      logits:        f32 [W, vocab]
+      medusa_logits: f32 [M, W, vocab]
+      k_new, v_new:  f32 [L, W, H, Dh] (roped) — the coordinator commits the
+                     accepted prefix into its cache and discards the rest.
+    """
+    p = _P(cfg, params)
+    scale = float(cfg.head_dim) ** -0.5
+    w = tokens.shape[0]
+
+    x = p["tok_emb"][tokens]  # [W, d]
+    k_news, v_news = [], []
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{i}_attn_norm"])
+        q = (h @ p[f"l{i}_wq"]).reshape(w, cfg.n_heads, cfg.head_dim)
+        k = (h @ p[f"l{i}_wk"]).reshape(w, cfg.n_heads, cfg.head_dim)
+        v = (h @ p[f"l{i}_wv"]).reshape(w, cfg.n_heads, cfg.head_dim)
+        q = rope(q, pos, cfg.rope_base)
+        k = rope(k, pos, cfg.rope_base)  # cache stores roped keys
+        k_news.append(k)
+        v_news.append(v)
+
+        qh = jnp.transpose(q, (1, 0, 2))  # [H, W, Dh]
+        kh = jnp.transpose(k, (1, 0, 2))
+        vh = jnp.transpose(v, (1, 0, 2))
+        o = split_attention(
+            qh, k_cache[i], v_cache[i], cache_len, kh, vh, mask, scale, interpret=interpret
+        )  # [H, W, Dh]
+        o = jnp.transpose(o, (1, 0, 2)).reshape(w, cfg.qkv_dim)
+        x = x + o @ p[f"l{i}_wo"]
+
+        h2 = rmsnorm(x, p[f"l{i}_mlp_norm"])
+        gated = jax.nn.silu(h2 @ p[f"l{i}_w_gate"]) * (h2 @ p[f"l{i}_w_up"])
+        x = x + gated @ p[f"l{i}_w_down"]
+
+    xf = rmsnorm(x, p["final_norm"])
+    logits = xf @ p["w_lm"]  # [W, V]
+    medusa = []
+    for hh in range(cfg.n_medusa):
+        res = xf + jax.nn.silu(xf @ p[f"medusa{hh}_w"])  # Medusa resblock
+        medusa.append(res @ p["w_lm"])
+    medusa_logits = jnp.stack(medusa, axis=0)  # [M, W, V]
+
+    k_new = jnp.stack(k_news, axis=0)  # [L, W, H, Dh]
+    v_new = jnp.stack(v_news, axis=0)
+    return logits, medusa_logits, k_new, v_new
+
+
+# ----------------------------------------------------------------------------
+# Column-sharded MLP stages + attention-span executables: the HCMP
+# demonstration artifacts (see DESIGN.md §4 — these prove the zero-copy
+# column-split and the dense/sparse head split compose through the real AOT
+# path; the Rust side chains them and checks parity with the monolithic step).
+# ----------------------------------------------------------------------------
+
+
+def mlp_stage1_shard(cfg: ModelConfig, w_gate_shard, w_up_shard, x):
+    """First-linear column shard: full input x [W, d] → activation slice
+    [W, f_shard]. Each unit writes its own slice (no consistency needed)."""
+    return jax.nn.silu(x @ w_gate_shard) * (x @ w_up_shard)
+
+
+def mlp_stage2_shard(cfg: ModelConfig, w_down_shard, h_full):
+    """Second-linear *column* shard (HCMP splits ALL linears by columns):
+    reads the FULL activation (both units' slices via unified memory) and
+    produces its own output-column slice [W, d_shard]."""
+    return h_full @ w_down_shard
+
+
+def attn_dense_part(q, k_cache, v_cache, cache_len, scale):
+    """Standalone dense-span executable (GPU-affine shard)."""
+    return dense_span_partials(q, k_cache, v_cache, cache_len, scale)
+
+
+def attn_sparse_part(q, k_new, v_new, mask, scale, *, interpret=True):
+    """Standalone sparse-span executable (CPU-affine shard; Pallas kernel)."""
+    return tree_attention(q, k_new, v_new, mask, scale=scale, interpret=interpret)
+
+
+# ----------------------------------------------------------------------------
+# Convenience: a jitted single-width step for tests
+# ----------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def decode_step_jit(cfg: ModelConfig, params, tokens, pos, mask, k_cache, v_cache, cache_len):
+    return decode_step(cfg, params, tokens, pos, mask, k_cache, v_cache, cache_len)
+
+
+def causal_mask(w: int) -> jnp.ndarray:
+    """Additive causal mask for prefill chunks."""
+    i = jnp.arange(w)[:, None]
+    j = jnp.arange(w)[None, :]
+    return jnp.where(j <= i, 0.0, NEG_INF).astype(jnp.float32)

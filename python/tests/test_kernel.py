@@ -1,0 +1,170 @@
+"""L1 correctness: the Pallas tree-attention kernel vs. the pure-jnp oracle.
+
+Includes a hypothesis sweep over shapes and mask densities — the kernel must
+match the reference for every (H, W, Dh) and every tree-mask pattern.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    full_attention_ref,
+    merge_partials_ref,
+    tree_attention_ref,
+)
+from compile.kernels.tree_attention import NEG_INF, merge_partials, tree_attention
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_qkv(key, h, w, dh):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (h, w, dh), jnp.float32)
+    k = jax.random.normal(k2, (h, w, dh), jnp.float32)
+    v = jax.random.normal(k3, (h, w, dh), jnp.float32)
+    return q, k, v
+
+
+def tree_mask_from_parents(parents):
+    """Additive mask where each node attends to its ancestors and itself."""
+    w = len(parents)
+    mask = np.full((w, w), NEG_INF, np.float32)
+    for i in range(w):
+        j = i
+        while j >= 0:
+            mask[i, j] = 0.0
+            j = parents[j]
+    return jnp.asarray(mask)
+
+
+def chain_parents(w):
+    return [i - 1 for i in range(w)]
+
+
+class TestTreeAttentionKernel:
+    @pytest.mark.parametrize("h,w,dh", [(1, 1, 4), (2, 4, 8), (8, 16, 32), (4, 64, 32), (8, 64, 128)])
+    def test_matches_ref_causal(self, h, w, dh):
+        q, k, v = rand_qkv(jax.random.PRNGKey(0), h, w, dh)
+        mask = tree_mask_from_parents(chain_parents(w))
+        o, m, l = tree_attention(q, k, v, mask)
+        o_r, m_r, l_r = tree_attention_ref(q, k, v, mask)
+        np.testing.assert_allclose(o, o_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(m, m_r, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(l, l_r, rtol=1e-5, atol=1e-5)
+
+    def test_matches_ref_branchy_tree(self):
+        # Medusa-like tree: root with several children, some grandchildren.
+        parents = [-1, 0, 0, 0, 1, 1, 2, 4]
+        q, k, v = rand_qkv(jax.random.PRNGKey(1), 4, len(parents), 16)
+        mask = tree_mask_from_parents(parents)
+        o, _, _ = tree_attention(q, k, v, mask)
+        o_r, _, _ = tree_attention_ref(q, k, v, mask)
+        np.testing.assert_allclose(o, o_r, rtol=1e-5, atol=1e-5)
+
+    def test_self_only_mask(self):
+        # Diagonal-only mask → each token attends to itself → o == v.
+        w = 8
+        q, k, v = rand_qkv(jax.random.PRNGKey(2), 2, w, 8)
+        mask = jnp.where(jnp.eye(w, dtype=bool), 0.0, NEG_INF).astype(jnp.float32)
+        o, _, l = tree_attention(q, k, v, mask)
+        np.testing.assert_allclose(o, v, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(l, jnp.ones_like(l), rtol=1e-5, atol=1e-5)
+
+    def test_scale_respected(self):
+        q, k, v = rand_qkv(jax.random.PRNGKey(3), 2, 8, 8)
+        mask = tree_mask_from_parents(chain_parents(8))
+        o1, _, _ = tree_attention(q, k, v, mask, scale=0.5)
+        o_r, _, _ = tree_attention_ref(q, k, v, mask, scale=0.5)
+        np.testing.assert_allclose(o1, o_r, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        h=st.integers(1, 4),
+        w=st.integers(1, 24),
+        dh=st.sampled_from([4, 8, 16, 32]),
+        seed=st.integers(0, 2**31 - 1),
+        data=st.data(),
+    )
+    def test_hypothesis_sweep(self, h, w, dh, seed, data):
+        """Random tree shapes: kernel == oracle for any parent structure."""
+        parents = [-1] + [data.draw(st.integers(0, i - 1)) for i in range(1, w)]
+        q, k, v = rand_qkv(jax.random.PRNGKey(seed), h, w, dh)
+        mask = tree_mask_from_parents(parents)
+        o, m, l = tree_attention(q, k, v, mask)
+        o_r, m_r, l_r = tree_attention_ref(q, k, v, mask)
+        np.testing.assert_allclose(o, o_r, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(m, m_r, rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(l, l_r, rtol=2e-5, atol=2e-5)
+
+
+class TestOnlineSoftmaxMerge:
+    def test_merge_equals_joint_softmax(self):
+        """Splitting a key span in two and merging partials must equal one
+        softmax over the whole span — the HCMP correctness invariant."""
+        h, w, dh, span = 4, 8, 16, 24
+        key = jax.random.PRNGKey(4)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = jax.random.normal(k1, (h, w, dh), jnp.float32)
+        kk = jax.random.normal(k2, (h, span, dh), jnp.float32)
+        vv = jax.random.normal(k3, (h, span, dh), jnp.float32)
+        scale = dh**-0.5
+
+        def partials(ks, vs):
+            s = jnp.einsum("hqd,hkd->hqk", q, ks) * scale
+            m = jnp.max(s, axis=-1)
+            p = jnp.exp(s - m[..., None])
+            l = jnp.sum(p, axis=-1)
+            o = jnp.einsum("hqk,hkd->hqd", p, vs) / l[..., None]
+            return o, m, l
+
+        cut = 10
+        o1, m1, l1 = partials(kk[:, :cut], vv[:, :cut])
+        o2, m2, l2 = partials(kk[:, cut:], vv[:, cut:])
+        o_merged, _, _ = merge_partials(o1, m1, l1, o2, m2, l2)
+        o_joint, _, _ = partials(kk, vv)
+        np.testing.assert_allclose(o_merged, o_joint, rtol=1e-5, atol=1e-5)
+        # and the module-level ref agrees
+        np.testing.assert_allclose(
+            merge_partials_ref(o1, m1, l1, o2, m2, l2), o_joint, rtol=1e-5, atol=1e-5
+        )
+
+    def test_merge_with_empty_dense_span(self):
+        """cache_len == 0 (first prefill chunk): dense partials carry l=0 and
+        must contribute nothing (no NaNs)."""
+        h, w, dh = 2, 4, 8
+        key = jax.random.PRNGKey(5)
+        q, k, v = rand_qkv(key, h, w, dh)
+        mask = tree_mask_from_parents(chain_parents(w))
+        o2, m2, l2 = tree_attention(q, k, v, mask)
+        o1 = jnp.zeros_like(o2)
+        m1 = jnp.full_like(m2, NEG_INF)
+        l1 = jnp.zeros_like(l2)
+        o, _, _ = merge_partials(o1, m1, l1, o2, m2, l2)
+        assert bool(jnp.all(jnp.isfinite(o)))
+        np.testing.assert_allclose(o, o2, rtol=1e-5, atol=1e-5)
+
+
+class TestSplitAttentionEndToEnd:
+    @pytest.mark.parametrize("cache_len", [0, 1, 17, 64])
+    def test_dense_plus_sparse_equals_full(self, cache_len):
+        """split_attention (dense span ⊕ Pallas sparse span) == one softmax
+        over [cache ++ draft] — the whole point of the HCMP attention split."""
+        from compile.model import split_attention
+
+        h, w, dh, c = 4, 8, 16, 64
+        key = jax.random.PRNGKey(6)
+        ks = jax.random.split(key, 5)
+        q = jax.random.normal(ks[0], (h, w, dh), jnp.float32)
+        kc = jax.random.normal(ks[1], (c, h, dh), jnp.float32)
+        vc = jax.random.normal(ks[2], (c, h, dh), jnp.float32)
+        kn = jax.random.normal(ks[3], (h, w, dh), jnp.float32)
+        vn = jax.random.normal(ks[4], (h, w, dh), jnp.float32)
+        parents = [-1, 0, 0, 1, 1, 2, 3, 3]
+        mask = tree_mask_from_parents(parents)
+        scale = dh**-0.5
+        o = split_attention(q, kc, vc, cache_len, kn, vn, mask, scale)
+        o_ref = full_attention_ref(q, kc, vc, cache_len, kn, vn, mask, scale)
+        np.testing.assert_allclose(o, o_ref, rtol=1e-5, atol=1e-5)

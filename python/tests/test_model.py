@@ -1,0 +1,207 @@
+"""L2 correctness: decode-step semantics the Rust coordinator relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels.tree_attention import NEG_INF
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.ModelConfig(
+    vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16, ffn=48, n_medusa=2, max_ctx=32
+)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+def empty_cache(cfg):
+    shape = (cfg.n_layers, cfg.max_ctx, cfg.n_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def run_step(cfg, params, tokens, pos, mask, kc, vc, cache_len):
+    return M.decode_step(
+        cfg, params, jnp.asarray(tokens, jnp.int32), jnp.asarray(pos, jnp.int32),
+        mask, kc, vc, jnp.asarray(cache_len, jnp.int32)
+    )
+
+
+def commit(kc, vc, k_new, v_new, at, n):
+    """Commit the first n draft positions into the cache at offset `at`."""
+    kc = kc.at[:, at : at + n].set(k_new[:, :n])
+    vc = vc.at[:, at : at + n].set(v_new[:, :n])
+    return kc, vc
+
+
+class TestShapes:
+    def test_output_shapes(self, params):
+        w = 4
+        kc, vc = empty_cache(CFG)
+        logits, medusa, k_new, v_new = run_step(
+            CFG, params, [1, 2, 3, 4], [0, 1, 2, 3], M.causal_mask(w), kc, vc, 0
+        )
+        assert logits.shape == (w, CFG.vocab)
+        assert medusa.shape == (CFG.n_medusa, w, CFG.vocab)
+        assert k_new.shape == (CFG.n_layers, w, CFG.n_heads, CFG.head_dim)
+        assert v_new.shape == (CFG.n_layers, w, CFG.n_heads, CFG.head_dim)
+        for t in (logits, medusa, k_new, v_new):
+            assert bool(jnp.all(jnp.isfinite(t)))
+
+    def test_param_list_matches_manifest_order(self):
+        names = M.param_names(CFG)
+        shapes = M.param_shapes(CFG)
+        params = M.init_params(CFG)
+        assert len(names) == len(params)
+        for n, p in zip(names, params):
+            assert tuple(p.shape) == shapes[n], n
+
+
+class TestKVCacheConsistency:
+    def test_chunked_prefill_equals_monolithic(self, params):
+        """Prefilling [a ++ b] in two chunks (committing KV between) must give
+        the same final logits as prefilling the concatenation at once."""
+        toks = list(range(1, 13))
+        kc, vc = empty_cache(CFG)
+
+        # monolithic
+        w = len(toks)
+        logits_all, _, _, _ = run_step(CFG, params, toks, list(range(w)), M.causal_mask(w), kc, vc, 0)
+
+        # chunked: 7 then 5
+        kc, vc = empty_cache(CFG)
+        _, _, k1, v1 = run_step(CFG, params, toks[:7], list(range(7)), M.causal_mask(7), kc, vc, 0)
+        kc, vc = commit(kc, vc, k1, v1, 0, 7)
+        logits2, _, _, _ = run_step(
+            CFG, params, toks[7:], list(range(7, 12)), M.causal_mask(5), kc, vc, 7
+        )
+        np.testing.assert_allclose(logits2[-1], logits_all[-1], rtol=2e-4, atol=2e-4)
+
+    def test_sequential_decode_matches_wide_prefill(self, params):
+        """Decoding tokens one at a time (w=1) after a prefill reproduces the
+        teacher-forced logits of a single wide pass."""
+        toks = [3, 14, 15, 9, 2, 6]
+        w = len(toks)
+        kc, vc = empty_cache(CFG)
+        logits_all, _, _, _ = run_step(CFG, params, toks, list(range(w)), M.causal_mask(w), kc, vc, 0)
+
+        kc, vc = empty_cache(CFG)
+        mask1 = jnp.zeros((1, 1), jnp.float32)
+        for i, t in enumerate(toks):
+            logits_i, _, k1, v1 = run_step(CFG, params, [t], [i], mask1, kc, vc, i)
+            kc, vc = commit(kc, vc, k1, v1, i, 1)
+            np.testing.assert_allclose(logits_i[0], logits_all[i], rtol=2e-4, atol=2e-4)
+
+    def test_tree_step_matches_path_decode(self, params):
+        """Verifying a tree whose path p is later committed must produce, at
+        each node of p, the same logits as sequentially decoding p — THE
+        speculative-decoding correctness invariant."""
+        prompt = [5, 9, 11]
+        kc, vc = empty_cache(CFG)
+        _, _, kp, vp = run_step(
+            CFG, params, prompt, [0, 1, 2], M.causal_mask(3), kc, vc, 0
+        )
+        kc, vc = commit(kc, vc, kp, vp, 0, 3)
+
+        # tree: node0 (committed last token's candidate) -> node1 -> node3;
+        # node2 is a sibling branch of node1, node4 sibling of node3.
+        parents = [-1, 0, 0, 1, 1]
+        draft = [7, 21, 22, 33, 34]
+        depth = [0, 1, 1, 2, 2]
+        w = len(parents)
+        mask = np.full((w, w), NEG_INF, np.float32)
+        for i in range(w):
+            j = i
+            while j >= 0:
+                mask[i, j] = 0.0
+                j = parents[j]
+        pos = [3 + d for d in depth]
+        logits_tree, _, _, _ = run_step(
+            CFG, params, draft, pos, jnp.asarray(mask), kc, vc, 3
+        )
+
+        # sequential decode of the path [7, 21, 33]
+        path_nodes = [0, 1, 3]
+        kc2, vc2 = kc, vc
+        mask1 = jnp.zeros((1, 1), jnp.float32)
+        for step, node in enumerate(path_nodes):
+            t = draft[node]
+            logits_s, _, k1, v1 = run_step(CFG, params, [t], [3 + step], mask1, kc2, vc2, 3 + step)
+            kc2, vc2 = commit(kc2, vc2, k1, v1, 3 + step, 1)
+            np.testing.assert_allclose(
+                logits_tree[node], logits_s[0], rtol=2e-4, atol=2e-4,
+                err_msg=f"node {node}",
+            )
+
+
+class TestShardDemos:
+    def test_mlp_column_shards_compose(self, params):
+        """stage1 shards produce disjoint activation slices; stage2 column
+        shards read the full activation — concatenation == monolithic MLP."""
+        cfg = CFG
+        d, f = cfg.d_model, cfg.ffn
+        p = M._P(cfg, params)
+        x = jax.random.normal(jax.random.PRNGKey(7), (4, d), jnp.float32)
+        wg, wu, wd = p["l0_w_gate"], p["l0_w_up"], p["l0_w_down"]
+
+        h_a = M.mlp_stage1_shard(cfg, wg[:, : f // 2], wu[:, : f // 2], x)
+        h_b = M.mlp_stage1_shard(cfg, wg[:, f // 2 :], wu[:, f // 2 :], x)
+        h_full = jnp.concatenate([h_a, h_b], axis=1)
+        o_a = M.mlp_stage2_shard(cfg, wd[:, : d // 2], h_full)
+        o_b = M.mlp_stage2_shard(cfg, wd[:, d // 2 :], h_full)
+        o = jnp.concatenate([o_a, o_b], axis=1)
+
+        o_ref = (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+        np.testing.assert_allclose(o, o_ref, rtol=1e-5, atol=1e-5)
+
+    def test_attention_affinity_shards_compose(self, params):
+        """attn_dense_part ⊕ attn_sparse_part merged == full attention —
+        the artifact pair the Rust runtime chains across 'units'."""
+        from compile.kernels.ref import full_attention_ref
+        from compile.kernels.tree_attention import merge_partials
+
+        cfg = CFG
+        h, dh, c, w = cfg.n_heads, cfg.head_dim, cfg.max_ctx, 4
+        ks = jax.random.split(jax.random.PRNGKey(8), 5)
+        q = jax.random.normal(ks[0], (h, w, dh), jnp.float32)
+        kc = jax.random.normal(ks[1], (c, h, dh), jnp.float32)
+        vc = jax.random.normal(ks[2], (c, h, dh), jnp.float32)
+        kn = jax.random.normal(ks[3], (h, w, dh), jnp.float32)
+        vn = jax.random.normal(ks[4], (h, w, dh), jnp.float32)
+        mask = jnp.asarray(
+            np.where(np.tri(w) > 0, 0.0, NEG_INF).astype(np.float32)
+        )
+        scale = dh**-0.5
+        o1, m1, l1 = M.attn_dense_part(q, kc, vc, 10, scale)
+        o2, m2, l2 = M.attn_sparse_part(q, kn, vn, mask, scale)
+        o, _, _ = merge_partials(o1, m1, l1, o2, m2, l2)
+        o_ref = full_attention_ref(q, kc, vc, 10, kn, vn, mask, scale)
+        np.testing.assert_allclose(o, o_ref, rtol=1e-5, atol=1e-5)
+
+
+class TestRope:
+    def test_rope_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(9), (6, 2, 16), jnp.float32)
+        pos = jnp.arange(6, dtype=jnp.int32) * 3
+        y = M.rope(x, pos, 10000.0)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.linalg.norm(x, axis=-1), rtol=1e-5, atol=1e-5
+        )
+
+    def test_rope_relative_property(self):
+        """<rope(q,p1), rope(k,p2)> depends only on p1 - p2."""
+        q = jax.random.normal(jax.random.PRNGKey(10), (1, 1, 16), jnp.float32)
+        k = jax.random.normal(jax.random.PRNGKey(11), (1, 1, 16), jnp.float32)
+
+        def dot_at(p1, p2):
+            qr = M.rope(q, jnp.asarray([p1], jnp.int32), 10000.0)
+            kr = M.rope(k, jnp.asarray([p2], jnp.int32), 10000.0)
+            return float(jnp.sum(qr * kr))
+
+        assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-4
+        assert abs(dot_at(7, 7) - dot_at(0, 0)) < 1e-4

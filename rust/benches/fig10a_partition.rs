@@ -1,0 +1,18 @@
+//! Bench: regenerate Fig 10a (attention-module time vs context length,
+//! static vs dynamic partitioning, width 64).
+//!
+//! Run: `cargo bench --bench fig10a_partition`
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let out = ghidorah::bench::fig10a();
+    println!("{}", out.text);
+    let (_, s_last, d_last) = out.rows.last().unwrap();
+    println!(
+        "at the longest context, dynamic partitioning is {:.2}x faster than static",
+        s_last / d_last
+    );
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,70 @@
+//! Bench: regenerate Fig 10b (sparse component: naive sparse vs optimized
+//! sparse vs masked dense) with REAL wall-clock on this host's kernels, at
+//! the paper's shapes (width 64, Vicuna-7B head dims).
+//!
+//! Run: `cargo bench --bench fig10b_spmm`
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let out = ghidorah::bench::fig10b(400);
+    println!("{}", out.text);
+    println!(
+        "optimized sparse: {:.2}x over naive (paper 3.49x), {:.2}x over dense (paper 1.90x)",
+        out.t_naive / out.t_opt,
+        out.t_dense / out.t_opt
+    );
+    println!(
+        "ordering check: naive ({:.1}us) > dense ({:.1}us) > optimized ({:.1}us) — {}",
+        out.t_naive * 1e6,
+        out.t_dense * 1e6,
+        out.t_opt * 1e6,
+        if out.t_naive > out.t_dense && out.t_dense > out.t_opt { "matches the paper" } else { "MISMATCH" }
+    );
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // sweep widths to show the crossover behaviour
+    println!("\nwidth sweep (per-head time, us):");
+    sweep();
+}
+
+fn sweep() {
+    use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
+    use ghidorah::arca::tree_builder::build_tree;
+    use ghidorah::sparse::{attention_dense_masked, attention_sparse_opt};
+    use ghidorah::tensor::Tensor;
+    use ghidorah::util::rng::Rng;
+
+    let fit = fit_profile(&PAPER_TABLE1[0]);
+    let (dh, reps) = (128usize, 300);
+    let mut rng = Rng::new(5);
+    println!("{:>6} {:>10} {:>12} {:>10} {:>9}", "width", "nnz", "sparse(us)", "dense(us)", "ratio");
+    for w in [8usize, 16, 32, 64] {
+        let tree = build_tree(&fit.profile.heads, w);
+        let pattern = tree.pattern();
+        let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let k = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let v = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let scale = (dh as f32).powf(-0.5);
+
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(attention_sparse_opt(&q, &k, &v, &pattern, scale));
+        }
+        let t_sparse = t0.elapsed().as_secs_f64() / reps as f64;
+        let t1 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(attention_dense_masked(&q, &k, &v, &pattern, scale));
+        }
+        let t_dense = t1.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "{:>6} {:>10} {:>12.2} {:>10.2} {:>8.2}x",
+            w,
+            pattern.nnz(),
+            t_sparse * 1e6,
+            t_dense * 1e6,
+            t_dense / t_sparse
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: regenerate Fig 9 (normalized decode throughput across engines,
+//! widths 4..64, four datasets) on the calibrated Jetson-NX simulator, and
+//! report the headline decomposition.
+//!
+//! Run: `cargo bench --bench fig9_throughput`
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let out = ghidorah::bench::fig9(256);
+    println!("{}", out.text);
+    println!(
+        "shape checks: headline {:.2}x (paper 7.6x), algorithmic {:.2}x (paper 3.27x), parallel {:.2}x (paper 2.31x)",
+        out.headline_speedup, out.algorithmic_factor, out.parallel_factor
+    );
+    println!("bench wall time: {:.2}s", t0.elapsed().as_secs_f64());
+
+    // simulator microbenchmark: schedules priced per second (ARCA sweeps
+    // depend on this being fast)
+    use ghidorah::hcmp::partition::PartitionPlan;
+    use ghidorah::hcmp::schedule::{build_step, EngineKind};
+    use ghidorah::hcmp::simulator::Simulator;
+    use ghidorah::model::ModelConfig;
+    use ghidorah::spec::tree::VerificationTree;
+    let sim = Simulator::jetson_nx();
+    let cfg = ModelConfig::vicuna_7b();
+    let tree = VerificationTree::chain(16);
+    let pat = tree.pattern();
+    let sched = build_step(&cfg, EngineKind::Ghidorah, 16, 256, Some(&pat), &PartitionPlan::hcmp(0.5));
+    let t1 = Instant::now();
+    let n = 20_000;
+    let mut sink = 0.0;
+    for _ in 0..n {
+        sink += sim.run(&sched).total;
+    }
+    std::hint::black_box(sink);
+    let dt = t1.elapsed().as_secs_f64();
+    println!("simulator: {:.0} step-schedules priced/s (7B, w=16)", n as f64 / dt);
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate Table I (acceptance length vs verification width, four
+//! datasets) and time the acceptance machinery.
+//!
+//! Run: `cargo bench --bench table1_acceptance` (harness = false; criterion
+//! is not vendorable offline, so the harness is ours).
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let out = ghidorah::bench::table1(200_000, false);
+    let elapsed = t0.elapsed();
+    println!("{}", out.text);
+
+    // deviation summary vs the paper
+    let mut worst: f64 = 0.0;
+    for (name, per_width) in &out.rows {
+        let target = ghidorah::arca::calibrate::PAPER_TABLE1
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap();
+        for ((_e, measured), want) in per_width.iter().zip(&target.acceptance) {
+            worst = worst.max((measured - want).abs() / want);
+        }
+    }
+    println!("max relative deviation from the paper's Table I: {:.2}%", worst * 100.0);
+    println!("bench wall time: {:.2}s (incl. calibration fits + 200k-step Monte Carlo x 24 cells)", elapsed.as_secs_f64());
+
+    // microbenchmark: acceptance sampling throughput (the inner loop of the
+    // ARCA brute-force search)
+    let fit = ghidorah::arca::calibrate::fit_profile(&ghidorah::arca::calibrate::PAPER_TABLE1[0]);
+    let tree = ghidorah::arca::tree_builder::build_tree(&fit.profile.heads, 64);
+    let t1 = Instant::now();
+    let n = 2_000_000usize;
+    let acc = fit.profile.measure_acceptance(&tree, n, 3);
+    let dt = t1.elapsed().as_secs_f64();
+    println!(
+        "acceptance sampling: {:.1}M draws/s (width-64 tree, mean {:.3})",
+        n as f64 / dt / 1e6,
+        acc
+    );
+}

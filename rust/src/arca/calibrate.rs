@@ -1,0 +1,207 @@
+//! Drafter-accuracy calibration: fit per-head/per-rank accuracy profiles so
+//! that ARCA's expected acceptance lengths reproduce the paper's Table I per
+//! dataset (the substitution for the real Vicuna-7B Medusa heads + datasets
+//! we cannot run here — DESIGN.md §2).
+//!
+//! Family: a_d(k) = c · ρ^d · r^k (head decay ρ, rank decay r), capped per
+//! head. Three parameters per dataset, fit by coarse-to-fine grid search
+//! minimizing squared error of E[L] (greedy tree per width) against the
+//! paper's row at widths {2,4,8,16,32,64}.
+
+use super::tree_builder::build_tree;
+use crate::spec::drafter::AccuracyProfile;
+
+/// One Table I row to fit against.
+#[derive(Clone, Debug)]
+pub struct DatasetTarget {
+    pub name: &'static str,
+    /// Acceptance lengths at widths 2, 4, 8, 16, 32, 64.
+    pub acceptance: [f64; 6],
+}
+
+/// The paper's Table I (width-1 column is identically 1 and omitted).
+pub const PAPER_TABLE1: [DatasetTarget; 4] = [
+    DatasetTarget { name: "MT-Bench", acceptance: [1.72, 2.28, 2.59, 2.93, 3.19, 3.34] },
+    DatasetTarget { name: "GSM8K", acceptance: [1.76, 2.43, 2.69, 3.08, 3.34, 3.56] },
+    DatasetTarget { name: "MBPP", acceptance: [1.78, 2.54, 2.89, 3.27, 3.55, 3.74] },
+    DatasetTarget { name: "HumanEval", acceptance: [1.77, 2.49, 2.8, 3.19, 3.48, 3.71] },
+];
+
+pub const FIT_WIDTHS: [usize; 6] = [2, 4, 8, 16, 32, 64];
+const N_HEADS: usize = 5; // Medusa offers a 5-head Vicuna-7B (paper §IV-A)
+const N_RANKS: usize = 10;
+const HEAD_CAP: f64 = 0.98;
+
+/// Build the profile for given family parameters. `b` boosts the top-1 rank
+/// of every head (real Medusa heads are disproportionately good at rank 0).
+pub fn profile_from_params(name: &str, c: f64, rho: f64, r: f64, b: f64) -> AccuracyProfile {
+    let mut heads = Vec::with_capacity(N_HEADS);
+    for d in 0..N_HEADS {
+        let mut h: Vec<f64> = (0..N_RANKS)
+            .map(|k| {
+                let boost = if k == 0 { b } else { 1.0 };
+                (boost * c * rho.powi(d as i32) * r.powi(k as i32)).min(1.0)
+            })
+            .collect();
+        // enforce descending ranks (boost could otherwise be < r)
+        for k in 1..h.len() {
+            h[k] = h[k].min(h[k - 1]);
+        }
+        let s: f64 = h.iter().sum();
+        if s > HEAD_CAP {
+            for x in h.iter_mut() {
+                *x *= HEAD_CAP / s;
+            }
+        }
+        heads.push(h);
+    }
+    AccuracyProfile::new(name, heads)
+}
+
+/// Squared error of a parameter triple against a target row. If `trees` is
+/// given (the MT-Bench calibration trees), acceptance is evaluated on those
+/// fixed structures — matching the paper's protocol where trees are
+/// determined on the calibration dataset and *migrated* to the others.
+fn loss(
+    c: f64,
+    rho: f64,
+    r: f64,
+    b: f64,
+    target: &DatasetTarget,
+    trees: Option<&[crate::spec::tree::VerificationTree]>,
+) -> f64 {
+    let p = profile_from_params(target.name, c, rho, r, b);
+    FIT_WIDTHS
+        .iter()
+        .enumerate()
+        .zip(&target.acceptance)
+        .map(|((i, &w), &want)| {
+            let got = match trees {
+                Some(ts) => ts[i].expected_acceptance(&p.heads),
+                None => build_tree(&p.heads, w).expected_acceptance(&p.heads),
+            };
+            // relative error: every width must land within tolerance
+            let e = (got - want) / want;
+            e * e
+        })
+        .sum()
+}
+
+/// Fit result.
+#[derive(Clone, Debug)]
+pub struct Fit {
+    pub profile: AccuracyProfile,
+    pub c: f64,
+    pub rho: f64,
+    pub r: f64,
+    pub b: f64,
+    /// RMS *relative* error across the six fitted widths.
+    pub rmse: f64,
+}
+
+/// Coarse-to-fine grid search fit of one dataset row, optionally against
+/// fixed (calibration) tree structures.
+pub fn fit_profile_with_trees(
+    target: &DatasetTarget,
+    trees: Option<&[crate::spec::tree::VerificationTree]>,
+) -> Fit {
+    let mut best = (f64::INFINITY, 0.7, 0.8, 0.3, 1.0);
+    // coarse
+    let mut cs: Vec<f64> = (45..=85).step_by(5).map(|x| x as f64 / 100.0).collect();
+    let mut rhos: Vec<f64> = (60..=95).step_by(5).map(|x| x as f64 / 100.0).collect();
+    let mut rs: Vec<f64> = (10..=60).step_by(5).map(|x| x as f64 / 100.0).collect();
+    let mut bs: Vec<f64> = vec![1.0, 1.1, 1.2, 1.35, 1.5];
+    for round in 0..3 {
+        for &c in &cs {
+            for &rho in &rhos {
+                for &r in &rs {
+                    for &b in &bs {
+                        let l = loss(c, rho, r, b, target, trees);
+                        if l < best.0 {
+                            best = (l, c, rho, r, b);
+                        }
+                    }
+                }
+            }
+        }
+        // refine around the best point
+        let (_, c0, rho0, r0, b0) = best;
+        let span = 0.05 / (round + 1) as f64;
+        let grid = |x0: f64, hi: f64| -> Vec<f64> {
+            (-4..=4).map(|i| (x0 + i as f64 * span / 4.0).clamp(0.01, hi)).collect()
+        };
+        cs = grid(c0, 0.99);
+        rhos = grid(rho0, 0.99);
+        rs = grid(r0, 0.99);
+        bs = grid(b0, 2.0);
+    }
+    let (l, c, rho, r, b) = best;
+    Fit {
+        profile: profile_from_params(target.name, c, rho, r, b),
+        c,
+        rho,
+        r,
+        b,
+        rmse: (l / FIT_WIDTHS.len() as f64).sqrt(),
+    }
+}
+
+/// Fit one dataset with its own greedy trees (used for the calibration
+/// dataset, MT-Bench).
+pub fn fit_profile(target: &DatasetTarget) -> Fit {
+    fit_profile_with_trees(target, None)
+}
+
+/// Fit all four Table I datasets, following the paper's protocol: trees are
+/// determined on MT-Bench and *migrated* to the other three datasets, whose
+/// profiles are fit against those fixed structures.
+pub fn fit_all() -> Vec<Fit> {
+    let mtbench = fit_profile(&PAPER_TABLE1[0]);
+    let trees: Vec<crate::spec::tree::VerificationTree> =
+        FIT_WIDTHS.iter().map(|&w| build_tree(&mtbench.profile.heads, w)).collect();
+    let mut fits = vec![mtbench];
+    for target in &PAPER_TABLE1[1..] {
+        fits.push(fit_profile_with_trees(target, Some(&trees)));
+    }
+    fits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_mtbench_within_tolerance() {
+        let fit = fit_profile(&PAPER_TABLE1[0]);
+        assert!(fit.rmse < 0.06, "MT-Bench fit rmse {}", fit.rmse);
+        // per-width check: within 5% of the paper's numbers
+        for (&w, &want) in FIT_WIDTHS.iter().zip(&PAPER_TABLE1[0].acceptance) {
+            let got = build_tree(&fit.profile.heads, w).expected_acceptance(&fit.profile.heads);
+            assert!(
+                (got - want).abs() / want < 0.05,
+                "width {w}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn fit_orders_datasets_like_paper() {
+        // MBPP > HumanEval > GSM8K > MT-Bench at width 64
+        let fits = fit_all();
+        let e = |f: &Fit| build_tree(&f.profile.heads, 64).expected_acceptance(&f.profile.heads);
+        let by_name: std::collections::BTreeMap<&str, f64> =
+            fits.iter().map(|f| (f.profile.name.as_str(), e(f))).collect();
+        assert!(by_name["MBPP"] > by_name["HumanEval"]);
+        assert!(by_name["HumanEval"] > by_name["GSM8K"]);
+        assert!(by_name["GSM8K"] > by_name["MT-Bench"]);
+    }
+
+    #[test]
+    fn monte_carlo_agrees_with_expectation_after_fit() {
+        let fit = fit_profile(&PAPER_TABLE1[2]); // MBPP
+        let tree = build_tree(&fit.profile.heads, 16);
+        let expected = tree.expected_acceptance(&fit.profile.heads);
+        let measured = fit.profile.measure_acceptance(&tree, 100_000, 9);
+        assert!((measured - expected).abs() < 0.02, "{measured} vs {expected}");
+    }
+}

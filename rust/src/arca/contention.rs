@@ -1,0 +1,172 @@
+//! Contention-aware partitioning-ratio determination (paper §III-C.3):
+//! initialize the column ratio from the units' *isolated* execution times
+//! (the EdgeNN heuristic the Medusa+EM baseline stops at), then gradually
+//! adjust it on the hetero-core simulator, whose unified-memory model prices
+//! the bandwidth interference that the isolated estimate misses. The
+//! attention (context) split is tuned the same way per context length —
+//! dynamic partitioning (Fig 10a).
+
+use crate::hcmp::partition::{AttentionSplit, PartitionPlan};
+use crate::hcmp::schedule::{build_step, EngineKind};
+use crate::hcmp::simulator::Simulator;
+use crate::model::ModelConfig;
+use crate::sparse::CooPattern;
+
+/// Isolated-time initialization: ratio ∝ GPU capability share for this
+/// width (what EdgeNN/Medusa+EM uses directly).
+pub fn isolated_ratio(sim: &Simulator, cfg: &ModelConfig, width: usize, ctx: usize) -> f64 {
+    // time the whole step on each unit alone via a gpu-only / cpu-only plan
+    let pattern = chain_pattern(width);
+    let pat = if width > 1 { Some(&pattern) } else { None };
+    let t_gpu = sim
+        .run(&build_step(cfg, EngineKind::MedusaGpu, width, ctx, pat, &PartitionPlan::gpu_only()))
+        .total;
+    // cpu-only: reuse ghidorah schedule with ratio 0 (all columns on CPU)
+    let t_cpu = sim
+        .run(&build_step(
+            cfg,
+            EngineKind::Ghidorah,
+            width,
+            ctx,
+            pat,
+            &PartitionPlan {
+                linear_ratio: 0.0,
+                attention: AttentionSplit { dense_gpu_frac: 0.0, sparse_cpu_frac: 1.0 },
+                megatron_style: false,
+            },
+        ))
+        .total;
+    // faster unit gets proportionally more columns
+    (1.0 / t_gpu) / (1.0 / t_gpu + 1.0 / t_cpu)
+}
+
+fn chain_pattern(w: usize) -> CooPattern {
+    CooPattern::from_tree(
+        &(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>(),
+    )
+}
+
+/// Gradually adjust the linear ratio (and optionally the attention context
+/// split) to minimize simulated step time. Returns (plan, step_time).
+pub fn tune_plan(
+    sim: &Simulator,
+    cfg: &ModelConfig,
+    width: usize,
+    ctx: usize,
+    pattern: Option<&CooPattern>,
+    dynamic_attention: bool,
+) -> (PartitionPlan, f64) {
+    let mut ratio = isolated_ratio(sim, cfg, width, ctx);
+    let mut attn = AttentionSplit::static_affinity();
+    let eval = |r: f64, a: AttentionSplit| -> f64 {
+        let plan = PartitionPlan { linear_ratio: r, attention: a, megatron_style: false };
+        sim.run(&build_step(cfg, EngineKind::Ghidorah, width, ctx, pattern, &plan)).total
+    };
+
+    let mut best_t = eval(ratio, attn);
+    // hill climb on the linear ratio with shrinking step
+    let mut step = 0.08;
+    while step > 0.004 {
+        let mut moved = false;
+        for cand in [ratio + step, ratio - step] {
+            let cand = cand.clamp(0.05, 0.95);
+            let t = eval(cand, attn);
+            if t < best_t {
+                best_t = t;
+                ratio = cand;
+                moved = true;
+            }
+        }
+        if !moved {
+            step *= 0.5;
+        }
+    }
+
+    if dynamic_attention {
+        // tune the dense-span context split (Fig 10a's "Dynamic")
+        let mut step = 0.15;
+        while step > 0.01 {
+            let mut moved = false;
+            for cand in [attn.dense_gpu_frac + step, attn.dense_gpu_frac - step] {
+                let cand = cand.clamp(0.1, 1.0);
+                let a = AttentionSplit { dense_gpu_frac: cand, ..attn };
+                let t = eval(ratio, a);
+                if t < best_t {
+                    best_t = t;
+                    attn = a;
+                    moved = true;
+                }
+            }
+            if !moved {
+                step *= 0.5;
+            }
+        }
+        // and the sparse left-boundary share
+        let mut step = 0.15;
+        while step > 0.01 {
+            let mut moved = false;
+            for cand in [attn.sparse_cpu_frac + step, attn.sparse_cpu_frac - step] {
+                let cand = cand.clamp(0.0, 1.0);
+                let a = AttentionSplit { sparse_cpu_frac: cand, ..attn };
+                let t = eval(ratio, a);
+                if t < best_t {
+                    best_t = t;
+                    attn = a;
+                    moved = true;
+                }
+            }
+            if !moved {
+                step *= 0.5;
+            }
+        }
+    }
+
+    (PartitionPlan { linear_ratio: ratio, attention: attn, megatron_style: false }, best_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spec::tree::VerificationTree;
+
+    fn setup() -> (Simulator, ModelConfig) {
+        (Simulator::jetson_nx(), ModelConfig::vicuna_7b())
+    }
+
+    #[test]
+    fn isolated_ratio_in_unit_interval() {
+        let (sim, cfg) = setup();
+        let r = isolated_ratio(&sim, &cfg, 16, 256);
+        assert!((0.1..0.9).contains(&r), "ratio {r}");
+    }
+
+    #[test]
+    fn tuned_plan_beats_isolated_init() {
+        let (sim, cfg) = setup();
+        let tree = VerificationTree::chain(16);
+        let pat = tree.pattern();
+        let r0 = isolated_ratio(&sim, &cfg, 16, 256);
+        let t0 = sim
+            .run(&build_step(
+                &cfg,
+                EngineKind::Ghidorah,
+                16,
+                256,
+                Some(&pat),
+                &PartitionPlan::hcmp(r0),
+            ))
+            .total;
+        let (_plan, t) = tune_plan(&sim, &cfg, 16, 256, Some(&pat), false);
+        assert!(t <= t0 * 1.0001, "tuning regressed: {t} vs init {t0}");
+    }
+
+    #[test]
+    fn dynamic_attention_helps_at_long_context() {
+        let (sim, cfg) = setup();
+        let tree = VerificationTree::chain(64);
+        let pat = tree.pattern();
+        let (_static_plan, t_static) = tune_plan(&sim, &cfg, 64, 4096, Some(&pat), false);
+        let (_dyn_plan, t_dyn) = tune_plan(&sim, &cfg, 64, 4096, Some(&pat), true);
+        assert!(t_dyn <= t_static, "dynamic partitioning must not lose: {t_dyn} vs {t_static}");
+    }
+}

@@ -1,0 +1,28 @@
+//! ARCA — Architecture-aware pRofiling and Calibration Approach (paper
+//! §III-C): the preprocessing pass that decides, for a given device and
+//! speculative-decoding method,
+//!
+//! 1. the **verification tree** for each candidate width (greedy
+//!    expected-acceptance construction + brute-force local search),
+//! 2. the **verification width** (parallelism-aware: candidate widths are
+//!    the powers of two 2..64 that match unit vectorization),
+//! 3. the **partitioning ratio** (contention-aware hill climb on the
+//!    hetero-core simulator, initialized from isolated execution times),
+//!
+//! maximizing decode throughput = acceptance(width) / step_time(width).
+
+pub mod calibrate;
+pub mod contention;
+pub mod profiler;
+pub mod search;
+pub mod strategy;
+pub mod tree_builder;
+
+pub use calibrate::{fit_profile, DatasetTarget, PAPER_TABLE1};
+pub use profiler::{profile, ProfileRow};
+pub use strategy::{PartitionStrategy, SpeculativeStrategy};
+pub use tree_builder::build_tree;
+
+/// The candidate verification widths (§III-C.2: powers of two align with
+/// unit vectorization / wave quantization).
+pub const CANDIDATE_WIDTHS: [usize; 6] = [2, 4, 8, 16, 32, 64];

@@ -1,0 +1,156 @@
+//! Parallelism-aware width profiling (paper §III-C.2): for each candidate
+//! verification width (powers of two), build the ARCA tree, tune the
+//! contention-aware partition plan, price the step on the hetero-core
+//! simulator, and pick the width maximizing decode throughput
+//! (acceptance / step time). Different units have different sweet spots —
+//! this is where Ghidorah lands on width 16 while GPU-only Medusa prefers 64.
+
+use super::contention::tune_plan;
+use super::strategy::{PartitionStrategy, SpeculativeStrategy};
+use super::tree_builder::build_tree;
+use crate::hcmp::partition::PartitionPlan;
+use crate::hcmp::schedule::{build_step, EngineKind};
+use crate::hcmp::simulator::Simulator;
+use crate::model::ModelConfig;
+use crate::spec::drafter::AccuracyProfile;
+
+/// One profiled width.
+#[derive(Clone, Debug)]
+pub struct ProfileRow {
+    pub width: usize,
+    pub expected_acceptance: f64,
+    pub step_time: f64,
+    pub throughput: f64, // tokens/s = acceptance / step_time
+    pub plan: PartitionPlan,
+}
+
+/// Full profiling output.
+#[derive(Clone, Debug)]
+pub struct ProfileOutcome {
+    pub rows: Vec<ProfileRow>,
+    pub speculative: SpeculativeStrategy,
+    pub partition: PartitionStrategy,
+}
+
+/// Run the ARCA profiling pass for one drafter profile on one device config.
+pub fn profile(
+    sim: &Simulator,
+    cfg: &ModelConfig,
+    drafter: &AccuracyProfile,
+    widths: &[usize],
+    ctx: usize,
+) -> ProfileOutcome {
+    let mut rows = Vec::new();
+    for &w in widths {
+        let tree = build_tree(&drafter.heads, w);
+        let acc = tree.expected_acceptance(&drafter.heads);
+        let pattern = tree.pattern();
+        let (plan, t) = tune_plan(sim, cfg, w, ctx, Some(&pattern), false);
+        rows.push(ProfileRow {
+            width: w,
+            expected_acceptance: acc,
+            step_time: t,
+            throughput: acc / t,
+            plan,
+        });
+    }
+    let best = rows
+        .iter()
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .expect("at least one width")
+        .clone();
+    let tree = build_tree(&drafter.heads, best.width);
+
+    // dynamic partitioning buckets: re-tune the attention split per context
+    let mut buckets = Vec::new();
+    for ctx_b in [512usize, 1024, 2048, 4096] {
+        let pattern = tree.pattern();
+        let (plan, _) = tune_plan(sim, cfg, best.width, ctx_b, Some(&pattern), true);
+        buckets.push((ctx_b, plan));
+    }
+
+    ProfileOutcome {
+        speculative: SpeculativeStrategy {
+            width: best.width,
+            expected_acceptance: best.expected_acceptance,
+            tree,
+        },
+        partition: PartitionStrategy { buckets },
+        rows,
+    }
+}
+
+/// Simulated step time of a baseline engine (for Fig 9 comparisons).
+pub fn baseline_step_time(
+    sim: &Simulator,
+    cfg: &ModelConfig,
+    engine: EngineKind,
+    width: usize,
+    ctx: usize,
+    drafter: &AccuracyProfile,
+    em_ratio: f64,
+) -> f64 {
+    let tree = build_tree(&drafter.heads, width);
+    let pattern = tree.pattern();
+    let pat = if width > 1 { Some(&pattern) } else { None };
+    let plan = match engine {
+        EngineKind::Sequential | EngineKind::MedusaGpu => PartitionPlan::gpu_only(),
+        EngineKind::MedusaEM => PartitionPlan::megatron(em_ratio),
+        EngineKind::Ghidorah => unreachable!("use profile() for Ghidorah"),
+    };
+    sim.run(&build_step(cfg, engine, width, ctx, pat, &plan)).total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arca::calibrate::{fit_profile, PAPER_TABLE1};
+
+    #[test]
+    fn ghidorah_sweet_spot_is_16() {
+        let sim = Simulator::jetson_nx();
+        let cfg = ModelConfig::vicuna_7b();
+        let fit = fit_profile(&PAPER_TABLE1[0]); // MT-Bench calibration
+        let out = profile(&sim, &cfg, &fit.profile, &[4, 8, 16, 32, 64], 256);
+        assert_eq!(
+            out.speculative.width, 16,
+            "ARCA should pick width 16 on the NX (paper §IV-C); rows: {:?}",
+            out.rows.iter().map(|r| (r.width, r.throughput)).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn medusa_gpu_prefers_64() {
+        // GPU-only Medusa keeps improving with width (flat step time)
+        let sim = Simulator::jetson_nx();
+        let cfg = ModelConfig::vicuna_7b();
+        let fit = fit_profile(&PAPER_TABLE1[0]);
+        let mut best = (0usize, 0.0f64);
+        for w in [4usize, 8, 16, 32, 64] {
+            let tree = build_tree(&fit.profile.heads, w);
+            let acc = tree.expected_acceptance(&fit.profile.heads);
+            let t = baseline_step_time(&sim, &cfg, EngineKind::MedusaGpu, w, 256, &fit.profile, 0.5);
+            let thr = acc / t;
+            if thr > best.1 {
+                best = (w, thr);
+            }
+        }
+        assert_eq!(best.0, 64, "GPU-only Medusa should peak at width 64");
+    }
+
+    #[test]
+    fn headline_speedup_in_band() {
+        // Ghidorah@16 vs Sequential: the paper reports up to 7.6x (MBPP).
+        let sim = Simulator::jetson_nx();
+        let cfg = ModelConfig::vicuna_7b();
+        let fit = fit_profile(&PAPER_TABLE1[2]); // MBPP
+        let out = profile(&sim, &cfg, &fit.profile, &[16], 256);
+        let t_seq =
+            baseline_step_time(&sim, &cfg, EngineKind::Sequential, 1, 256, &fit.profile, 0.5);
+        let speedup = out.rows[0].throughput / (1.0 / t_seq);
+        assert!(
+            (5.5..9.5).contains(&speedup),
+            "headline speedup {speedup} out of band (paper: 7.6)"
+        );
+    }
+}

@@ -1,0 +1,180 @@
+//! The ARCA output: a deployable speculative + partitioning strategy, with
+//! JSON (de)serialization so the preprocessing pass can run once and the
+//! coordinator can load the result at startup.
+
+use anyhow::{anyhow, Result};
+
+use crate::hcmp::partition::{AttentionSplit, PartitionPlan};
+use crate::spec::tree::VerificationTree;
+use crate::util::json::Json;
+
+/// The speculative strategy: width + tree (paper §III-C.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpeculativeStrategy {
+    pub width: usize,
+    pub tree: VerificationTree,
+    pub expected_acceptance: f64,
+}
+
+/// The partitioning strategy: linear ratio + attention split per context
+/// bucket (dynamic partitioning re-profiles as the KV cache grows).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionStrategy {
+    /// (context upper bound, plan) pairs in ascending context order.
+    pub buckets: Vec<(usize, PartitionPlan)>,
+}
+
+impl PartitionStrategy {
+    pub fn plan_for(&self, ctx: usize) -> &PartitionPlan {
+        for (bound, plan) in &self.buckets {
+            if ctx <= *bound {
+                return plan;
+            }
+        }
+        &self.buckets.last().expect("non-empty strategy").1
+    }
+}
+
+// ---- JSON ------------------------------------------------------------------
+
+impl SpeculativeStrategy {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("width", Json::num(self.width as f64)),
+            ("expected_acceptance", Json::num(self.expected_acceptance)),
+            (
+                "parents",
+                Json::arr(
+                    self.tree
+                        .parents
+                        .iter()
+                        .map(|&p| Json::num(if p == usize::MAX { -1.0 } else { p as f64 }))
+                        .collect(),
+                ),
+            ),
+            ("ranks", Json::arr(self.tree.ranks.iter().map(|&r| Json::num(r as f64)).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let width =
+            j.get("width").and_then(Json::as_usize).ok_or_else(|| anyhow!("missing width"))?;
+        let expected_acceptance = j
+            .get("expected_acceptance")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("missing expected_acceptance"))?;
+        let parents: Vec<usize> = j
+            .get("parents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing parents"))?
+            .iter()
+            .map(|x| {
+                let v = x.as_f64().unwrap_or(-1.0);
+                if v < 0.0 {
+                    usize::MAX
+                } else {
+                    v as usize
+                }
+            })
+            .collect();
+        let ranks: Vec<usize> = j
+            .get("ranks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing ranks"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let tree = VerificationTree::new(parents, ranks);
+        tree.validate().map_err(|e| anyhow!(e))?;
+        if tree.width() != width {
+            return Err(anyhow!("width mismatch"));
+        }
+        Ok(Self { width, tree, expected_acceptance })
+    }
+}
+
+impl PartitionStrategy {
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.buckets
+                .iter()
+                .map(|(bound, plan)| {
+                    Json::obj(vec![
+                        ("ctx_upto", Json::num(*bound as f64)),
+                        ("linear_ratio", Json::num(plan.linear_ratio)),
+                        ("dense_gpu_frac", Json::num(plan.attention.dense_gpu_frac)),
+                        ("sparse_cpu_frac", Json::num(plan.attention.sparse_cpu_frac)),
+                        ("megatron_style", Json::Bool(plan.megatron_style)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let arr = j.as_arr().ok_or_else(|| anyhow!("partition strategy must be an array"))?;
+        let mut buckets = Vec::new();
+        for e in arr {
+            let g = |k: &str| e.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("missing {k}"));
+            buckets.push((
+                g("ctx_upto")? as usize,
+                PartitionPlan {
+                    linear_ratio: g("linear_ratio")?,
+                    attention: AttentionSplit {
+                        dense_gpu_frac: g("dense_gpu_frac")?,
+                        sparse_cpu_frac: g("sparse_cpu_frac")?,
+                    },
+                    megatron_style: e.get("megatron_style").and_then(Json::as_bool).unwrap_or(false),
+                },
+            ));
+        }
+        if buckets.is_empty() {
+            return Err(anyhow!("empty partition strategy"));
+        }
+        Ok(Self { buckets })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arca::tree_builder::build_tree;
+
+    #[test]
+    fn speculative_strategy_roundtrips() {
+        let acc = vec![vec![0.6, 0.2], vec![0.4, 0.1]];
+        let tree = build_tree(&acc, 4);
+        let s = SpeculativeStrategy {
+            width: 4,
+            expected_acceptance: tree.expected_acceptance(&acc),
+            tree,
+        };
+        let j = s.to_json();
+        let s2 = SpeculativeStrategy::from_json(&Json::parse(&j.dump()).unwrap()).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn partition_strategy_bucket_lookup() {
+        let p = PartitionStrategy {
+            buckets: vec![
+                (512, PartitionPlan::hcmp(0.4)),
+                (2048, PartitionPlan::hcmp(0.5)),
+                (8192, PartitionPlan::hcmp(0.6)),
+            ],
+        };
+        assert_eq!(p.plan_for(100).linear_ratio, 0.4);
+        assert_eq!(p.plan_for(512).linear_ratio, 0.4);
+        assert_eq!(p.plan_for(513).linear_ratio, 0.5);
+        assert_eq!(p.plan_for(99999).linear_ratio, 0.6);
+    }
+
+    #[test]
+    fn partition_strategy_roundtrips() {
+        let p = PartitionStrategy {
+            buckets: vec![(512, PartitionPlan::hcmp(0.45)), (4096, PartitionPlan::megatron(0.5))],
+        };
+        let p2 = PartitionStrategy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(p, p2);
+    }
+}

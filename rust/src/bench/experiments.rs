@@ -1,0 +1,459 @@
+//! The four paper experiments. Each returns its rendered table plus the raw
+//! numbers so benches/tests can assert on shapes.
+
+use std::time::Instant;
+
+use crate::arca::calibrate::{fit_all, Fit, FIT_WIDTHS, PAPER_TABLE1};
+use crate::arca::contention::tune_plan;
+use crate::arca::search::refine_tree;
+use crate::arca::tree_builder::build_tree;
+use crate::hcmp::partition::{AttentionSplit, PartitionPlan};
+use crate::hcmp::schedule::{build_step, EngineKind};
+use crate::hcmp::simulator::Simulator;
+use crate::model::ModelConfig;
+use crate::sparse::{
+    attention_dense_masked, attention_sparse_opt, av_coo_naive, qkt_coo_naive, CooPattern,
+};
+use crate::spec::tree::VerificationTree;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::table::TablePrinter;
+
+// ---------------------------------------------------------------------------
+// Table I — acceptance length vs verification width per dataset
+// ---------------------------------------------------------------------------
+
+pub struct Table1Outcome {
+    pub text: String,
+    /// rows[dataset][width_idx] = (expected, measured)
+    pub rows: Vec<(String, Vec<(f64, f64)>)>,
+}
+
+/// Regenerate Table I: ARCA trees are calibrated on MT-Bench (the paper's
+/// calibration dataset) and evaluated on all four dataset profiles; both the
+/// closed-form expectation and a Monte-Carlo measurement are reported.
+pub fn table1(mc_steps: usize, refine: bool) -> Table1Outcome {
+    let fits: Vec<Fit> = fit_all();
+    let mtbench = &fits[0];
+
+    // trees are determined on the calibration dataset (MT-Bench)...
+    let mut trees: Vec<VerificationTree> = FIT_WIDTHS
+        .iter()
+        .map(|&w| build_tree(&mtbench.profile.heads, w))
+        .collect();
+    if refine {
+        trees = trees
+            .into_iter()
+            .map(|t| refine_tree(&t, &mtbench.profile, 4000, 4, 11).tree)
+            .collect();
+    }
+
+    let mut printer = TablePrinter::new(&["dataset", "w=1", "2", "4", "8", "16", "32", "64"]);
+    let mut rows = Vec::new();
+    for fit in &fits {
+        let mut cells = vec![fit.profile.name.clone(), "1.00".to_string()];
+        let mut per_width = Vec::new();
+        for (i, tree) in trees.iter().enumerate() {
+            let expected = tree.expected_acceptance(&fit.profile.heads);
+            let measured = fit.profile.measure_acceptance(tree, mc_steps, 1000 + i as u64);
+            per_width.push((expected, measured));
+            cells.push(format!("{measured:.2}"));
+        }
+        printer.row(cells);
+        rows.push((fit.profile.name.clone(), per_width));
+    }
+    let mut text = String::from("Table I — acceptance length under given verification widths\n");
+    text.push_str("(trees calibrated on MT-Bench, applied to all datasets; Monte-Carlo measured)\n\n");
+    text.push_str(&printer.render());
+    text.push_str("\npaper reference:\n");
+    let mut refp = TablePrinter::new(&["dataset", "w=1", "2", "4", "8", "16", "32", "64"]);
+    for t in &PAPER_TABLE1 {
+        let mut cells = vec![t.name.to_string(), "1".to_string()];
+        cells.extend(t.acceptance.iter().map(|a| format!("{a}")));
+        refp.row(cells);
+    }
+    text.push_str(&refp.render());
+    Table1Outcome { text, rows }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 9 — normalized decode throughput, 4 engines x widths 4..64 x datasets
+// ---------------------------------------------------------------------------
+
+pub struct Fig9Outcome {
+    pub text: String,
+    /// per dataset: (name, per width: [seq, medusa, medusa_em, ghidorah]
+    /// normalized throughputs)
+    pub series: Vec<(String, Vec<(usize, [f64; 4])>)>,
+    pub headline_speedup: f64,
+    pub algorithmic_factor: f64,
+    pub parallel_factor: f64,
+}
+
+pub fn fig9(ctx: usize) -> Fig9Outcome {
+    let sim = Simulator::jetson_nx();
+    let cfg = ModelConfig::vicuna_7b();
+    let fits = fit_all();
+    let widths = [4usize, 8, 16, 32, 64];
+
+    let t_seq = sim
+        .run(&build_step(&cfg, EngineKind::Sequential, 1, ctx, None, &PartitionPlan::gpu_only()))
+        .total;
+    let seq_thr = 1.0 / t_seq;
+
+    let mut text = format!(
+        "Fig 9 — normalized decode throughput (ctx={ctx}, baseline: Sequential on GPU = 1.0)\n\n"
+    );
+    let mut series = Vec::new();
+    let mut headline: f64 = 0.0;
+    let mut headline_parts = (1.0, 1.0);
+
+    for fit in &fits {
+        let mut printer =
+            TablePrinter::new(&["width", "Sequential", "Medusa", "Medusa+EM", "Ghidorah"]);
+        let mut rows = Vec::new();
+        for &w in &widths {
+            let tree = build_tree(&fit.profile.heads, w);
+            let acc = tree.expected_acceptance(&fit.profile.heads);
+            let pattern = tree.pattern();
+
+            let t_medusa = sim
+                .run(&build_step(&cfg, EngineKind::MedusaGpu, w, ctx, Some(&pattern), &PartitionPlan::gpu_only()))
+                .total;
+            // Medusa+EM: EdgeNN isolated-time ratio, Megatron partitioning
+            let em_ratio = crate::arca::contention::isolated_ratio(&sim, &cfg, w, ctx);
+            let t_em = sim
+                .run(&build_step(&cfg, EngineKind::MedusaEM, w, ctx, Some(&pattern), &PartitionPlan::megatron(em_ratio)))
+                .total;
+            let (_plan, t_ghid) = tune_plan(&sim, &cfg, w, ctx, Some(&pattern), false);
+
+            let vals = [
+                1.0,
+                (acc / t_medusa) / seq_thr,
+                (acc / t_em) / seq_thr,
+                (acc / t_ghid) / seq_thr,
+            ];
+            if vals[3] > headline {
+                headline = vals[3];
+                headline_parts = (acc, (1.0 / t_ghid) / (1.0 / t_medusa));
+            }
+            printer.row(vec![
+                format!("{w}"),
+                format!("{:.2}", vals[0]),
+                format!("{:.2}", vals[1]),
+                format!("{:.2}", vals[2]),
+                format!("{:.2}", vals[3]),
+            ]);
+            rows.push((w, vals));
+        }
+        text.push_str(&format!("[{}]\n{}\n", fit.profile.name, printer.render()));
+        series.push((fit.profile.name.clone(), rows));
+    }
+    text.push_str(&format!(
+        "headline: Ghidorah best normalized speedup = {headline:.2}x (paper: 7.6x)\n\
+         decomposition: {:.2}x algorithmic x {:.2}x parallel (paper: 3.27 x 2.31)\n",
+        headline_parts.0, headline_parts.1
+    ));
+    Fig9Outcome {
+        text,
+        series,
+        headline_speedup: headline,
+        algorithmic_factor: headline_parts.0,
+        parallel_factor: headline_parts.1,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10a — attention-module time vs context length, static vs dynamic
+// ---------------------------------------------------------------------------
+
+pub struct Fig10aOutcome {
+    pub text: String,
+    /// (ctx, t_static, t_dynamic) in seconds
+    pub rows: Vec<(usize, f64, f64)>,
+}
+
+/// Attention-module-only schedule at width 64 (the figure's setting).
+fn attention_only_step(
+    cfg: &ModelConfig,
+    ctx: usize,
+    pattern: &CooPattern,
+    plan: &PartitionPlan,
+) -> crate::hcmp::schedule::StepSchedule {
+    use crate::hcmp::cost::Op;
+    use crate::hcmp::schedule::{Phase, StepSchedule};
+    let (h, dh, w) = (cfg.n_heads, cfg.head_dim, pattern.n);
+    let a = plan.attention;
+    let mut phases = Vec::new();
+    for _layer in 0..cfg.n_layers {
+        let mut p = Phase::default();
+        let ctx_gpu = ((ctx as f64) * a.dense_gpu_frac).round() as usize;
+        let ctx_cpu = ctx - ctx_gpu;
+        if ctx_gpu > 0 {
+            p.gpu.push(Op::AttnDense { m: w, ctx: ctx_gpu, heads: h, dh });
+        }
+        if ctx_cpu > 0 {
+            p.cpu.push(Op::AttnDense { m: w, ctx: ctx_cpu, heads: h, dh });
+        }
+        let nnz = pattern.nnz();
+        let nnz_cpu = ((nnz as f64) * a.sparse_cpu_frac).round() as usize;
+        if nnz_cpu > 0 {
+            p.cpu.push(Op::AttnSparse { nnz: nnz_cpu, heads: h, dh });
+        }
+        if nnz - nnz_cpu > 0 {
+            let rows = (nnz - nnz_cpu).div_ceil(w.max(1));
+            p.gpu.push(Op::AttnDraftDense { m: rows.max(1), heads: h, dh });
+        }
+        p.syncs = 1;
+        phases.push(p);
+    }
+    StepSchedule { phases, width: w }
+}
+
+pub fn fig10a() -> Fig10aOutcome {
+    let sim = Simulator::jetson_nx();
+    let cfg = ModelConfig::vicuna_7b();
+    let fit = crate::arca::calibrate::fit_profile(&PAPER_TABLE1[0]);
+    let tree = build_tree(&fit.profile.heads, 64);
+    let pattern = tree.pattern();
+
+    let mut printer = TablePrinter::new(&["ctx", "static (ms)", "dynamic (ms)", "speedup"]);
+    let mut rows = Vec::new();
+    for ctx in [256usize, 512, 1024, 2048, 4096] {
+        // Static: all dense on GPU, all sparse on CPU (§IV-D)
+        let static_plan = PartitionPlan::hcmp(0.5);
+        let t_static = sim.run(&attention_only_step(&cfg, ctx, &pattern, &static_plan)).total;
+
+        // Dynamic: profile-guided split of both spans
+        let mut best = (t_static, static_plan);
+        for dg in [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.45, 0.4] {
+            for sc in [1.0, 0.85, 0.7, 0.55] {
+                let plan = PartitionPlan {
+                    linear_ratio: 0.5,
+                    attention: AttentionSplit { dense_gpu_frac: dg, sparse_cpu_frac: sc },
+                    megatron_style: false,
+                };
+                let t = sim.run(&attention_only_step(&cfg, ctx, &pattern, &plan)).total;
+                if t < best.0 {
+                    best = (t, plan);
+                }
+            }
+        }
+        let t_dynamic = best.0;
+        printer.row(vec![
+            format!("{ctx}"),
+            format!("{:.2}", t_static * 1e3),
+            format!("{:.2}", t_dynamic * 1e3),
+            format!("{:.2}x", t_static / t_dynamic),
+        ]);
+        rows.push((ctx, t_static, t_dynamic));
+    }
+    let mut text = String::from(
+        "Fig 10a — attention module, static vs dynamic partitioning (width 64)\n\n",
+    );
+    text.push_str(&printer.render());
+    Fig10aOutcome { text, rows }
+}
+
+// ---------------------------------------------------------------------------
+// Fig 10b — sparse component: naive sparse vs optimized sparse vs dense
+// (real wall-clock on this host's kernels)
+// ---------------------------------------------------------------------------
+
+pub struct Fig10bOutcome {
+    pub text: String,
+    pub t_naive: f64,
+    pub t_opt: f64,
+    pub t_dense: f64,
+    /// NX-simulator-priced times (naive, opt, dense) — reproduces the
+    /// paper's ordering, which depends on the ARM-NEON/scalar FLOP-rate gap.
+    pub sim: (f64, f64, f64),
+}
+
+pub fn fig10b(reps: usize) -> Fig10bOutcome {
+    // 7B head dims at verification width 64, the paper's sparse component
+    let (heads, dh, w) = (32usize, 128usize, 64usize);
+    let fit = crate::arca::calibrate::fit_profile(&PAPER_TABLE1[0]);
+    let tree = build_tree(&fit.profile.heads, w);
+    let pattern = tree.pattern();
+    let scale = (dh as f32).powf(-0.5);
+    let mut rng = Rng::new(77);
+
+    // per-head inputs
+    let qs: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(&[w, dh], 1.0, &mut rng)).collect();
+    let ks: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(&[w, dh], 1.0, &mut rng)).collect();
+    let vs: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(&[w, dh], 1.0, &mut rng)).collect();
+
+    let bench = |f: &mut dyn FnMut()| -> f64 {
+        // warmup
+        f();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+
+    let mut sink = 0.0f32;
+    let t_naive = bench(&mut || {
+        for h in 0..heads {
+            let s = qkt_coo_naive(&qs[h], &ks[h], &pattern, scale);
+            // naive softmax over entries then AV
+            let mut p = s.clone();
+            for i in 0..pattern.n {
+                let (lo, hi) = (pattern.row_ptr[i] as usize, pattern.row_ptr[i + 1] as usize);
+                let row = &mut p[lo..hi];
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut l = 0.0;
+                for x in row.iter_mut() {
+                    *x = (*x - m).exp();
+                    l += *x;
+                }
+                for x in row.iter_mut() {
+                    *x /= l;
+                }
+            }
+            let o = av_coo_naive(&p, &pattern, &vs[h]);
+            sink += o.data()[0];
+        }
+    });
+    let t_opt = bench(&mut || {
+        for h in 0..heads {
+            let o = attention_sparse_opt(&qs[h], &ks[h], &vs[h], &pattern, scale);
+            sink += o.o.data()[0];
+        }
+    });
+    let t_dense = bench(&mut || {
+        for h in 0..heads {
+            let o = attention_dense_masked(&qs[h], &ks[h], &vs[h], &pattern, scale);
+            sink += o.o.data()[0];
+        }
+    });
+    std::hint::black_box(sink);
+
+    let mut printer = TablePrinter::new(&["impl", "time (us)", "vs naive", "vs dense"]);
+    for (name, t) in [("naive sparse", t_naive), ("optimized sparse", t_opt), ("dense masked", t_dense)]
+    {
+        printer.row(vec![
+            name.to_string(),
+            format!("{:.1}", t * 1e6),
+            format!("{:.2}x", t_naive / t),
+            format!("{:.2}x", t_dense / t),
+        ]);
+    }
+    let mut text = String::from(
+        "Fig 10b — sparse component: naive vs optimized vs dense (W=64, 7B head dims)\n\
+         (a) real wall-clock on this host's kernels\n\n",
+    );
+    text.push_str(&printer.render());
+    text.push_str(&format!(
+        "\ndraft-span density: {:.1}% ({} of {} pairs need computing)\n",
+        pattern.density() * 100.0,
+        pattern.nnz(),
+        w * w
+    ));
+
+    // (b) NX-simulator-priced version. The paper's ordering (naive sparse
+    // SLOWER than dense) hinges on the CTranslate2/NEON dense GEMM running
+    // ~8x closer to peak than scalar gather code — a hardware/library gap a
+    // single-ISA host cannot exhibit. Efficiency tiers below are calibrated
+    // to the paper's measured ratios (3.49x, 1.90x) and documented in
+    // DESIGN.md §2.
+    let cpu = crate::hcmp::unit::UnitSpec::jetson_nx_cpu();
+    let flops_sparse = 4.0 * pattern.nnz() as f64 * heads as f64 * dh as f64;
+    let flops_dense = 4.0 * (w * w) as f64 * heads as f64 * dh as f64;
+    let (eff_dense, eff_opt, eff_naive) = (0.95, 0.115, 0.033);
+    let sim = (
+        flops_sparse / (cpu.peak_flops * eff_naive),
+        flops_sparse / (cpu.peak_flops * eff_opt),
+        flops_dense / (cpu.peak_flops * eff_dense),
+    );
+    let mut p2 = TablePrinter::new(&["impl", "sim time (us)", "vs opt"]);
+    p2.row(vec!["naive sparse".into(), format!("{:.1}", sim.0 * 1e6), format!("{:.2}x", sim.0 / sim.1)]);
+    p2.row(vec!["optimized sparse".into(), format!("{:.1}", sim.1 * 1e6), "1.00x".into()]);
+    p2.row(vec!["dense masked".into(), format!("{:.1}", sim.2 * 1e6), format!("{:.2}x", sim.2 / sim.1)]);
+    text.push_str("\n(b) Jetson-NX-simulator-priced (paper: naive 3.49x, dense 1.90x of optimized;\n    the naive-slower-than-dense inversion needs the NEON-library FLOP-rate gap)\n\n");
+    text.push_str(&p2.render());
+
+    Fig10bOutcome { text, t_naive, t_opt, t_dense, sim }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reproduces_paper_within_5pct() {
+        let out = table1(20_000, false);
+        for (name, per_width) in &out.rows {
+            let target = PAPER_TABLE1.iter().find(|t| t.name == name).unwrap();
+            for (i, (_e, measured)) in per_width.iter().enumerate() {
+                let want = target.acceptance[i];
+                assert!(
+                    (measured - want).abs() / want < 0.05,
+                    "{name} width idx {i}: measured {measured:.3} vs paper {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fig9_shapes_hold() {
+        let out = fig9(256);
+        // headline in band around the paper's 7.6x
+        assert!(
+            (5.5..9.5).contains(&out.headline_speedup),
+            "headline {:.2}",
+            out.headline_speedup
+        );
+        for (name, rows) in &out.series {
+            // Ghidorah wins over Medusa and Medusa+EM at every width.
+            // Medusa+EM may dip marginally below GPU-only Medusa at w=64
+            // (the CPU's sweet spot is exceeded; the Megatron all-reduce
+            // overhead then eats the parallel gain).
+            for (w, vals) in rows {
+                assert!(vals[3] >= vals[2] && vals[2] >= vals[1] * 0.95,
+                    "{name} w={w}: ordering violated {vals:?}");
+            }
+            // Ghidorah peaks at 16; Medusa peaks at 64
+            let best_ghid = rows.iter().max_by(|a, b| a.1[3].partial_cmp(&b.1[3]).unwrap()).unwrap().0;
+            let best_medusa = rows.iter().max_by(|a, b| a.1[1].partial_cmp(&b.1[1]).unwrap()).unwrap().0;
+            assert_eq!(best_ghid, 16, "{name}: Ghidorah sweet spot");
+            assert_eq!(best_medusa, 64, "{name}: Medusa sweet spot");
+        }
+    }
+
+    #[test]
+    fn fig10a_dynamic_wins_at_long_context() {
+        let out = fig10a();
+        let (_, s256, d256) = out.rows[0];
+        let (_, s4096, d4096) = *out.rows.last().unwrap();
+        assert!(d256 <= s256 * 1.001);
+        assert!(d4096 < s4096, "dynamic must win at 4096");
+        // improvement grows with context
+        let gain_small = s256 / d256;
+        let gain_large = s4096 / d4096;
+        assert!(gain_large >= gain_small, "gain should grow with ctx: {gain_small} vs {gain_large}");
+    }
+
+    #[test]
+    fn fig10b_ordering_matches_paper() {
+        let out = fig10b(3);
+        // host wall-clock: optimized sparse must dominate both baselines,
+        // and the opt-vs-naive factor should be near the paper's 3.49x
+        assert!(out.t_opt < out.t_dense, "optimized sparse must beat dense");
+        assert!(out.t_opt < out.t_naive, "optimized sparse must beat naive");
+        // the quantitative band only holds for optimized builds (debug
+        // bounds-checks distort the naive/opt ratio)
+        if !cfg!(debug_assertions) {
+            let naive_ratio = out.t_naive / out.t_opt;
+            assert!((2.0..8.0).contains(&naive_ratio), "opt-vs-naive ratio {naive_ratio}");
+        }
+        // simulator-priced: full paper ordering (naive > dense > opt)
+        let (n, o, d) = out.sim;
+        assert!(n > d && d > o, "simulated ordering broken: naive {n}, dense {d}, opt {o}");
+        assert!((n / o - 3.49).abs() < 0.6, "naive/opt {} vs paper 3.49", n / o);
+        assert!((d / o - 1.90).abs() < 0.5, "dense/opt {} vs paper 1.90", d / o);
+    }
+}

@@ -1,0 +1,11 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§IV). Shared by the CLI (`ghidorah bench <id>`) and the
+//! `rust/benches/*` bench binaries.
+
+pub mod ablation;
+pub mod experiments;
+pub mod table;
+
+pub use ablation::ablation;
+pub use experiments::{fig10a, fig10b, fig9, table1};
+pub use table::TablePrinter;

@@ -1,0 +1,86 @@
+//! Serving metrics: request latency, decode throughput, acceptance lengths.
+
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::{OnlineStats, Samples};
+
+#[derive(Default)]
+struct Inner {
+    requests: u64,
+    tokens_out: u64,
+    decode_steps: u64,
+    latency_ms: Samples,
+    acceptance: OnlineStats,
+    decode_time_s: f64,
+}
+
+/// Thread-safe metrics sink shared by the scheduler and the server.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(
+        &self,
+        tokens: usize,
+        steps: usize,
+        latency_s: f64,
+        mean_acceptance: f64,
+        decode_time_s: f64,
+    ) {
+        let mut m = self.inner.lock().unwrap();
+        m.requests += 1;
+        m.tokens_out += tokens as u64;
+        m.decode_steps += steps as u64;
+        m.latency_ms.push(latency_s * 1e3);
+        if steps > 0 {
+            m.acceptance.push(mean_acceptance);
+        }
+        m.decode_time_s += decode_time_s;
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Snapshot as JSON (served by the `stats` command).
+    pub fn snapshot(&self) -> Json {
+        let mut m = self.inner.lock().unwrap();
+        let thr = if m.decode_time_s > 0.0 { m.tokens_out as f64 / m.decode_time_s } else { 0.0 };
+        let (p50, p95) = (m.latency_ms.p50(), m.latency_ms.p95());
+        Json::obj(vec![
+            ("requests", Json::num(m.requests as f64)),
+            ("tokens_out", Json::num(m.tokens_out as f64)),
+            ("decode_steps", Json::num(m.decode_steps as f64)),
+            ("decode_tokens_per_s", Json::num(thr)),
+            ("mean_acceptance", Json::num(m.acceptance.mean())),
+            ("latency_ms_p50", Json::num(p50)),
+            ("latency_ms_p95", Json::num(p95)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::new();
+        m.record_request(10, 5, 0.100, 2.0, 0.08);
+        m.record_request(20, 8, 0.200, 2.5, 0.15);
+        let j = m.snapshot();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("tokens_out").unwrap().as_usize(), Some(30));
+        let thr = j.get("decode_tokens_per_s").unwrap().as_f64().unwrap();
+        assert!((thr - 30.0 / 0.23).abs() < 1e-6);
+        let acc = j.get("mean_acceptance").unwrap().as_f64().unwrap();
+        assert!((acc - 2.25).abs() < 1e-9);
+    }
+}

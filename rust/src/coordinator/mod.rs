@@ -1,0 +1,14 @@
+//! The Layer-3 serving coordinator: request scheduling, decode-engine
+//! dispatch, metrics, and the TCP front-end.
+//!
+//! Single-sample semantics per the paper (end-user devices process one
+//! request at a time); the scheduler serializes requests onto the engine
+//! worker while the server accepts connections concurrently.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+
+pub use metrics::Metrics;
+pub use scheduler::{EngineChoice, Request, Response, Scheduler};
+pub use server::Server;

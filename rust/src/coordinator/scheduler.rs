@@ -1,0 +1,243 @@
+//! Request scheduler: serializes decode work onto a single engine worker
+//! (single-sample inference, per the paper's end-user scenario) while
+//! accepting requests from many connections.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::kv_cache::KvCache;
+use crate::model::tokenizer::ByteTokenizer;
+use crate::model::ModelConfig;
+use crate::spec::controller::{DecodeMode, SpeculativeController, StepExecutor};
+use crate::spec::tree::VerificationTree;
+
+use super::metrics::Metrics;
+
+/// Which decode engine a request wants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineChoice {
+    Sequential,
+    /// Medusa tree verification with the ARCA tree (speculative).
+    Ghidorah,
+}
+
+impl EngineChoice {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "sequential" | "seq" => Some(Self::Sequential),
+            "ghidorah" | "medusa" | "speculative" => Some(Self::Ghidorah),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new: usize,
+    pub engine: EngineChoice,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: usize,
+    pub steps: usize,
+    pub mean_acceptance: f64,
+    pub latency_s: f64,
+}
+
+type Job = (Request, mpsc::Sender<Result<Response, String>>);
+
+/// The scheduler owns the engine on a worker thread; `submit` is
+/// thread-safe and blocks until the response is ready.
+pub struct Scheduler {
+    tx: mpsc::Sender<Job>,
+    pub metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spawn the worker around any step executor. `tree` is the ARCA
+    /// verification tree used for `EngineChoice::Ghidorah`.
+    ///
+    /// The executor is *constructed inside the worker thread* by `factory`:
+    /// PJRT handles (the `xla` crate's client/buffers) are not `Send`, so
+    /// the engine must be born on the thread that uses it.
+    pub fn spawn<E, F>(factory: F, tree: VerificationTree, prefill_width: usize, top_k: usize) -> Self
+    where
+        E: StepExecutor + 'static,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let metrics = Arc::new(Metrics::new());
+        let metrics_w = Arc::clone(&metrics);
+        let worker = std::thread::Builder::new()
+            .name("ghidorah-engine".into())
+            .spawn(move || {
+                let mut engine = match factory() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        // drain the queue reporting the startup failure
+                        while let Ok((_req, reply)) = rx.recv() {
+                            let _ = reply.send(Err(format!("engine startup failed: {e:#}")));
+                        }
+                        return;
+                    }
+                };
+                let tokenizer = ByteTokenizer::new();
+                let cfg: ModelConfig = engine.cfg().clone();
+                while let Ok((req, reply)) = rx.recv() {
+                    let started = Instant::now();
+                    let result = run_one(
+                        &mut engine,
+                        &cfg,
+                        &tokenizer,
+                        &req,
+                        &tree,
+                        prefill_width,
+                        top_k,
+                    );
+                    let out = match result {
+                        Ok(mut resp) => {
+                            resp.latency_s = started.elapsed().as_secs_f64();
+                            metrics_w.record_request(
+                                resp.tokens,
+                                resp.steps,
+                                resp.latency_s,
+                                resp.mean_acceptance,
+                                resp.latency_s, // single-sample: decode dominates
+                            );
+                            Ok(resp)
+                        }
+                        Err(e) => Err(format!("{e:#}")),
+                    };
+                    let _ = reply.send(out);
+                }
+            })
+            .expect("spawn engine worker");
+        Self { tx, metrics, worker: Some(worker) }
+    }
+
+    /// Submit a request and wait for its response.
+    pub fn submit(&self, req: Request) -> Result<Response, String> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send((req, reply_tx)).map_err(|_| "scheduler shut down".to_string())?;
+        reply_rx.recv().map_err(|_| "engine worker died".to_string())?
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // close the queue, then join the worker
+        let (dummy_tx, _) = mpsc::channel::<Job>();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn run_one<E: StepExecutor>(
+    engine: &mut E,
+    cfg: &ModelConfig,
+    tokenizer: &ByteTokenizer,
+    req: &Request,
+    tree: &VerificationTree,
+    prefill_width: usize,
+    top_k: usize,
+) -> Result<Response> {
+    let prompt = tokenizer.encode(&req.prompt);
+    if let Some(&bad) = prompt.iter().find(|&&t| t as usize >= cfg.vocab) {
+        anyhow::bail!("token {bad} out of vocabulary ({} slots)", cfg.vocab);
+    }
+    let mode = match req.engine {
+        EngineChoice::Sequential => DecodeMode::Sequential,
+        EngineChoice::Ghidorah => DecodeMode::Speculative(tree.clone()),
+    };
+    let mut cache = KvCache::new(cfg);
+    let max_new = req.max_new.min(cache.remaining().saturating_sub(prompt.len() + tree.width()));
+    let mut ctl = SpeculativeController::new(engine, prefill_width, top_k);
+    let out = ctl.generate(&prompt, max_new, &mode, &mut cache)?;
+    Ok(Response {
+        id: req.id,
+        text: tokenizer.decode(&out.tokens),
+        tokens: out.tokens.len(),
+        steps: out.steps,
+        mean_acceptance: out.mean_acceptance(),
+        latency_s: 0.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::RustModel;
+    use crate::model::weights::Weights;
+
+    fn sched() -> Scheduler {
+        // byte tokenizer emits ids up to 257 -> needs the full tiny vocab
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4)
+    }
+
+    #[test]
+    fn serves_sequential_request() {
+        let s = sched();
+        let resp = s
+            .submit(Request {
+                id: 1,
+                prompt: "ab".into(),
+                max_new: 6,
+                engine: EngineChoice::Sequential,
+            })
+            .unwrap();
+        assert_eq!(resp.id, 1);
+        assert_eq!(resp.tokens, 6);
+        assert!(resp.latency_s > 0.0);
+        assert_eq!(s.metrics.requests(), 1);
+    }
+
+    #[test]
+    fn speculative_and_sequential_agree() {
+        let s = sched();
+        let a = s
+            .submit(Request { id: 1, prompt: "xy".into(), max_new: 8, engine: EngineChoice::Sequential })
+            .unwrap();
+        let b = s
+            .submit(Request { id: 2, prompt: "xy".into(), max_new: 8, engine: EngineChoice::Ghidorah })
+            .unwrap();
+        assert_eq!(a.text, b.text, "engines disagreed");
+        assert!(b.steps <= a.steps);
+    }
+
+    #[test]
+    fn concurrent_submissions_serialize() {
+        let s = Arc::new(sched());
+        let mut handles = vec![];
+        for i in 0..6 {
+            let s2 = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                s2.submit(Request {
+                    id: i,
+                    prompt: "hi".into(),
+                    max_new: 4,
+                    engine: EngineChoice::Sequential,
+                })
+                .unwrap()
+            }));
+        }
+        for h in handles {
+            let r = h.join().unwrap();
+            assert_eq!(r.tokens, 4);
+        }
+        assert_eq!(s.metrics.requests(), 6);
+    }
+}

@@ -1,0 +1,235 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!   {"id": 1, "prompt": "hello", "max_new": 32, "engine": "ghidorah"}
+//!   -> {"id": 1, "text": "...", "tokens": 32, "steps": 12,
+//!       "mean_acceptance": 2.6, "latency_ms": 41.2}
+//!   {"cmd": "stats"}    -> metrics snapshot
+//!   {"cmd": "shutdown"} -> stops the listener
+//!
+//! Connections are handled on a thread pool; decode work is serialized by
+//! the `Scheduler` (single-sample inference).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use super::scheduler::{EngineChoice, Request, Scheduler};
+use crate::util::json::Json;
+use crate::util::threadpool::ThreadPool;
+
+pub struct Server {
+    scheduler: Arc<Scheduler>,
+    pool: ThreadPool,
+    stop: Arc<AtomicBool>,
+}
+
+impl Server {
+    pub fn new(scheduler: Scheduler, workers: usize) -> Self {
+        Self {
+            scheduler: Arc::new(scheduler),
+            pool: ThreadPool::new(workers),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
+
+    pub fn scheduler(&self) -> &Arc<Scheduler> {
+        &self.scheduler
+    }
+
+    /// Bind and serve until a shutdown command arrives. Returns the bound
+    /// address via `on_ready` (port 0 picks a free port).
+    pub fn serve(&self, addr: &str, on_ready: impl FnOnce(std::net::SocketAddr)) -> Result<()> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        listener.set_nonblocking(false)?;
+        on_ready(listener.local_addr()?);
+        // accept loop; shutdown flag checked via a self-connection kick
+        for conn in listener.incoming() {
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let sched = Arc::clone(&self.scheduler);
+            let stop = Arc::clone(&self.stop);
+            self.pool.execute(move || {
+                let _ = handle_conn(stream, &sched, &stop);
+            });
+        }
+        Ok(())
+    }
+
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.stop)
+    }
+}
+
+fn handle_conn(stream: TcpStream, sched: &Scheduler, stop: &AtomicBool) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    // poll with a read timeout so idle connections release their worker
+    // when the server shuts down (otherwise pool Drop would deadlock).
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) => {}
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let line = line.trim().to_string();
+        let reply = match Json::parse(&line) {
+            Err(e) => Json::obj(vec![("error", Json::str(format!("bad json: {e}")))]),
+            Ok(msg) => {
+                if let Some(cmd) = msg.get("cmd").and_then(Json::as_str) {
+                    match cmd {
+                        "stats" => sched.metrics.snapshot(),
+                        "ping" => Json::obj(vec![("pong", Json::Bool(true))]),
+                        "shutdown" => {
+                            stop.store(true, Ordering::SeqCst);
+                            // kick the accept loop with a dummy connection
+                            let _ = writer.write_all(b"{\"ok\":true}\n");
+                            return Ok(());
+                        }
+                        other => Json::obj(vec![(
+                            "error",
+                            Json::str(format!("unknown cmd '{other}'")),
+                        )]),
+                    }
+                } else {
+                    handle_request(&msg, sched)
+                }
+            }
+        };
+        writer.write_all(reply.dump().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn handle_request(msg: &Json, sched: &Scheduler) -> Json {
+    let id = msg.get("id").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let Some(prompt) = msg.get("prompt").and_then(Json::as_str) else {
+        return Json::obj(vec![("error", Json::str("missing 'prompt'"))]);
+    };
+    let max_new = msg.get("max_new").and_then(Json::as_usize).unwrap_or(32);
+    let engine = msg
+        .get("engine")
+        .and_then(Json::as_str)
+        .and_then(EngineChoice::parse)
+        .unwrap_or(EngineChoice::Ghidorah);
+    match sched.submit(Request { id, prompt: prompt.to_string(), max_new, engine }) {
+        Ok(r) => Json::obj(vec![
+            ("id", Json::num(r.id as f64)),
+            ("text", Json::str(r.text)),
+            ("tokens", Json::num(r.tokens as f64)),
+            ("steps", Json::num(r.steps as f64)),
+            ("mean_acceptance", Json::num(r.mean_acceptance)),
+            ("latency_ms", Json::num(r.latency_s * 1e3)),
+        ]),
+        Err(e) => Json::obj(vec![("id", Json::num(id as f64)), ("error", Json::str(e))]),
+    }
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        Ok(Self { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn roundtrip(&mut self, msg: &Json) -> Result<Json> {
+        self.stream.write_all(msg.dump().as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        self.stream.flush()?;
+        let mut reader = BufReader::new(self.stream.try_clone()?);
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim())
+            .map_err(|e| anyhow::anyhow!("bad server reply: {e}: {line}"))?)
+    }
+
+    pub fn request(&mut self, id: u64, prompt: &str, max_new: usize, engine: &str) -> Result<Json> {
+        self.roundtrip(&Json::obj(vec![
+            ("id", Json::num(id as f64)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+            ("engine", Json::str(engine)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::RustModel;
+    use crate::model::weights::Weights;
+    use crate::model::ModelConfig;
+    use crate::spec::tree::VerificationTree;
+    use std::sync::mpsc;
+
+    fn spawn_server() -> (std::net::SocketAddr, std::thread::JoinHandle<()>) {
+        let cfg = ModelConfig::tiny(); // byte tokenizer needs the 512 vocab
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let sched = Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4);
+        let server = Server::new(sched, 2);
+        let (tx, rx) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            server.serve("127.0.0.1:0", move |addr| tx.send(addr).unwrap()).unwrap();
+        });
+        (rx.recv().unwrap(), handle)
+    }
+
+    fn shutdown(addr: std::net::SocketAddr) {
+        let mut c = Client::connect(addr).unwrap();
+        let _ = c.roundtrip(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
+        // kick the accept loop
+        let _ = TcpStream::connect(addr);
+    }
+
+    #[test]
+    fn end_to_end_request_response() {
+        let (addr, handle) = spawn_server();
+        let mut c = Client::connect(addr).unwrap();
+        let r = c.request(7, "hello", 5, "sequential").unwrap();
+        assert_eq!(r.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(r.get("tokens").unwrap().as_usize(), Some(5));
+        assert!(r.get("error").is_none());
+
+        let stats = c.roundtrip(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+        assert_eq!(stats.get("requests").unwrap().as_usize(), Some(1));
+
+        shutdown(addr);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn bad_input_reports_error() {
+        let (addr, handle) = spawn_server();
+        let mut c = Client::connect(addr).unwrap();
+        let r = c.roundtrip(&Json::obj(vec![("nonsense", Json::num(1.0))])).unwrap();
+        assert!(r.get("error").is_some());
+        shutdown(addr);
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,194 @@
+//! Roofline op cost model: time = max(compute, memory) + launch overhead,
+//! with wave quantization on the token dimension and sweet-spot decay on the
+//! verification width.
+//!
+//! All weights are priced as fp16 (the paper's FasterTransformer/CTranslate2
+//! deployment); activations are small at single-sample widths and are folded
+//! into the weight traffic term.
+
+use super::unit::UnitSpec;
+
+pub const FP16: f64 = 2.0; // bytes per element
+
+/// One schedulable operation of a decode step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    /// Dense GEMM: [m, k] x [k, n] (m = token/width dimension — wave
+    /// quantized; weight traffic k*n).
+    Gemm { m: usize, k: usize, n: usize },
+    /// Dense attention span of one group of heads against the KV cache:
+    /// width m queries x ctx keys, heads h of dim dh. Traffic = KV cache.
+    AttnDense { m: usize, ctx: usize, heads: usize, dh: usize },
+    /// Sparse (tree) attention span over the draft block: nnz scored pairs.
+    AttnSparse { nnz: usize, heads: usize, dh: usize },
+    /// Same work shaped as dense with a mask (the masked-dense fallback the
+    /// paper's baselines use for the draft span).
+    AttnDraftDense { m: usize, heads: usize, dh: usize },
+    /// All-reduce style combine of activations (Megatron sync): read both
+    /// halves, write merged — 3x activation traffic plus a sync.
+    AllReduce { elems: usize },
+    /// Elementwise epilogue (norms, residuals, activation functions).
+    Elementwise { elems: usize },
+}
+
+impl Op {
+    /// FLOPs of the op.
+    pub fn flops(&self) -> f64 {
+        match *self {
+            Op::Gemm { m, k, n } => 2.0 * m as f64 * k as f64 * n as f64,
+            Op::AttnDense { m, ctx, heads, dh } => {
+                // QK^T + AV over the cache span
+                4.0 * m as f64 * ctx as f64 * heads as f64 * dh as f64
+            }
+            Op::AttnSparse { nnz, heads, dh } => 4.0 * nnz as f64 * heads as f64 * dh as f64,
+            Op::AttnDraftDense { m, heads, dh } => {
+                4.0 * m as f64 * m as f64 * heads as f64 * dh as f64
+            }
+            Op::AllReduce { elems } => elems as f64,
+            Op::Elementwise { elems } => elems as f64,
+        }
+    }
+
+    /// Bytes of DRAM traffic (dominant streams only).
+    pub fn bytes(&self) -> f64 {
+        match *self {
+            // weight matrix k*n once + activations in/out
+            Op::Gemm { m, k, n } => FP16 * (k as f64 * n as f64 + m as f64 * (k + n) as f64),
+            // KV cache streamed once
+            Op::AttnDense { m, ctx, heads, dh } => {
+                FP16 * (2.0 * ctx as f64 * heads as f64 * dh as f64
+                    + 2.0 * m as f64 * heads as f64 * dh as f64)
+            }
+            // draft K/V streamed once (reused across entries) + COO values
+            Op::AttnSparse { nnz, heads, dh } => {
+                let w_upper = nnz; // draft block rows touched, upper bound
+                FP16 * (2.0 * (w_upper.min(64)) as f64 * heads as f64 * dh as f64
+                    + nnz as f64 * heads as f64)
+            }
+            Op::AttnDraftDense { m, heads, dh } => {
+                FP16 * (2.0 * m as f64 * heads as f64 * dh as f64
+                    + m as f64 * m as f64 * heads as f64)
+            }
+            Op::AllReduce { elems } => FP16 * 3.0 * elems as f64,
+            Op::Elementwise { elems } => FP16 * 2.0 * elems as f64,
+        }
+    }
+
+    /// The token/width dimension subject to wave quantization.
+    pub(crate) fn width_dim(&self) -> Option<usize> {
+        match *self {
+            Op::Gemm { m, .. } => Some(m),
+            Op::AttnDense { m, .. } => Some(m),
+            Op::AttnDraftDense { m, .. } => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Compute time on `unit` at verification width `w`, given achievable
+    /// bandwidth `bw` (bytes/s, already contention-adjusted).
+    pub fn time_on(&self, unit: &UnitSpec, w: usize, bw: f64) -> f64 {
+        let flops = match self.width_dim() {
+            Some(m) if m > 0 => {
+                let q = unit.quantize_rows(m) as f64 / m as f64;
+                self.flops() * q
+            }
+            _ => self.flops(),
+        };
+        let compute = flops / unit.effective_flops(w);
+        let memory = self.bytes() / bw;
+        unit.launch_overhead + compute.max(memory)
+    }
+}
+
+/// Total time of a unit's op list at width `w` and bandwidth `bw`.
+///
+/// List-level roofline: within one unit, weight prefetch overlaps compute
+/// (double-buffered streaming, as FasterTransformer/CTranslate2 do), so the
+/// list costs max(Σ compute, Σ memory) plus per-kernel launch overhead —
+/// not the sum of per-op maxima.
+pub fn sum_time(ops: &[Op], unit: &UnitSpec, w: usize, bw: f64) -> f64 {
+    let mut compute = 0.0f64;
+    let mut memory = 0.0f64;
+    let mut launch = 0.0f64;
+    for op in ops {
+        let flops = match op.width_dim() {
+            Some(m) if m > 0 => op.flops() * unit.quantize_rows(m) as f64 / m as f64,
+            _ => op.flops(),
+        };
+        // Sweet-spot decay models register/L1 pressure of wide GEMM tiles
+        // (the paper's §IV-C CPU observation). Streaming attention spans do
+        // not tile on the width dimension, so they run at peak.
+        let rate = if matches!(op, Op::Gemm { .. }) {
+            unit.effective_flops(w)
+        } else {
+            unit.peak_flops
+        };
+        compute += flops / rate;
+        memory += op.bytes() / bw;
+        launch += unit.launch_overhead;
+    }
+    launch + compute.max(memory)
+}
+
+/// Aggregate bandwidth demand (bytes) of an op list.
+pub fn sum_bytes(ops: &[Op]) -> f64 {
+    ops.iter().map(Op::bytes).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hcmp::unit::UnitSpec;
+
+    #[test]
+    fn gemm_flops_and_bytes() {
+        let g = Op::Gemm { m: 1, k: 4096, n: 4096 };
+        assert!((g.flops() - 2.0 * 4096.0 * 4096.0).abs() < 1.0);
+        assert!(g.bytes() > FP16 * 4096.0 * 4096.0);
+    }
+
+    #[test]
+    fn sequential_decode_is_memory_bound_on_nx() {
+        // w=1 GEMM at 7B dims: memory >> compute on the NX GPU
+        let gpu = UnitSpec::jetson_nx_gpu();
+        let g = Op::Gemm { m: 1, k: 4096, n: 4096 };
+        let t = g.time_on(&gpu, 1, gpu.solo_bw);
+        let mem_t = g.bytes() / gpu.solo_bw;
+        assert!((t - gpu.launch_overhead - mem_t).abs() / mem_t < 0.05, "not memory bound");
+    }
+
+    #[test]
+    fn verification_stays_under_memory_roof_through_64() {
+        // the §IV-C observation: on the NX GPU, widths 4..64 ride the same
+        // memory-bound roofline (compute hides under the weight stream)
+        let gpu = UnitSpec::jetson_nx_gpu();
+        let g = Op::Gemm { m: 64, k: 4096, n: 4096 };
+        let compute_t = g.flops() / gpu.peak_flops;
+        let mem_t = g.bytes() / gpu.solo_bw;
+        assert!(compute_t < mem_t, "w=64 must still hide under the weight stream");
+        // ... but very wide batches eventually become compute bound
+        let g = Op::Gemm { m: 512, k: 4096, n: 4096 };
+        assert!(g.flops() / gpu.peak_flops > g.bytes() / gpu.solo_bw);
+    }
+
+    #[test]
+    fn gpu_time_nearly_flat_1_to_16() {
+        // the paper's observation: GPU keeps similar step time for w in 4..64
+        let gpu = UnitSpec::jetson_nx_gpu();
+        let t1 = Op::Gemm { m: 1, k: 4096, n: 4096 }.time_on(&gpu, 1, gpu.solo_bw);
+        let t16 = Op::Gemm { m: 16, k: 4096, n: 4096 }.time_on(&gpu, 16, gpu.solo_bw);
+        assert!(t16 / t1 < 1.6, "t16/t1 = {}", t16 / t1);
+    }
+
+    #[test]
+    fn sparse_cheaper_than_masked_dense() {
+        let cpu = UnitSpec::jetson_nx_cpu();
+        // w=64 draft span, ~22% density (typical ARCA tree)
+        let sparse = Op::AttnSparse { nnz: 900, heads: 32, dh: 128 };
+        let dense = Op::AttnDraftDense { m: 64, heads: 32, dh: 128 };
+        assert!(
+            sparse.time_on(&cpu, 64, cpu.solo_bw) < dense.time_on(&cpu, 64, cpu.solo_bw),
+            "sparse must beat masked dense"
+        );
+    }
+}

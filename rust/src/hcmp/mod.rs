@@ -1,0 +1,21 @@
+//! Hetero-Core Model Parallelism (HCMP) — the paper's §III-B runtime
+//! architecture, plus the calibrated hetero-core *simulator* that stands in
+//! for the Jetson Xavier NX testbed (see DESIGN.md §2, substitution table).
+//!
+//! The simulator executes schedules in *virtual time* under a roofline cost
+//! model with wave quantization and unified-memory bandwidth contention.
+//! The math behind the schedules runs for real elsewhere (`model::forward`,
+//! `runtime::Runtime`); the simulator prices paper-scale (Vicuna-7B)
+//! configurations that cannot be materialized on this host.
+
+pub mod cost;
+pub mod partition;
+pub mod schedule;
+pub mod simulator;
+pub mod unit;
+
+pub use cost::Op;
+pub use partition::{AttentionSplit, PartitionPlan};
+pub use schedule::{EngineKind, StepSchedule};
+pub use simulator::{SimReport, Simulator};
+pub use unit::{UnifiedMemory, UnitSpec};

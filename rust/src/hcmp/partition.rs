@@ -1,0 +1,95 @@
+//! Partition plans: how a decode step's work is split across the units.
+//!
+//! * Linear layers — HCMP splits **every** linear by columns (§III-B.1):
+//!   each unit reads the full input activation from unified memory,
+//!   multiplies by its column shard, and writes its own output region; no
+//!   all-reduce and no extra activation traffic. `linear_ratio` is the
+//!   fraction of columns assigned to the GPU.
+//! * Attention — split by **computation affinity** (§III-B.2): the dense
+//!   span (vs. the KV cache) prefers the GPU, the sparse span (tree-masked
+//!   draft block) prefers the CPU; a boundary fraction optionally moves the
+//!   densest left-boundary of the sparse span onto the GPU for balance, and
+//!   dynamic partitioning re-balances the *context* dimension as the cache
+//!   grows (Fig 10a).
+
+/// Attention-module split for one decode step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AttentionSplit {
+    /// Fraction of the dense (cache) span's context columns handled by the
+    /// GPU; the rest moves to the CPU (dynamic partitioning at long ctx).
+    pub dense_gpu_frac: f64,
+    /// Fraction of the sparse span's work kept on the CPU (the rest — the
+    /// denser left boundary of Fig 3 — joins the GPU's dense span).
+    pub sparse_cpu_frac: f64,
+}
+
+impl AttentionSplit {
+    /// The paper's *static* affinity split: all dense on GPU, all sparse on CPU.
+    pub fn static_affinity() -> Self {
+        Self { dense_gpu_frac: 1.0, sparse_cpu_frac: 1.0 }
+    }
+}
+
+/// Full partition plan for one engine configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartitionPlan {
+    /// Fraction of every linear's columns on the GPU (1.0 = GPU only).
+    pub linear_ratio: f64,
+    pub attention: AttentionSplit,
+    /// Megatron-style partitioning (Medusa+EM baseline): pairs of linears
+    /// are split column-then-row with an all-reduce between pairs, and the
+    /// attention is split by heads with the draft span handled as masked
+    /// dense. HCMP (false) splits all linears by columns with no all-reduce.
+    pub megatron_style: bool,
+}
+
+impl PartitionPlan {
+    /// Single-unit plan (Sequential / Medusa baselines).
+    pub fn gpu_only() -> Self {
+        Self {
+            linear_ratio: 1.0,
+            attention: AttentionSplit { dense_gpu_frac: 1.0, sparse_cpu_frac: 0.0 },
+            megatron_style: false,
+        }
+    }
+
+    /// HCMP plan with a given GPU column ratio and static affinity split.
+    pub fn hcmp(linear_ratio: f64) -> Self {
+        Self { linear_ratio, attention: AttentionSplit::static_affinity(), megatron_style: false }
+    }
+
+    /// Medusa+EM baseline: Megatron TP partitioning + zero-copy, ratio from
+    /// isolated execution times (EdgeNN-style), draft span as masked dense.
+    pub fn megatron(linear_ratio: f64) -> Self {
+        Self {
+            linear_ratio,
+            attention: AttentionSplit { dense_gpu_frac: 1.0, sparse_cpu_frac: 0.0 },
+            megatron_style: true,
+        }
+    }
+
+    pub fn is_collaborative(&self) -> bool {
+        self.linear_ratio < 1.0 - 1e-12
+            || self.attention.sparse_cpu_frac > 1e-12
+            || self.attention.dense_gpu_frac < 1.0 - 1e-12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_only_is_not_collaborative() {
+        assert!(!PartitionPlan::gpu_only().is_collaborative());
+        assert!(PartitionPlan::hcmp(0.5).is_collaborative());
+        assert!(PartitionPlan::megatron(0.6).is_collaborative());
+    }
+
+    #[test]
+    fn static_affinity_puts_sparse_on_cpu() {
+        let p = PartitionPlan::hcmp(0.5);
+        assert_eq!(p.attention.sparse_cpu_frac, 1.0);
+        assert_eq!(p.attention.dense_gpu_frac, 1.0);
+    }
+}

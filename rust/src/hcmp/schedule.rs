@@ -1,0 +1,288 @@
+//! Builds the per-unit op schedule of one decode step for each engine, at
+//! paper scale (Vicuna-7B dims) or any other `ModelConfig`.
+//!
+//! A schedule is a list of *phases*; within a phase the two units run
+//! concurrently (sharing DRAM bandwidth), and phases are separated by
+//! dependencies. HCMP's column split needs no sync between consecutive
+//! linears (each unit reads the full activation zero-copy); Megatron-style
+//! plans insert an all-reduce (plus page sync) after every linear pair.
+
+use super::cost::Op;
+use super::partition::PartitionPlan;
+use crate::model::ModelConfig;
+use crate::sparse::CooPattern;
+
+/// Which paper system a schedule models (the Fig 9 series).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Sequential decoding on the GPU (width 1).
+    Sequential,
+    /// Medusa tree verification, GPU only, draft span as masked dense.
+    MedusaGpu,
+    /// Medusa + EdgeNN ratio + Megatron TP partitioning (zero-copy).
+    MedusaEM,
+    /// Ghidorah: HCMP partitioning + ARCA strategy.
+    Ghidorah,
+}
+
+impl EngineKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EngineKind::Sequential => "Sequential",
+            EngineKind::MedusaGpu => "Medusa",
+            EngineKind::MedusaEM => "Medusa+EM",
+            EngineKind::Ghidorah => "Ghidorah",
+        }
+    }
+}
+
+/// One phase: concurrent op lists per unit (index 0 = GPU, 1 = CPU), plus
+/// the number of cross-unit page syncs its boundary costs.
+#[derive(Clone, Debug, Default)]
+pub struct Phase {
+    pub gpu: Vec<Op>,
+    pub cpu: Vec<Op>,
+    pub syncs: usize,
+}
+
+/// The full step schedule.
+#[derive(Clone, Debug, Default)]
+pub struct StepSchedule {
+    pub phases: Vec<Phase>,
+    /// Verification width (for sweet-spot pricing).
+    pub width: usize,
+}
+
+/// Split the columns of an [k x n] linear between GPU and CPU by `ratio`.
+fn split_gemm(m: usize, k: usize, n: usize, ratio: f64, gpu: &mut Vec<Op>, cpu: &mut Vec<Op>) {
+    let n_gpu = ((n as f64) * ratio).round() as usize;
+    let n_cpu = n - n_gpu;
+    if n_gpu > 0 {
+        gpu.push(Op::Gemm { m, k, n: n_gpu });
+    }
+    if n_cpu > 0 {
+        cpu.push(Op::Gemm { m, k, n: n_cpu });
+    }
+}
+
+/// Build the schedule of one decode step.
+///
+/// `ctx` is the committed KV length; `pattern` the draft-span sparsity
+/// (None => width-1 sequential, or masked-dense baselines).
+pub fn build_step(
+    cfg: &ModelConfig,
+    engine: EngineKind,
+    width: usize,
+    ctx: usize,
+    pattern: Option<&CooPattern>,
+    plan: &PartitionPlan,
+) -> StepSchedule {
+    let d = cfg.d_model;
+    let qkv = cfg.qkv_dim();
+    let f = cfg.ffn;
+    let h = cfg.n_heads;
+    let dh = cfg.head_dim;
+    let mut phases = Vec::new();
+
+    let nnz = pattern.map(|p| p.nnz()).unwrap_or(width * (width + 1) / 2);
+
+    for _layer in 0..cfg.n_layers {
+        match engine {
+            EngineKind::Sequential | EngineKind::MedusaGpu => {
+                // everything on the GPU, draft span as masked dense
+                let mut gpu = vec![
+                    Op::Gemm { m: width, k: d, n: 3 * qkv }, // fused QKV
+                    Op::AttnDense { m: width, ctx, heads: h, dh },
+                ];
+                if width > 1 {
+                    gpu.push(Op::AttnDraftDense { m: width, heads: h, dh });
+                }
+                gpu.push(Op::Gemm { m: width, k: qkv, n: d });
+                gpu.push(Op::Elementwise { elems: width * d });
+                gpu.push(Op::Gemm { m: width, k: d, n: 2 * f }); // gate+up
+                gpu.push(Op::Gemm { m: width, k: f, n: d });
+                phases.push(Phase { gpu, cpu: vec![], syncs: 0 });
+            }
+            EngineKind::MedusaEM => {
+                // Megatron TP: attention split by heads (ratio), draft span
+                // masked dense on both; all-reduce after attn-out and after
+                // MLP-down (one per linear pair), each costing a page sync.
+                let r = plan.linear_ratio;
+                let h_gpu = ((h as f64) * r).round() as usize;
+                let h_cpu = h - h_gpu;
+                let mut p1 = Phase::default();
+                split_gemm(width, d, 3 * qkv, r, &mut p1.gpu, &mut p1.cpu);
+                if h_gpu > 0 {
+                    p1.gpu.push(Op::AttnDense { m: width, ctx, heads: h_gpu, dh });
+                    if width > 1 {
+                        p1.gpu.push(Op::AttnDraftDense { m: width, heads: h_gpu, dh });
+                    }
+                }
+                if h_cpu > 0 {
+                    p1.cpu.push(Op::AttnDense { m: width, ctx, heads: h_cpu, dh });
+                    if width > 1 {
+                        p1.cpu.push(Op::AttnDraftDense { m: width, heads: h_cpu, dh });
+                    }
+                }
+                // row-split attn-out GEMM producing partial sums + allreduce
+                p1.gpu.push(Op::Gemm { m: width, k: ((qkv as f64) * r) as usize, n: d });
+                p1.cpu.push(Op::Gemm { m: width, k: qkv - ((qkv as f64) * r) as usize, n: d });
+                p1.gpu.push(Op::AllReduce { elems: width * d });
+                p1.syncs = 1;
+                phases.push(p1);
+
+                let mut p2 = Phase::default();
+                split_gemm(width, d, 2 * f, r, &mut p2.gpu, &mut p2.cpu);
+                p2.gpu.push(Op::Gemm { m: width, k: ((f as f64) * r) as usize, n: d });
+                p2.cpu.push(Op::Gemm { m: width, k: f - ((f as f64) * r) as usize, n: d });
+                p2.gpu.push(Op::AllReduce { elems: width * d });
+                p2.syncs = 1;
+                phases.push(p2);
+            }
+            EngineKind::Ghidorah => {
+                // HCMP: all linears column-split (no all-reduce, zero-copy),
+                // attention by affinity with the ARCA split, sparse span via
+                // the optimized COO kernels on the CPU.
+                let r = plan.linear_ratio;
+                let a = plan.attention;
+                let mut p1 = Phase::default();
+                split_gemm(width, d, 3 * qkv, r, &mut p1.gpu, &mut p1.cpu);
+                // dense span: context columns split dynamically
+                let ctx_gpu = ((ctx as f64) * a.dense_gpu_frac).round() as usize;
+                let ctx_cpu = ctx - ctx_gpu;
+                if ctx_gpu > 0 {
+                    p1.gpu.push(Op::AttnDense { m: width, ctx: ctx_gpu, heads: h, dh });
+                }
+                if ctx_cpu > 0 {
+                    p1.cpu.push(Op::AttnDense { m: width, ctx: ctx_cpu, heads: h, dh });
+                }
+                // sparse span: COO on CPU; left-boundary share joins the GPU
+                // as dense rows
+                let nnz_cpu = ((nnz as f64) * a.sparse_cpu_frac).round() as usize;
+                let nnz_gpu = nnz - nnz_cpu;
+                if nnz_cpu > 0 && width > 1 {
+                    p1.cpu.push(Op::AttnSparse { nnz: nnz_cpu, heads: h, dh });
+                }
+                if nnz_gpu > 0 && width > 1 {
+                    // handled as (partial) masked dense on the GPU
+                    let rows = nnz_gpu.div_ceil(width.max(1));
+                    p1.gpu.push(Op::AttnDraftDense { m: rows.max(1), heads: h, dh });
+                }
+                // online-softmax merge fused into the attn-out read: one sync
+                split_gemm(width, qkv, d, r, &mut p1.gpu, &mut p1.cpu);
+                p1.syncs = 1;
+                phases.push(p1);
+
+                let mut p2 = Phase::default();
+                split_gemm(width, d, 2 * f, r, &mut p2.gpu, &mut p2.cpu);
+                split_gemm(width, f, d, r, &mut p2.gpu, &mut p2.cpu);
+                p2.syncs = 0; // zero-copy column composition, no reduce
+                phases.push(p2);
+            }
+        }
+    }
+
+    // LM head over all W positions (needed to verify every draft token),
+    // plus the Medusa heads at ONE position (the last accepted node is the
+    // only place the next step's candidates are drafted from).
+    let heads_m = cfg.n_medusa;
+    match engine {
+        EngineKind::Sequential | EngineKind::MedusaGpu => {
+            let mut gpu = vec![Op::Gemm { m: width, k: d, n: cfg.vocab }];
+            if engine == EngineKind::MedusaGpu {
+                gpu.push(Op::Gemm { m: 1, k: d, n: heads_m * d });
+                gpu.push(Op::Gemm { m: heads_m, k: d, n: cfg.vocab });
+            }
+            phases.push(Phase { gpu, cpu: vec![], syncs: 0 });
+        }
+        EngineKind::MedusaEM | EngineKind::Ghidorah => {
+            let r = plan.linear_ratio;
+            let mut p = Phase::default();
+            split_gemm(width, d, cfg.vocab, r, &mut p.gpu, &mut p.cpu);
+            split_gemm(1, d, heads_m * d, r, &mut p.gpu, &mut p.cpu);
+            split_gemm(heads_m, d, cfg.vocab, r, &mut p.gpu, &mut p.cpu);
+            phases.push(p);
+        }
+    }
+
+    StepSchedule { phases, width }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::vicuna_7b()
+    }
+
+    #[test]
+    fn sequential_uses_only_gpu() {
+        let s = build_step(&cfg(), EngineKind::Sequential, 1, 256, None, &PartitionPlan::gpu_only());
+        assert!(s.phases.iter().all(|p| p.cpu.is_empty()));
+        assert_eq!(s.width, 1);
+    }
+
+    #[test]
+    fn ghidorah_uses_both_units_without_allreduce() {
+        let pat = CooPattern::from_tree(&[usize::MAX, 0, 0, 1]);
+        let s = build_step(&cfg(), EngineKind::Ghidorah, 4, 256, Some(&pat), &PartitionPlan::hcmp(0.5));
+        assert!(s.phases.iter().any(|p| !p.cpu.is_empty()));
+        let has_allreduce = s
+            .phases
+            .iter()
+            .flat_map(|p| p.gpu.iter().chain(p.cpu.iter()))
+            .any(|o| matches!(o, Op::AllReduce { .. }));
+        assert!(!has_allreduce, "HCMP must not need all-reduce");
+    }
+
+    #[test]
+    fn megatron_has_allreduce_every_pair() {
+        let pat = CooPattern::from_tree(&[usize::MAX, 0, 0, 1]);
+        let s = build_step(&cfg(), EngineKind::MedusaEM, 4, 256, Some(&pat), &PartitionPlan::megatron(0.5));
+        let n_allreduce = s
+            .phases
+            .iter()
+            .flat_map(|p| p.gpu.iter())
+            .filter(|o| matches!(o, Op::AllReduce { .. }))
+            .count();
+        assert_eq!(n_allreduce, 2 * cfg().n_layers);
+    }
+
+    #[test]
+    fn ghidorah_sparse_goes_to_cpu() {
+        let pat = CooPattern::from_tree(&[usize::MAX, 0, 0, 1, 1, 2, 3, 3]);
+        let s = build_step(&cfg(), EngineKind::Ghidorah, 8, 256, Some(&pat), &PartitionPlan::hcmp(0.5));
+        let cpu_sparse = s
+            .phases
+            .iter()
+            .flat_map(|p| p.cpu.iter())
+            .any(|o| matches!(o, Op::AttnSparse { .. }));
+        let gpu_sparse = s
+            .phases
+            .iter()
+            .flat_map(|p| p.gpu.iter())
+            .any(|o| matches!(o, Op::AttnSparse { .. }));
+        assert!(cpu_sparse && !gpu_sparse);
+    }
+
+    #[test]
+    fn total_gemm_flops_conserved_across_plans() {
+        // splitting must not change total linear FLOPs
+        let pat = CooPattern::from_tree(&[usize::MAX, 0]);
+        let flops = |s: &StepSchedule| -> f64 {
+            s.phases
+                .iter()
+                .flat_map(|p| p.gpu.iter().chain(p.cpu.iter()))
+                .filter(|o| matches!(o, Op::Gemm { .. }))
+                .map(|o| o.flops())
+                .sum()
+        };
+        let gpu_only =
+            build_step(&cfg(), EngineKind::MedusaGpu, 2, 128, Some(&pat), &PartitionPlan::gpu_only());
+        let hcmp =
+            build_step(&cfg(), EngineKind::Ghidorah, 2, 128, Some(&pat), &PartitionPlan::hcmp(0.5));
+        let rel = (flops(&gpu_only) - flops(&hcmp)).abs() / flops(&gpu_only);
+        assert!(rel < 0.02, "GEMM flops diverged by {rel}");
+    }
+}

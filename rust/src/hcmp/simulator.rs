@@ -1,0 +1,216 @@
+//! The virtual-time hetero-core simulator: prices a `StepSchedule` on the
+//! calibrated Jetson-NX unit pair under the unified-memory contention model.
+//!
+//! Phase semantics: both units start a phase together; the phase ends when
+//! the slower unit finishes (its boundary is a dependency). Bandwidth within
+//! a phase is allocated by the `UnifiedMemory` model from each unit's demand
+//! rate; page syncs at phase boundaries add the measured NX latency.
+
+use super::cost::{sum_bytes, sum_time};
+use super::schedule::{Phase, StepSchedule};
+use super::unit::{UnifiedMemory, UnitSpec};
+
+/// Simulated timing of one decode step.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub total: f64,
+    pub gpu_busy: f64,
+    pub cpu_busy: f64,
+    pub sync: f64,
+    pub phases: usize,
+}
+
+impl SimReport {
+    /// Utilization of the busier / idler unit (load-balance quality).
+    pub fn balance(&self) -> f64 {
+        if self.gpu_busy.max(self.cpu_busy) == 0.0 {
+            return 1.0;
+        }
+        self.gpu_busy.min(self.cpu_busy) / self.gpu_busy.max(self.cpu_busy)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Simulator {
+    pub gpu: UnitSpec,
+    pub cpu: UnitSpec,
+    pub mem: UnifiedMemory,
+}
+
+impl Simulator {
+    pub fn jetson_nx() -> Self {
+        Self {
+            gpu: UnitSpec::jetson_nx_gpu(),
+            cpu: UnitSpec::jetson_nx_cpu(),
+            mem: UnifiedMemory::jetson_nx(),
+        }
+    }
+
+    /// Price one phase: fixed-point on the bandwidth split (each unit's
+    /// demand rate depends on its time, which depends on its bandwidth).
+    fn phase_time(&self, phase: &Phase, width: usize) -> (f64, f64, f64) {
+        let gpu_bytes = sum_bytes(&phase.gpu);
+        let cpu_bytes = sum_bytes(&phase.cpu);
+
+        // initial guess: solo bandwidths
+        let mut bw = [self.gpu.solo_bw, self.cpu.solo_bw];
+        let mut t = [0.0f64; 2];
+        for _ in 0..8 {
+            t[0] = if phase.gpu.is_empty() { 0.0 } else { sum_time(&phase.gpu, &self.gpu, width, bw[0]) };
+            t[1] = if phase.cpu.is_empty() { 0.0 } else { sum_time(&phase.cpu, &self.cpu, width, bw[1]) };
+            let span = t[0].max(t[1]);
+            if span == 0.0 {
+                break;
+            }
+            // demand rate if the whole phase ran at this span
+            let demands = [
+                if t[0] > 0.0 { (gpu_bytes / span).min(self.gpu.solo_bw) } else { 0.0 },
+                if t[1] > 0.0 { (cpu_bytes / span).min(self.cpu.solo_bw) } else { 0.0 },
+            ];
+            let shared = self.mem.shared_bw(&demands);
+            // cap at solo ability
+            let new_bw = [shared[0].min(self.gpu.solo_bw).max(1.0), shared[1].min(self.cpu.solo_bw).max(1.0)];
+            if (new_bw[0] - bw[0]).abs() / bw[0] < 1e-3 && (new_bw[1] - bw[1]).abs() / bw[1] < 1e-3 {
+                bw = new_bw;
+                break;
+            }
+            bw = new_bw;
+        }
+        t[0] = if phase.gpu.is_empty() { 0.0 } else { sum_time(&phase.gpu, &self.gpu, width, bw[0]) };
+        t[1] = if phase.cpu.is_empty() { 0.0 } else { sum_time(&phase.cpu, &self.cpu, width, bw[1]) };
+        (t[0].max(t[1]), t[0], t[1])
+    }
+
+    /// Simulate a full step schedule.
+    pub fn run(&self, schedule: &StepSchedule) -> SimReport {
+        let mut rep = SimReport { phases: schedule.phases.len(), ..Default::default() };
+        for phase in &schedule.phases {
+            let (span, tg, tc) = self.phase_time(phase, schedule.width);
+            rep.total += span;
+            rep.gpu_busy += tg;
+            rep.cpu_busy += tc;
+            let sync = phase.syncs as f64 * self.mem.sync_latency;
+            rep.total += sync;
+            rep.sync += sync;
+        }
+        rep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hcmp::partition::PartitionPlan;
+    use crate::hcmp::schedule::{build_step, EngineKind};
+    use crate::model::ModelConfig;
+    use crate::sparse::CooPattern;
+    use crate::spec::tree::VerificationTree;
+
+    fn sim() -> Simulator {
+        Simulator::jetson_nx()
+    }
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::vicuna_7b()
+    }
+
+    #[test]
+    fn sequential_step_in_plausible_range() {
+        let s = build_step(&cfg(), EngineKind::Sequential, 1, 256, None, &PartitionPlan::gpu_only());
+        let r = sim().run(&s);
+        // 7B fp16 weights at ~20 GB/s solo: hundreds of ms
+        assert!(r.total > 0.3 && r.total < 3.0, "t_seq = {}", r.total);
+        assert_eq!(r.cpu_busy, 0.0);
+    }
+
+    #[test]
+    fn medusa_gpu_roughly_flat_in_width() {
+        // the paper's §IV-C observation
+        let t = |w: usize| {
+            let tree = VerificationTree::chain(w);
+            let s = build_step(
+                &cfg(),
+                EngineKind::MedusaGpu,
+                w,
+                256,
+                Some(&tree.pattern()),
+                &PartitionPlan::gpu_only(),
+            );
+            sim().run(&s).total
+        };
+        let t4 = t(4);
+        let t64 = t(64);
+        assert!(t64 / t4 < 2.2, "GPU time blew up with width: {}", t64 / t4);
+    }
+
+    #[test]
+    fn ghidorah_beats_gpu_only_at_w16() {
+        let tree = VerificationTree::chain(16);
+        let pat = tree.pattern();
+        let gpu_only = sim().run(&build_step(
+            &cfg(),
+            EngineKind::MedusaGpu,
+            16,
+            256,
+            Some(&pat),
+            &PartitionPlan::gpu_only(),
+        ));
+        let ghid = sim().run(&build_step(
+            &cfg(),
+            EngineKind::Ghidorah,
+            16,
+            256,
+            Some(&pat),
+            &PartitionPlan::hcmp(0.5),
+        ));
+        let speedup = gpu_only.total / ghid.total;
+        assert!(speedup > 1.5, "parallel speedup only {speedup}");
+    }
+
+    #[test]
+    fn ghidorah_beats_megatron_em() {
+        let tree = VerificationTree::chain(16);
+        let pat = tree.pattern();
+        let em = sim().run(&build_step(
+            &cfg(),
+            EngineKind::MedusaEM,
+            16,
+            256,
+            Some(&pat),
+            &PartitionPlan::megatron(0.5),
+        ));
+        let ghid = sim().run(&build_step(
+            &cfg(),
+            EngineKind::Ghidorah,
+            16,
+            256,
+            Some(&pat),
+            &PartitionPlan::hcmp(0.5),
+        ));
+        assert!(
+            ghid.total < em.total,
+            "HCMP ({}) must beat Megatron-EM ({})",
+            ghid.total,
+            em.total
+        );
+    }
+
+    #[test]
+    fn contention_model_is_monotone() {
+        // adding CPU work to a phase never reduces total time
+        let pat = CooPattern::from_tree(&[usize::MAX, 0]);
+        let base = build_step(&cfg(), EngineKind::Ghidorah, 2, 128, Some(&pat), &PartitionPlan::hcmp(1.0));
+        let split = build_step(&cfg(), EngineKind::Ghidorah, 2, 128, Some(&pat), &PartitionPlan::hcmp(0.5));
+        let t_base = sim().run(&base);
+        let t_split = sim().run(&split);
+        // splitting memory-bound w=2 work across both units should HELP
+        // (aggregate bandwidth), not hurt
+        assert!(t_split.total < t_base.total * 1.05);
+    }
+
+    #[test]
+    fn balance_metric() {
+        let r = SimReport { gpu_busy: 1.0, cpu_busy: 0.5, ..Default::default() };
+        assert!((r.balance() - 0.5).abs() < 1e-12);
+    }
+}

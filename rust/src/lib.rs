@@ -1,0 +1,30 @@
+//! Ghidorah: fast single-sample LLM inference on edge devices with
+//! speculative decoding and hetero-core parallelism.
+//!
+//! This crate is the Layer-3 (coordinator) of the three-layer
+//! Rust + JAX + Pallas architecture described in DESIGN.md:
+//!
+//! * Layer 1 — Pallas tree-attention kernel (build-time Python,
+//!   `python/compile/kernels/`), AOT-lowered into the model HLO.
+//! * Layer 2 — JAX transformer + Medusa heads (`python/compile/model.py`),
+//!   lowered once to HLO text artifacts.
+//! * Layer 3 — this crate: the speculative-decoding controller, the
+//!   hetero-core model parallelism (HCMP) runtime, the architecture-aware
+//!   profiling (ARCA) pipeline, the PJRT runtime that executes the AOT
+//!   artifacts, and the serving front-end.
+
+pub mod arca;
+pub mod bench;
+pub mod coordinator;
+pub mod hcmp;
+pub mod model;
+pub mod runtime;
+pub mod sparse;
+pub mod spec;
+pub mod tensor;
+pub mod util;
+pub mod workload;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

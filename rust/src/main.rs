@@ -1,0 +1,229 @@
+//! Ghidorah CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve   [--addr HOST:PORT] [--width W]        start the TCP server
+//!   generate --prompt TEXT [--max-new N] [--engine seq|ghidorah]
+//!   arca    [--dataset NAME] [--ctx N]            run the ARCA preprocessing pass
+//!   bench   table1|fig9|fig10a|fig10b             regenerate a paper artifact
+//!   info                                          artifact + model summary
+
+use std::collections::BTreeMap;
+
+use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
+use ghidorah::arca::profiler::profile;
+use ghidorah::arca::tree_builder::build_tree;
+use ghidorah::bench;
+use ghidorah::coordinator::{EngineChoice, Request, Scheduler, Server};
+use ghidorah::hcmp::simulator::Simulator;
+use ghidorah::model::ModelConfig;
+use ghidorah::runtime::{Artifacts, Runtime};
+use ghidorah::spec::tree::VerificationTree;
+
+fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "ghidorah {} — speculative decoding + hetero-core parallelism for edge LLM inference
+
+USAGE:
+  ghidorah serve    [--addr 127.0.0.1:7331] [--width 16] [--topk 4]
+  ghidorah generate --prompt TEXT [--max-new 32] [--engine ghidorah|sequential] [--width 16]
+  ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256]
+  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|all
+  ghidorah info",
+        ghidorah::version()
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let (pos, flags) = parse_flags(&args[1..]);
+
+    match cmd.as_str() {
+        "serve" => cmd_serve(&flags),
+        "generate" => cmd_generate(&flags),
+        "arca" => cmd_arca(&flags),
+        "bench" => cmd_bench(pos.first().map(String::as_str).unwrap_or(""), &flags),
+        "info" => cmd_info(),
+        _ => usage(),
+    }
+}
+
+/// Pick the ARCA tree for the tiny serving model: structure from the
+/// MT-Bench calibration profile at the requested width, capped to the
+/// model's head count.
+fn serving_tree(cfg: &ModelConfig, width: usize) -> VerificationTree {
+    let fit = fit_profile(&PAPER_TABLE1[0]);
+    let heads: Vec<Vec<f64>> = fit.profile.heads.iter().take(cfg.n_medusa).cloned().collect();
+    build_tree(&heads, width)
+}
+
+fn load_cfg() -> anyhow::Result<ModelConfig> {
+    let dir = Artifacts::default_dir();
+    anyhow::ensure!(
+        Artifacts::available(&dir),
+        "artifacts not found at {} — run `make artifacts`",
+        dir.display()
+    );
+    Ok(Artifacts::load(&dir)?.cfg)
+}
+
+fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7331".into());
+    let width: usize = flags.get("width").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let top_k: usize = flags.get("topk").map(|s| s.parse()).transpose()?.unwrap_or(4);
+
+    let cfg = load_cfg()?;
+    let tree = serving_tree(&cfg, width);
+    eprintln!(
+        "ghidorah: model d={} L={} medusa={} | ARCA tree width {} depth {}",
+        cfg.d_model,
+        cfg.n_layers,
+        cfg.n_medusa,
+        tree.width(),
+        tree.max_depth()
+    );
+    let sched = Scheduler::spawn(move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]), tree, 64, top_k);
+    let server = Server::new(sched, 8);
+    server.serve(&addr, |a| eprintln!("ghidorah: listening on {a}"))?;
+    eprintln!("ghidorah: shutdown");
+    Ok(())
+}
+
+fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let prompt = flags.get("prompt").cloned().unwrap_or_else(|| "hello, edge".into());
+    let max_new: usize = flags.get("max-new").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let width: usize = flags.get("width").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let engine = flags
+        .get("engine")
+        .map(|s| EngineChoice::parse(s).ok_or_else(|| anyhow::anyhow!("bad engine '{s}'")))
+        .transpose()?
+        .unwrap_or(EngineChoice::Ghidorah);
+
+    let cfg = load_cfg()?;
+    let tree = serving_tree(&cfg, width);
+    let sched = Scheduler::spawn(move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]), tree, 64, 4);
+    let resp = sched
+        .submit(Request { id: 0, prompt, max_new, engine })
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("text: {:?}", resp.text);
+    println!(
+        "tokens: {}  steps: {}  mean acceptance: {:.2}  latency: {:.1} ms  ({:.1} tok/s)",
+        resp.tokens,
+        resp.steps,
+        resp.mean_acceptance,
+        resp.latency_s * 1e3,
+        resp.tokens as f64 / resp.latency_s
+    );
+    Ok(())
+}
+
+fn cmd_arca(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let dataset = flags.get("dataset").cloned().unwrap_or_else(|| "MT-Bench".into());
+    let ctx: usize = flags.get("ctx").map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let target = PAPER_TABLE1
+        .iter()
+        .find(|t| t.name.eq_ignore_ascii_case(&dataset))
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{dataset}'"))?;
+
+    eprintln!("ARCA: calibrating drafter profile for {} ...", target.name);
+    let fit = fit_profile(target);
+    eprintln!(
+        "  family a_d(k) = {:.3} * {:.3}^d * {:.3}^k (top1 boost {:.2}; rel-rmse {:.4})",
+        fit.c, fit.rho, fit.r, fit.b, fit.rmse
+    );
+    let sim = Simulator::jetson_nx();
+    let cfg = ModelConfig::vicuna_7b();
+    eprintln!("ARCA: profiling widths on the NX simulator (ctx {ctx}) ...");
+    let out = profile(&sim, &cfg, &fit.profile, &[2, 4, 8, 16, 32, 64], ctx);
+    let mut t = bench::TablePrinter::new(&["width", "E[acc]", "step (ms)", "tok/s", "gpu ratio"]);
+    for r in &out.rows {
+        t.row(vec![
+            format!("{}", r.width),
+            format!("{:.2}", r.expected_acceptance),
+            format!("{:.1}", r.step_time * 1e3),
+            format!("{:.2}", r.throughput),
+            format!("{:.2}", r.plan.linear_ratio),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("chosen speculative strategy: {}", out.speculative.to_json().dump());
+    println!("partition strategy: {}", out.partition.to_json().dump());
+    Ok(())
+}
+
+fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    match which {
+        "table1" => {
+            let steps: usize =
+                flags.get("steps").map(|s| s.parse()).transpose()?.unwrap_or(200_000);
+            println!("{}", bench::table1(steps, false).text);
+        }
+        "fig9" => {
+            let ctx: usize = flags.get("ctx").map(|s| s.parse()).transpose()?.unwrap_or(256);
+            println!("{}", bench::fig9(ctx).text);
+        }
+        "fig10a" => println!("{}", bench::fig10a().text),
+        "fig10b" => {
+            let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(200);
+            println!("{}", bench::fig10b(reps).text);
+        }
+        "ablation" => println!("{}", bench::ablation().text),
+        "all" => {
+            println!("{}", bench::table1(200_000, false).text);
+            println!("{}", bench::fig9(256).text);
+            println!("{}", bench::fig10a().text);
+            println!("{}", bench::fig10b(200).text);
+            println!("{}", bench::ablation().text);
+        }
+        _ => usage(),
+    }
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = Artifacts::default_dir();
+    println!("ghidorah {}", ghidorah::version());
+    if Artifacts::available(&dir) {
+        let a = Artifacts::load(&dir)?;
+        println!("artifacts: {}", dir.display());
+        println!(
+            "model: d={} layers={} heads={}x{} ffn={} vocab={} medusa={} ctx={} (~{:.1}M params)",
+            a.cfg.d_model,
+            a.cfg.n_layers,
+            a.cfg.n_heads,
+            a.cfg.head_dim,
+            a.cfg.ffn,
+            a.cfg.vocab,
+            a.cfg.n_medusa,
+            a.cfg.max_ctx,
+            a.cfg.param_count() as f64 / 1e6
+        );
+        println!("decode widths: {:?}", a.decode_widths);
+        println!("executables: {:?}", a.executable_names());
+    } else {
+        println!("artifacts: NOT BUILT (run `make artifacts`)");
+    }
+    Ok(())
+}

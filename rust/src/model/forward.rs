@@ -1,0 +1,330 @@
+//! Pure-Rust reference forward pass — op-for-op mirror of
+//! `python/compile/model.py::decode_step`.
+//!
+//! Roles: (1) parity oracle for the AOT/PJRT executables; (2) the real math
+//! behind the hetero-core simulator; (3) a PJRT-free fallback engine so unit
+//! tests and the acceptance experiments run without artifacts.
+//!
+//! The attention is computed exactly as HCMP partitions it: a dense span
+//! (committed KV cache) and a sparse span (draft block, via the optimized
+//! COO kernels) merged by online softmax.
+
+use super::kv_cache::KvCache;
+use super::weights::Weights;
+use super::ModelConfig;
+use crate::sparse::{attention_sparse_opt, merge_partials, CooPattern, Partials};
+use crate::tensor::{gemm, Tensor};
+use crate::util::mathx::silu;
+
+/// Outputs of one decode step of width W.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// [W, vocab]
+    pub logits: Tensor,
+    /// [M, W, vocab] flattened as Vec of [W, vocab] tensors per head.
+    pub medusa_logits: Vec<Tensor>,
+    /// Flat [L, W, H, Dh] — post-RoPE keys of the draft block.
+    pub k_new: Vec<f32>,
+    /// Flat [L, W, H, Dh]
+    pub v_new: Vec<f32>,
+}
+
+pub struct RustModel {
+    pub cfg: ModelConfig,
+    pub weights: Weights,
+}
+
+impl RustModel {
+    pub fn new(cfg: ModelConfig, weights: Weights) -> Self {
+        Self { cfg, weights }
+    }
+
+    /// One decode step. `tokens`/`pos` have length W; `pattern` is the
+    /// draft-span sparsity (tree ancestry, causal for prefill chunks).
+    pub fn decode_step(
+        &self,
+        tokens: &[u32],
+        pos: &[usize],
+        pattern: &CooPattern,
+        cache: &KvCache,
+    ) -> StepOutput {
+        let cfg = &self.cfg;
+        let w = tokens.len();
+        assert_eq!(pos.len(), w);
+        assert_eq!(pattern.n, w);
+        let (d, hn, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim);
+        let scale = (dh as f32).powf(-0.5);
+
+        // token embedding
+        let emb = self.weights.get("tok_emb");
+        let mut x = Tensor::zeros(&[w, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(emb.row(t as usize));
+        }
+
+        let mut k_new = Vec::with_capacity(cfg.n_layers * w * hn * dh);
+        let mut v_new = Vec::with_capacity(cfg.n_layers * w * hn * dh);
+
+        for layer in 0..cfg.n_layers {
+            let h = rmsnorm(&x, self.weights.get(&format!("l{layer}_attn_norm")).data());
+            let mut q = gemm(&h, self.weights.get(&format!("l{layer}_wq")));
+            let mut k = gemm(&h, self.weights.get(&format!("l{layer}_wk")));
+            let v = gemm(&h, self.weights.get(&format!("l{layer}_wv")));
+            rope_inplace(&mut q, pos, hn, dh, cfg.rope_base);
+            rope_inplace(&mut k, pos, hn, dh, cfg.rope_base);
+            k_new.extend_from_slice(k.data());
+            v_new.extend_from_slice(v.data());
+
+            // per-head attention: dense span (cache) ⊕ sparse span (draft)
+            let mut o = Tensor::zeros(&[w, hn * dh]);
+            let kc = cache.k_layer(layer);
+            let vc = cache.v_layer(layer);
+            for head in 0..hn {
+                let qh = head_cols(&q, head, dh);
+                let kh = head_cols(&k, head, dh);
+                let vh = head_cols(&v, head, dh);
+                let dense = dense_span(&qh, kc, vc, cache.len(), head, hn, dh, scale);
+                let sparse = attention_sparse_opt(&qh, &kh, &vh, pattern, scale);
+                let merged = if cache.len() == 0 {
+                    sparse.o.clone()
+                } else {
+                    merge_partials(&dense, &sparse)
+                };
+                for i in 0..w {
+                    o.row_mut(i)[head * dh..(head + 1) * dh].copy_from_slice(merged.row(i));
+                }
+            }
+            let attn_out = gemm(&o, self.weights.get(&format!("l{layer}_wo")));
+            x.add_assign(&attn_out);
+
+            // MLP (SiLU-gated)
+            let h2 = rmsnorm(&x, self.weights.get(&format!("l{layer}_mlp_norm")).data());
+            let mut gate = gemm(&h2, self.weights.get(&format!("l{layer}_w_gate")));
+            let up = gemm(&h2, self.weights.get(&format!("l{layer}_w_up")));
+            for (g, u) in gate.data_mut().iter_mut().zip(up.data()) {
+                *g = silu(*g) * u;
+            }
+            let down = gemm(&gate, self.weights.get(&format!("l{layer}_w_down")));
+            x.add_assign(&down);
+        }
+
+        let xf = rmsnorm(&x, self.weights.get("final_norm").data());
+        let w_lm = self.weights.get("w_lm");
+        let logits = gemm(&xf, w_lm);
+        let mut medusa_logits = Vec::with_capacity(cfg.n_medusa);
+        for head in 0..cfg.n_medusa {
+            let wm = self.weights.get(&format!("medusa{head}_w"));
+            let mut res = gemm(&xf, wm);
+            for (r, &base) in res.data_mut().iter_mut().zip(xf.data()) {
+                *r = base + silu(*r);
+            }
+            medusa_logits.push(gemm(&res, w_lm));
+        }
+
+        StepOutput { logits, medusa_logits, k_new, v_new }
+    }
+}
+
+/// RMSNorm (eps matches the JAX model).
+pub fn rmsnorm(x: &Tensor, w: &[f32]) -> Tensor {
+    let (rows, d) = (x.shape()[0], x.shape()[1]);
+    assert_eq!(w.len(), d);
+    let mut out = Tensor::zeros(&[rows, d]);
+    for i in 0..rows {
+        let r = x.row(i);
+        let ms: f32 = r.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for (j, o) in out.row_mut(i).iter_mut().enumerate() {
+            *o = r[j] * inv * w[j];
+        }
+    }
+    out
+}
+
+/// Rotary embedding applied in place to a [W, H*Dh] projection.
+pub fn rope_inplace(x: &mut Tensor, pos: &[usize], hn: usize, dh: usize, base: f32) {
+    let w = x.shape()[0];
+    let half = dh / 2;
+    for i in 0..w {
+        let p = pos[i] as f32;
+        let row = x.row_mut(i);
+        for h in 0..hn {
+            let off = h * dh;
+            for f in 0..half {
+                let theta = p * base.powf(-(f as f32) / half as f32);
+                let (sin, cos) = theta.sin_cos();
+                let a = row[off + f];
+                let b = row[off + half + f];
+                row[off + f] = a * cos - b * sin;
+                row[off + half + f] = a * sin + b * cos;
+            }
+        }
+    }
+}
+
+/// Extract head columns [W, Dh] from a [W, H*Dh] projection.
+fn head_cols(x: &Tensor, head: usize, dh: usize) -> Tensor {
+    x.cols(head * dh, (head + 1) * dh)
+}
+
+/// Dense-span partials of one head against the committed cache.
+/// kc/vc are flat [C, H, Dh]; only the first `len` positions are valid.
+#[allow(clippy::too_many_arguments)]
+fn dense_span(
+    q: &Tensor,
+    kc: &[f32],
+    vc: &[f32],
+    len: usize,
+    head: usize,
+    hn: usize,
+    dh: usize,
+    scale: f32,
+) -> Partials {
+    let w = q.shape()[0];
+    let stride = hn * dh;
+    let mut o = Tensor::zeros(&[w, dh]);
+    let mut ms = vec![f32::NEG_INFINITY; w];
+    let mut ls = vec![0.0f32; w];
+    if len == 0 {
+        return Partials { o, m: ms, l: ls };
+    }
+    let mut scores = vec![0.0f32; len];
+    for i in 0..w {
+        let qrow = q.row(i);
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &kc[j * stride + head * dh..j * stride + (head + 1) * dh];
+            let mut acc = 0.0f32;
+            for d in 0..dh {
+                acc += qrow[d] * krow[d];
+            }
+            *s = acc * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = o.row_mut(i);
+        for (j, p) in scores.iter().enumerate() {
+            let vrow = &vc[j * stride + head * dh..j * stride + (head + 1) * dh];
+            let pw = p / l;
+            for d in 0..dh {
+                orow[d] += pw * vrow[d];
+            }
+        }
+        ms[i] = m;
+        ls[i] = l;
+    }
+    Partials { o, m: ms, l: ls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::mathx::allclose;
+
+    fn causal_pattern(w: usize) -> CooPattern {
+        let parents: Vec<usize> =
+            (0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect();
+        CooPattern::from_tree(&parents)
+    }
+
+    fn setup() -> (ModelConfig, RustModel, KvCache) {
+        let cfg = ModelConfig::test_small();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let cache = KvCache::new(&cfg);
+        (cfg, model, cache)
+    }
+
+    #[test]
+    fn output_shapes_and_finite() {
+        let (cfg, model, cache) = setup();
+        let out = model.decode_step(&[1, 2, 3], &[0, 1, 2], &causal_pattern(3), &cache);
+        assert_eq!(out.logits.shape(), &[3, cfg.vocab]);
+        assert_eq!(out.medusa_logits.len(), cfg.n_medusa);
+        assert_eq!(out.k_new.len(), cfg.n_layers * 3 * cfg.qkv_dim());
+        assert!(out.logits.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic() {
+        let (_cfg, model, mut cache) = setup();
+        let toks: Vec<u32> = (1..=10).collect();
+        let pos: Vec<usize> = (0..10).collect();
+        let full = model.decode_step(&toks, &pos, &causal_pattern(10), &cache);
+
+        let o1 = model.decode_step(&toks[..6], &pos[..6], &causal_pattern(6), &cache);
+        cache.commit_prefix(&o1.k_new, &o1.v_new, 6, 6);
+        let o2 = model.decode_step(&toks[6..], &pos[6..], &causal_pattern(4), &cache);
+
+        assert!(
+            allclose(o2.logits.row(3), full.logits.row(9), 1e-4, 1e-4),
+            "chunked vs monolithic diverged"
+        );
+    }
+
+    #[test]
+    fn tree_step_matches_sequential_path() {
+        let (_cfg, model, mut cache) = setup();
+        // prefill 3 tokens
+        let o = model.decode_step(&[5, 9, 11], &[0, 1, 2], &causal_pattern(3), &cache);
+        cache.commit_prefix(&o.k_new, &o.v_new, 3, 3);
+
+        // tree with a branch; the path is nodes [0, 1, 3]
+        let parents = [usize::MAX, 0, 0, 1, 1];
+        let draft: [u32; 5] = [7, 21, 22, 33, 34];
+        let depth = [0usize, 1, 1, 2, 2];
+        let pos: Vec<usize> = depth.iter().map(|d| 3 + d).collect();
+        let tree_out =
+            model.decode_step(&draft, &pos, &CooPattern::from_tree(&parents), &cache);
+
+        // sequential decode of the path
+        let path = [0usize, 1, 3];
+        let mut seq_cache = cache.clone();
+        for (step, &node) in path.iter().enumerate() {
+            let t = draft[node];
+            let o1 = model.decode_step(&[t], &[3 + step], &causal_pattern(1), &seq_cache);
+            assert!(
+                allclose(o1.logits.row(0), tree_out.logits.row(node), 2e-4, 2e-4),
+                "node {node} logits diverge from sequential"
+            );
+            seq_cache.commit_prefix(&o1.k_new, &o1.v_new, 1, 1);
+        }
+    }
+
+    #[test]
+    fn selective_commit_equals_sequential_cache() {
+        // committing tree path KV == sequentially decoded KV
+        let (_cfg, model, mut cache) = setup();
+        let o = model.decode_step(&[5], &[0], &causal_pattern(1), &cache);
+        cache.commit_prefix(&o.k_new, &o.v_new, 1, 1);
+
+        let parents = [usize::MAX, 0, 0];
+        let draft: [u32; 3] = [8, 9, 10];
+        let pos = [1usize, 2, 2];
+        let t_out = model.decode_step(&draft, &pos, &CooPattern::from_tree(&parents), &cache);
+
+        // accept nodes [0, 2] (path root -> second child)
+        let mut tree_cache = cache.clone();
+        tree_cache.commit_selected(&t_out.k_new, &t_out.v_new, 3, &[0, 2]);
+
+        let mut seq_cache = cache.clone();
+        let s0 = model.decode_step(&[8], &[1], &causal_pattern(1), &seq_cache);
+        seq_cache.commit_prefix(&s0.k_new, &s0.v_new, 1, 1);
+        let s1 = model.decode_step(&[10], &[2], &causal_pattern(1), &seq_cache);
+        seq_cache.commit_prefix(&s1.k_new, &s1.v_new, 1, 1);
+
+        for layer in 0..model.cfg.n_layers {
+            assert!(
+                allclose(
+                    &tree_cache.k_layer(layer)[..3 * model.cfg.qkv_dim()],
+                    &seq_cache.k_layer(layer)[..3 * model.cfg.qkv_dim()],
+                    1e-4,
+                    1e-4
+                ),
+                "layer {layer} cache diverged"
+            );
+        }
+    }
+}

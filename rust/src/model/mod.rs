@@ -1,0 +1,196 @@
+//! Model layer: configuration, weights, KV cache, tokenizer, sampler, and a
+//! pure-Rust reference forward pass.
+//!
+//! The reference forward mirrors `python/compile/model.py` op-for-op. It has
+//! two jobs: (1) a parity oracle for the AOT/PJRT path (the integration test
+//! checks HLO-executed logits == Rust logits), and (2) the "real math" that
+//! the hetero-core simulator executes while charging virtual time, so the
+//! paper-scale experiments stay numerically honest.
+
+pub mod forward;
+pub mod kv_cache;
+pub mod sampler;
+pub mod tokenizer;
+pub mod weights;
+
+use crate::util::json::Json;
+
+/// Model hyperparameters. Mirrors `ModelConfig` in python/compile/model.py;
+/// parsed from `artifacts/manifest.json` for the serving path, or constructed
+/// directly (e.g. Vicuna-7B dims) for simulator experiments.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub n_medusa: usize,
+    pub max_ctx: usize,
+    pub rope_base: f32,
+}
+
+impl ModelConfig {
+    /// The tiny end-to-end model (must match python/compile/model.py).
+    pub fn tiny() -> Self {
+        Self {
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_heads: 8,
+            head_dim: 32,
+            ffn: 512,
+            n_medusa: 4,
+            max_ctx: 256,
+            rope_base: 10000.0,
+        }
+    }
+
+    /// Vicuna-7B dimensions — the paper's evaluation model. Used only for
+    /// cost-model/simulator experiments (Figs 9, 10); never materialized.
+    pub fn vicuna_7b() -> Self {
+        Self {
+            vocab: 32000,
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            head_dim: 128,
+            ffn: 11008,
+            n_medusa: 4,
+            max_ctx: 4096,
+            rope_base: 10000.0,
+        }
+    }
+
+    /// A small config for fast unit tests.
+    pub fn test_small() -> Self {
+        Self {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            head_dim: 16,
+            ffn: 48,
+            n_medusa: 2,
+            max_ctx: 32,
+            rope_base: 10000.0,
+        }
+    }
+
+    pub fn qkv_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn from_manifest(j: &Json) -> anyhow::Result<Self> {
+        let m = j.get("model").ok_or_else(|| anyhow::anyhow!("manifest missing 'model'"))?;
+        let u = |k: &str| -> anyhow::Result<usize> {
+            m.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest model missing '{k}'"))
+        };
+        Ok(Self {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            ffn: u("ffn")?,
+            n_medusa: u("n_medusa")?,
+            max_ctx: u("max_ctx")?,
+            rope_base: m
+                .get("rope_base")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("manifest model missing 'rope_base'"))?
+                as f32,
+        })
+    }
+
+    /// Total parameter count (for cost models and sanity checks).
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let per_layer = 2 * d // norms
+            + 4 * d * self.qkv_dim() // wq..wo
+            + 2 * d * self.ffn + self.ffn * d; // gate, up, down
+        self.vocab * d + self.n_layers * per_layer + d + d * self.vocab
+            + self.n_medusa * d * d
+    }
+
+    /// Ordered parameter names (must match python/compile/model.py).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string()];
+        for i in 0..self.n_layers {
+            for suffix in
+                ["attn_norm", "wq", "wk", "wv", "wo", "mlp_norm", "w_gate", "w_up", "w_down"]
+            {
+                names.push(format!("l{i}_{suffix}"));
+            }
+        }
+        names.push("final_norm".into());
+        names.push("w_lm".into());
+        for h in 0..self.n_medusa {
+            names.push(format!("medusa{h}_w"));
+        }
+        names
+    }
+
+    /// Shape of a named parameter.
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let (d, f, v) = (self.d_model, self.ffn, self.vocab);
+        if name == "tok_emb" {
+            return vec![v, d];
+        }
+        if name == "final_norm" {
+            return vec![d];
+        }
+        if name == "w_lm" {
+            return vec![d, v];
+        }
+        if name.starts_with("medusa") {
+            return vec![d, d];
+        }
+        let suffix = name.splitn(2, '_').nth(1).unwrap_or(name);
+        match suffix {
+            "attn_norm" | "mlp_norm" => vec![d],
+            "wq" | "wk" | "wv" => vec![d, self.qkv_dim()],
+            "wo" => vec![self.qkv_dim(), d],
+            "w_gate" | "w_up" => vec![d, f],
+            "w_down" => vec![f, d],
+            _ => panic!("unknown param {name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_names_cover_all_shapes() {
+        let cfg = ModelConfig::test_small();
+        let names = cfg.param_names();
+        assert_eq!(names.len(), 1 + cfg.n_layers * 9 + 2 + cfg.n_medusa);
+        let mut total = 0usize;
+        for n in &names {
+            total += cfg.param_shape(n).iter().product::<usize>();
+        }
+        assert_eq!(total, cfg.param_count());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let j = Json::parse(
+            r#"{"model":{"vocab":512,"d_model":256,"n_layers":4,"n_heads":8,
+               "head_dim":32,"ffn":512,"n_medusa":4,"max_ctx":256,"rope_base":10000.0}}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(cfg, ModelConfig::tiny());
+    }
+
+    #[test]
+    fn vicuna_param_count_about_7b() {
+        let n = ModelConfig::vicuna_7b().param_count();
+        assert!((6_000_000_000..8_000_000_000).contains(&n), "{n}");
+    }
+}

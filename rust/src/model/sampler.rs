@@ -1,0 +1,64 @@
+//! Token sampling from logits. Greedy is the default for speculative
+//! decoding (acceptance = "draft token equals the target model's greedy
+//! choice", the deterministic Medusa acceptance rule).
+
+use crate::util::mathx::{argmax, softmax_inplace, topk};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    Greedy,
+    /// Temperature + top-k sampling.
+    TopK { k: usize, temperature: f32 },
+}
+
+impl Sampling {
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        match *self {
+            Sampling::Greedy => argmax(logits) as u32,
+            Sampling::TopK { k, temperature } => {
+                let idx = topk(logits, k.max(1));
+                let mut probs: Vec<f32> =
+                    idx.iter().map(|&i| logits[i] / temperature.max(1e-6)).collect();
+                softmax_inplace(&mut probs);
+                let weights: Vec<f64> = probs.iter().map(|&p| p as f64).collect();
+                idx[rng.categorical(&weights)] as u32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut rng = Rng::new(0);
+        assert_eq!(Sampling::Greedy.sample(&logits, &mut rng), 1);
+    }
+
+    #[test]
+    fn topk_restricts_support() {
+        let logits = vec![10.0, 9.0, -100.0, -100.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let t = Sampling::TopK { k: 2, temperature: 1.0 }.sample(&logits, &mut rng);
+            assert!(t == 0 || t == 1);
+        }
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = vec![1.0, 1.2, 0.8];
+        let mut rng = Rng::new(2);
+        let mut ones = 0;
+        for _ in 0..200 {
+            if (Sampling::TopK { k: 3, temperature: 0.01 }).sample(&logits, &mut rng) == 1 {
+                ones += 1;
+            }
+        }
+        assert!(ones > 195);
+    }
+}

@@ -1,0 +1,65 @@
+//! Byte-level tokenizer for the end-to-end demo model.
+//!
+//! Vocabulary: 0–255 raw bytes, 256 = BOS, 257 = EOS, rest of the 512-slot
+//! vocab unused (padding for MXU-friendly shapes).
+
+pub const BOS: u32 = 256;
+pub const EOS: u32 = 257;
+
+#[derive(Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        Self
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        512
+    }
+
+    /// Encode text as BOS + bytes.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() + 1);
+        out.push(BOS);
+        out.extend(text.bytes().map(|b| b as u32));
+        out
+    }
+
+    /// Decode tokens, skipping specials; lossy on invalid UTF-8.
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().filter(|&&t| t < 256).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, token: u32) -> bool {
+        token >= 256
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer::new();
+        let toks = t.encode("hello");
+        assert_eq!(toks[0], BOS);
+        assert_eq!(toks.len(), 6);
+        assert_eq!(t.decode(&toks), "hello");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let t = ByteTokenizer::new();
+        let s = "héllo → 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn decode_skips_specials() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[BOS, 104, 105, EOS]), "hi");
+    }
+}

@@ -1,0 +1,110 @@
+//! Weight storage: loaded from `artifacts/weights.npz` (written by
+//! `python/compile/aot.py`) or generated deterministically for tests.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::FromRawBytes;
+
+use super::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Name-indexed parameter set (host copies, f32).
+#[derive(Clone, Debug)]
+pub struct Weights {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    /// Load from the npz produced by the AOT pipeline and validate shapes
+    /// against the config.
+    pub fn load_npz(path: &Path, cfg: &ModelConfig) -> Result<Self> {
+        let entries = xla::Literal::read_npz(path, &())
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut map = BTreeMap::new();
+        for (name, lit) in entries {
+            let data: Vec<f32> = lit.to_vec().with_context(|| format!("param {name} to f32"))?;
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            map.insert(name, Tensor::from_vec(&dims, data));
+        }
+        let w = Self { map };
+        w.validate(cfg)?;
+        Ok(w)
+    }
+
+    /// Deterministic random weights (unit tests; does NOT match the npz).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut map = BTreeMap::new();
+        for name in cfg.param_names() {
+            let shape = cfg.param_shape(&name);
+            let t = if name.ends_with("norm") {
+                Tensor::from_vec(&shape, vec![1.0; shape.iter().product()])
+            } else {
+                Tensor::randn(&shape, 0.02, &mut rng)
+            };
+            map.insert(name, t);
+        }
+        Self { map }
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        self.map
+            .get(name)
+            .unwrap_or_else(|| panic!("missing weight '{name}'"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        for name in cfg.param_names() {
+            let expect = cfg.param_shape(&name);
+            let got = self
+                .map
+                .get(&name)
+                .ok_or_else(|| anyhow!("weights.npz missing param '{name}'"))?;
+            if got.shape() != expect.as_slice() {
+                return Err(anyhow!(
+                    "param '{name}' shape {:?} != expected {:?}",
+                    got.shape(),
+                    expect
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_have_all_params() {
+        let cfg = ModelConfig::test_small();
+        let w = Weights::random(&cfg, 1);
+        for name in cfg.param_names() {
+            assert_eq!(w.get(&name).shape(), cfg.param_shape(&name).as_slice());
+        }
+    }
+
+    #[test]
+    fn norm_weights_are_ones() {
+        let cfg = ModelConfig::test_small();
+        let w = Weights::random(&cfg, 2);
+        assert!(w.get("l0_attn_norm").data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let cfg = ModelConfig::test_small();
+        let a = Weights::random(&cfg, 7);
+        let b = Weights::random(&cfg, 7);
+        assert_eq!(a.get("l0_wq").data(), b.get("l0_wq").data());
+    }
+}

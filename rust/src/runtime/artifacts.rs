@@ -1,0 +1,115 @@
+//! Artifact discovery: manifest parsing and path resolution.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+/// The `artifacts/` directory contents as described by `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub manifest: Json,
+    pub cfg: ModelConfig,
+    pub decode_widths: Vec<usize>,
+    pub prefill_width: usize,
+    pub param_names: Vec<String>,
+}
+
+impl Artifacts {
+    /// Default location: `$GHIDORAH_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("GHIDORAH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn load_default() -> Result<Self> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let cfg = ModelConfig::from_manifest(&manifest)?;
+        let decode_widths: Vec<usize> = manifest
+            .get("decode_widths")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing decode_widths"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let prefill_width = manifest
+            .get("prefill_width")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing prefill_width"))?;
+        let param_names: Vec<String> = manifest
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .filter_map(|j| j.as_str().map(str::to_string))
+            .collect();
+        Ok(Self { dir: dir.to_path_buf(), manifest, cfg, decode_widths, prefill_width, param_names })
+    }
+
+    /// True if the artifact directory exists with a manifest (used by tests
+    /// to skip PJRT paths when artifacts haven't been built).
+    pub fn available(dir: &Path) -> bool {
+        dir.join("manifest.json").is_file() && dir.join("weights.npz").is_file()
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self
+            .manifest
+            .path(&format!("executables.{name}.file"))
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest has no executable '{name}'"))?;
+        Ok(self.dir.join(file))
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join("weights.npz")
+    }
+
+    pub fn executable_names(&self) -> Vec<String> {
+        self.manifest
+            .get("executables")
+            .and_then(Json::as_obj)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // tests run from the crate root
+        Artifacts::default_dir()
+    }
+
+    #[test]
+    fn load_manifest_if_built() {
+        let dir = artifacts_dir();
+        if !Artifacts::available(&dir) {
+            eprintln!("artifacts not built; skipping");
+            return;
+        }
+        let a = Artifacts::load(&dir).unwrap();
+        assert_eq!(a.cfg, ModelConfig::tiny());
+        assert!(a.decode_widths.contains(&16));
+        assert_eq!(a.param_names.len(), a.cfg.param_names().len());
+        for n in &a.param_names {
+            assert!(a.cfg.param_names().contains(n), "unexpected param {n}");
+        }
+        for w in &a.decode_widths {
+            assert!(a.hlo_path(&format!("decode_w{w}")).unwrap().is_file());
+        }
+    }
+}

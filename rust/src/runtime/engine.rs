@@ -1,0 +1,294 @@
+//! The PJRT execution engine: compiled decode executables + persistent
+//! weight buffers. Implements `spec::StepExecutor`, so the speculative
+//! controller drives it exactly like the pure-Rust model.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+use xla::FromRawBytes;
+
+use super::artifacts::Artifacts;
+use crate::model::forward::StepOutput;
+use crate::model::kv_cache::KvCache;
+use crate::model::ModelConfig;
+use crate::sparse::CooPattern;
+use crate::spec::controller::StepExecutor;
+use crate::tensor::Tensor;
+
+const NEG_INF: f32 = -1e9;
+
+pub struct Runtime {
+    pub artifacts: Artifacts,
+    client: xla::PjRtClient,
+    /// Weight buffers in manifest parameter order; uploaded once.
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    /// Host literals backing `weight_bufs`. PJRT's BufferFromHostLiteral
+    /// copies asynchronously; the literal must outlive the buffer or the
+    /// in-flight copy reads freed memory (observed SIGSEGV).
+    _weight_literals: Vec<xla::Literal>,
+    decode: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    shards: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    /// Cumulative PJRT execute time (perf accounting).
+    pub exec_nanos: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load + compile every decode width in the manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let artifacts = Artifacts::load(dir)?;
+        let widths = artifacts.decode_widths.clone();
+        Self::load_widths(dir, &widths)
+    }
+
+    /// Load + compile only the given widths (faster startup for tools that
+    /// need a single width).
+    pub fn load_widths(dir: &Path, widths: &[usize]) -> Result<Self> {
+        let artifacts = Artifacts::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        // weights.npz -> device buffers, ordered by manifest param order.
+        // NOTE: loaded via Literal + buffer_from_host_literal; the crate's
+        // direct PjRtBuffer::read_npz path mis-maps the npy '<f4' dtype.
+        let npz = artifacts.weights_path();
+        let entries = xla::Literal::read_npz(&npz, &())
+            .with_context(|| format!("loading {}", npz.display()))?;
+        let mut by_name: BTreeMap<String, xla::Literal> = entries.into_iter().collect();
+        let mut weight_bufs = Vec::with_capacity(artifacts.param_names.len());
+        let mut weight_literals = Vec::with_capacity(artifacts.param_names.len());
+        for name in &artifacts.param_names {
+            let lit = by_name
+                .remove(name)
+                .ok_or_else(|| anyhow!("weights.npz missing param '{name}'"))?;
+            weight_bufs.push(client.buffer_from_host_literal(None, &lit)?);
+            weight_literals.push(lit); // keep alive: async host->device copy
+        }
+
+        let mut rt = Self {
+            artifacts,
+            client,
+            weight_bufs,
+            _weight_literals: weight_literals,
+            decode: BTreeMap::new(),
+            shards: BTreeMap::new(),
+            exec_nanos: std::cell::Cell::new(0),
+        };
+        for &w in widths {
+            let exe = rt.compile(&format!("decode_w{w}"))?;
+            rt.decode.insert(w, exe);
+        }
+        Ok(rt)
+    }
+
+    fn compile(&self, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.artifacts.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {name}"))
+    }
+
+    /// Lazily compile one of the HCMP shard-demo executables.
+    pub fn shard_exec(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.shards.contains_key(name) {
+            let exe = self.compile(name)?;
+            self.shards.insert(name.to_string(), exe);
+        }
+        Ok(self.shards.get(name).unwrap())
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.artifacts.cfg
+    }
+
+    pub fn widths(&self) -> Vec<usize> {
+        self.decode.keys().copied().collect()
+    }
+
+    fn buf_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn buf_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Execute one decode step of width `w` through PJRT.
+    pub fn decode_step(
+        &self,
+        tokens: &[u32],
+        pos: &[usize],
+        pattern: &CooPattern,
+        cache: &KvCache,
+    ) -> Result<StepOutput> {
+        let w = tokens.len();
+        let cfg = self.cfg();
+        let exe = self
+            .decode
+            .get(&w)
+            .ok_or_else(|| anyhow!("no compiled decode executable for width {w}"))?;
+
+        let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let pos_i32: Vec<i32> = pos.iter().map(|&p| p as i32).collect();
+        let mask = pattern.to_additive_mask(NEG_INF);
+        let (l, c, h, dh) = (cfg.n_layers, cfg.max_ctx, cfg.n_heads, cfg.head_dim);
+
+        let in_toks = self.buf_i32(&toks_i32, &[w])?;
+        let in_pos = self.buf_i32(&pos_i32, &[w])?;
+        let in_mask = self.buf_f32(&mask, &[w, w])?;
+        let in_k = self.buf_f32(cache.k_flat(), &[l, c, h, dh])?;
+        let in_v = self.buf_f32(cache.v_flat(), &[l, c, h, dh])?;
+        let in_len = self.buf_i32(&[cache.len() as i32], &[])?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.push(&in_toks);
+        args.push(&in_pos);
+        args.push(&in_mask);
+        args.push(&in_k);
+        args.push(&in_v);
+        args.push(&in_len);
+
+        let t0 = std::time::Instant::now();
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        self.exec_nanos.set(self.exec_nanos.get() + t0.elapsed().as_nanos() as u64);
+
+        let parts = lit.to_tuple()?;
+        if parts.len() != 4 {
+            return Err(anyhow!("decode returned {} outputs, expected 4", parts.len()));
+        }
+        let logits = Tensor::from_vec(&[w, cfg.vocab], parts[0].to_vec::<f32>()?);
+        let medusa_flat: Vec<f32> = parts[1].to_vec()?;
+        let per_head = w * cfg.vocab;
+        let medusa_logits: Vec<Tensor> = (0..cfg.n_medusa)
+            .map(|m| {
+                Tensor::from_vec(&[w, cfg.vocab], medusa_flat[m * per_head..(m + 1) * per_head].to_vec())
+            })
+            .collect();
+        let k_new: Vec<f32> = parts[2].to_vec()?;
+        let v_new: Vec<f32> = parts[3].to_vec()?;
+        Ok(StepOutput { logits, medusa_logits, k_new, v_new })
+    }
+
+    // ---- HCMP shard demos (used by the hetero_sim example + tests) --------
+
+    /// Column-split MLP through the 4 shard executables; returns [W, d].
+    pub fn mlp_via_shards(&mut self, x: &Tensor) -> Result<Tensor> {
+        let cfg = self.cfg().clone();
+        let (w, d, f) = (x.shape()[0], cfg.d_model, cfg.ffn);
+        assert_eq!(x.shape()[1], d);
+        // stage 1: each "unit" computes its activation slice from full x
+        let names = self.artifacts.param_names.clone();
+        let idx = |n: &str| names.iter().position(|p| p == n).unwrap();
+        let wg = idx("l0_w_gate");
+        let wu = idx("l0_w_up");
+        let wd = idx("l0_w_down");
+
+        // host copies of the layer-0 weights for shard slicing
+        let gate_lit = self.weight_bufs[wg].to_literal_sync()?;
+        let up_lit = self.weight_bufs[wu].to_literal_sync()?;
+        let down_lit = self.weight_bufs[wd].to_literal_sync()?;
+        let gate = Tensor::from_vec(&[d, f], gate_lit.to_vec()?);
+        let up = Tensor::from_vec(&[d, f], up_lit.to_vec()?);
+        let down = Tensor::from_vec(&[f, d], down_lit.to_vec()?);
+
+        let half_f = f / 2;
+        let half_d = d / 2;
+        let run1 = |rt: &mut Self, gs: Tensor, us: Tensor, x: &Tensor| -> Result<Tensor> {
+            let in_g = rt.buf_f32(gs.data(), &[d, half_f])?;
+            let in_u = rt.buf_f32(us.data(), &[d, half_f])?;
+            let in_x = rt.buf_f32(x.data(), &[w, d])?;
+            let exe = rt.shard_exec("mlp_stage1_shard")?;
+            let out = exe.execute_b(&[&in_g, &in_u, &in_x])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?;
+            Ok(Tensor::from_vec(&[w, half_f], out.to_vec()?))
+        };
+        let h_a = run1(self, gate.cols(0, half_f), up.cols(0, half_f), x)?;
+        let h_b = run1(self, gate.cols(half_f, f), up.cols(half_f, f), x)?;
+        // unified memory: both units see the concatenated activation
+        let h_full = Tensor::concat_cols(&[&h_a, &h_b]);
+
+        let run2 = |rt: &mut Self, ds: Tensor, hf: &Tensor| -> Result<Tensor> {
+            let in_d = rt.buf_f32(ds.data(), &[f, half_d])?;
+            let in_h = rt.buf_f32(hf.data(), &[w, f])?;
+            let exe = rt.shard_exec("mlp_stage2_shard")?;
+            let out = exe.execute_b(&[&in_d, &in_h])?[0][0]
+                .to_literal_sync()?
+                .to_tuple1()?;
+            Ok(Tensor::from_vec(&[w, half_d], out.to_vec()?))
+        };
+        let o_a = run2(self, down.cols(0, half_d), &h_full)?;
+        let o_b = run2(self, down.cols(half_d, d), &h_full)?;
+        Ok(Tensor::concat_cols(&[&o_a, &o_b]))
+    }
+
+    /// Dense-span + sparse-span attention through the two affinity-shard
+    /// executables, merged on the host (online softmax). Returns [H, W, Dh].
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_via_shards(
+        &mut self,
+        q: &Tensor,  // [H, W, Dh]
+        k_cache: &Tensor, // [C, H, Dh]
+        v_cache: &Tensor,
+        cache_len: usize,
+        k_new: &Tensor, // [H, W, Dh]
+        v_new: &Tensor,
+        mask: &[f32], // [W, W]
+    ) -> Result<Tensor> {
+        let (h, w, dh) = (q.shape()[0], q.shape()[1], q.shape()[2]);
+        let c = k_cache.shape()[0];
+        let unpack3 = |lit: xla::Literal| -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+            let parts = lit.to_tuple()?;
+            Ok((parts[0].to_vec()?, parts[1].to_vec()?, parts[2].to_vec()?))
+        };
+
+        let in_q = self.buf_f32(q.data(), &[h, w, dh])?;
+        let in_kc = self.buf_f32(k_cache.data(), &[c, h, dh])?;
+        let in_vc = self.buf_f32(v_cache.data(), &[c, h, dh])?;
+        let in_len = self.buf_i32(&[cache_len as i32], &[])?;
+        let dense_exe = self.shard_exec("attn_dense_part")?;
+        let (o1, m1, l1) =
+            unpack3(dense_exe.execute_b(&[&in_q, &in_kc, &in_vc, &in_len])?[0][0].to_literal_sync()?)?;
+
+        let in_kn = self.buf_f32(k_new.data(), &[h, w, dh])?;
+        let in_vn = self.buf_f32(v_new.data(), &[h, w, dh])?;
+        let in_mask = self.buf_f32(mask, &[w, w])?;
+        let sparse_exe = self.shard_exec("attn_sparse_part")?;
+        let (o2, m2, l2) =
+            unpack3(sparse_exe.execute_b(&[&in_q, &in_kn, &in_vn, &in_mask])?[0][0].to_literal_sync()?)?;
+
+        // host-side online-softmax merge (what HCMP fuses into the reduce)
+        let mut out = vec![0.0f32; h * w * dh];
+        for i in 0..h * w {
+            let m = m1[i].max(m2[i]);
+            let a1 = (m1[i] - m).exp() * l1[i];
+            let a2 = (m2[i] - m).exp() * l2[i];
+            let denom = a1 + a2;
+            for d in 0..dh {
+                out[i * dh + d] = (o1[i * dh + d] * a1 + o2[i * dh + d] * a2) / denom;
+            }
+        }
+        Ok(Tensor::from_vec(&[h, w, dh], out))
+    }
+}
+
+impl StepExecutor for Runtime {
+    fn cfg(&self) -> &ModelConfig {
+        Runtime::cfg(self)
+    }
+
+    fn supports_width(&self, w: usize) -> bool {
+        self.decode.contains_key(&w)
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[u32],
+        pos: &[usize],
+        pattern: &CooPattern,
+        cache: &KvCache,
+    ) -> Result<StepOutput> {
+        Runtime::decode_step(self, tokens, pos, pattern, cache)
+    }
+}

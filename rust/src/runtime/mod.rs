@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text + weights.npz) produced
+//! by `python/compile/aot.py`, compiles them on the PJRT CPU client, and
+//! executes decode steps from the Rust request path.
+//!
+//! Weights are uploaded to device buffers exactly once; per-step inputs
+//! (tokens, positions, tree mask, KV cache, cache length) are transferred
+//! per call. HLO **text** is the interchange format — see DESIGN.md §6.
+
+mod artifacts;
+mod engine;
+
+pub use artifacts::Artifacts;
+pub use engine::Runtime;

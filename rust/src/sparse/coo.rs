@@ -1,0 +1,167 @@
+//! COO sparsity pattern derived from the verification tree (paper
+//! §III-B.3: "knowing the token correlations to be verified, we follow the
+//! COO sparsity data format to generate the index before performing the
+//! inference").
+
+/// Sparsity pattern of the draft-span attention: entry (i, j) present iff
+/// draft token j is an ancestor-or-self of draft token i in the
+/// verification tree. Entries are stored row-major (sorted by i, then j),
+/// which both kernels rely on.
+#[derive(Clone, Debug)]
+pub struct CooPattern {
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub n: usize,
+    /// CSR-style row offsets into rows/cols (len n+1) — kept alongside the
+    /// COO index because the optimized kernels walk rows.
+    pub row_ptr: Vec<u32>,
+}
+
+impl CooPattern {
+    /// Build from a verification-tree parent vector (parents[0] == usize::MAX
+    /// marks the root; parents[i] < i).
+    pub fn from_tree(parents: &[usize]) -> Self {
+        let n = parents.len();
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut row_ptr = vec![0u32; n + 1];
+        for i in 0..n {
+            // walk ancestry; collect then reverse for ascending column order
+            let mut anc = vec![i as u32];
+            let mut j = i;
+            while parents[j] != usize::MAX {
+                j = parents[j];
+                anc.push(j as u32);
+            }
+            anc.reverse();
+            for &a in &anc {
+                rows.push(i as u32);
+                cols.push(a);
+            }
+            row_ptr[i + 1] = rows.len() as u32;
+        }
+        Self { rows, cols, n, row_ptr }
+    }
+
+    /// Build from an explicit boolean mask [n, n] (row-major).
+    pub fn from_mask(mask: &[bool], n: usize) -> Self {
+        assert_eq!(mask.len(), n * n);
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut row_ptr = vec![0u32; n + 1];
+        for i in 0..n {
+            for j in 0..n {
+                if mask[i * n + j] {
+                    rows.push(i as u32);
+                    cols.push(j as u32);
+                }
+            }
+            row_ptr[i + 1] = rows.len() as u32;
+        }
+        Self { rows, cols, n, row_ptr }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Fraction of the n×n span that needs computation.
+    pub fn density(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.n * self.n) as f64
+        }
+    }
+
+    /// Columns of row i.
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.cols[self.row_ptr[i] as usize..self.row_ptr[i + 1] as usize]
+    }
+
+    /// The additive f32 mask (0 allowed / NEG disallowed) for the dense path
+    /// and for the AOT decode executables.
+    pub fn to_additive_mask(&self, neg: f32) -> Vec<f32> {
+        let mut m = vec![neg; self.n * self.n];
+        for (&r, &c) in self.rows.iter().zip(&self.cols) {
+            m[r as usize * self.n + c as usize] = 0.0;
+        }
+        m
+    }
+
+    pub fn to_bool_mask(&self) -> Vec<bool> {
+        let mut m = vec![false; self.n * self.n];
+        for (&r, &c) in self.rows.iter().zip(&self.cols) {
+            m[r as usize * self.n + c as usize] = true;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_tree_is_causal() {
+        // parents: 0 <- 1 <- 2 <- 3
+        let parents = [usize::MAX, 0, 1, 2];
+        let p = CooPattern::from_tree(&parents);
+        assert_eq!(p.nnz(), 10); // 1+2+3+4 lower-triangular
+        let mask = p.to_bool_mask();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mask[i * 4 + j], j <= i, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn branchy_tree_paths_only() {
+        //        0
+        //      / | \
+        //     1  2  3
+        //    /
+        //   4
+        let parents = [usize::MAX, 0, 0, 0, 1];
+        let p = CooPattern::from_tree(&parents);
+        let mask = p.to_bool_mask();
+        let at = |i: usize, j: usize| mask[i * 5 + j];
+        assert!(at(4, 0) && at(4, 1) && at(4, 4));
+        assert!(!at(4, 2) && !at(4, 3));
+        assert!(at(2, 0) && at(2, 2) && !at(2, 1));
+        // diagonal always set
+        for i in 0..5 {
+            assert!(at(i, i));
+        }
+    }
+
+    #[test]
+    fn row_cols_ascending_and_consistent() {
+        let parents = [usize::MAX, 0, 0, 1, 1, 2, 3, 3];
+        let p = CooPattern::from_tree(&parents);
+        for i in 0..parents.len() {
+            let cols = p.row_cols(i);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "row {i} not ascending");
+            assert_eq!(*cols.last().unwrap() as usize, i, "diagonal missing in row {i}");
+        }
+    }
+
+    #[test]
+    fn from_mask_roundtrip() {
+        let parents = [usize::MAX, 0, 1, 0];
+        let p = CooPattern::from_tree(&parents);
+        let p2 = CooPattern::from_mask(&p.to_bool_mask(), p.n);
+        assert_eq!(p.rows, p2.rows);
+        assert_eq!(p.cols, p2.cols);
+        assert_eq!(p.row_ptr, p2.row_ptr);
+    }
+
+    #[test]
+    fn density_decreases_with_branching() {
+        let chain = CooPattern::from_tree(&[usize::MAX, 0, 1, 2, 3, 4, 5, 6]);
+        let star = CooPattern::from_tree(&[usize::MAX, 0, 0, 0, 0, 0, 0, 0]);
+        assert!(star.density() < chain.density());
+    }
+}

@@ -1,0 +1,112 @@
+//! Masked-dense baseline: treat the sparse draft span as dense computation
+//! with an additive mask (the cloud-system approach the paper contrasts
+//! with; the "Dense" series in Fig 10b).
+
+use super::{CooPattern, Partials};
+use crate::tensor::{gemm, gemm_nt, Tensor};
+
+pub const NEG_INF: f32 = -1e9;
+
+/// S = (Q Kᵀ) * scale + mask — full dense GEMM over the W×W span
+/// (register-tiled `gemm_nt`: the "optimized dense library" tier).
+pub fn qkt_dense_masked(q: &Tensor, k: &Tensor, pattern: &CooPattern, scale: f32) -> Tensor {
+    let w = q.shape()[0];
+    assert_eq!(k.shape()[0], w);
+    let mut s = gemm_nt(q, k);
+    s.scale(scale);
+    let mask = pattern.to_additive_mask(NEG_INF);
+    for (x, m) in s.data_mut().iter_mut().zip(&mask) {
+        *x += m;
+    }
+    s
+}
+
+/// Row softmax over masked scores, returning (P, m, l) partials.
+pub fn softmax_masked_rows(s: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let (w, n) = (s.shape()[0], s.shape()[1]);
+    let mut p = s.clone();
+    let mut ms = vec![0.0f32; w];
+    let mut ls = vec![0.0f32; w];
+    for i in 0..w {
+        let row = p.row_mut(i);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            l += *x;
+        }
+        ms[i] = m;
+        ls[i] = l;
+        let _ = n;
+    }
+    (p, ms, ls)
+}
+
+/// O = (P / l) V — dense.
+pub fn av_dense(p: &Tensor, l: &[f32], v: &Tensor) -> Tensor {
+    let mut o = gemm(p, v);
+    for i in 0..o.shape()[0] {
+        let inv = 1.0 / l[i];
+        for x in o.row_mut(i) {
+            *x *= inv;
+        }
+    }
+    o
+}
+
+/// Full masked-dense attention partials over the draft span.
+pub fn attention_dense_masked(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    pattern: &CooPattern,
+    scale: f32,
+) -> Partials {
+    let s = qkt_dense_masked(q, k, pattern, scale);
+    let (p, m, l) = softmax_masked_rows(&s);
+    let o = av_dense(&p, &l, v);
+    Partials { o, m, l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn masked_rows_sum_to_one_after_norm() {
+        let mut rng = Rng::new(1);
+        let parents = [usize::MAX, 0, 0, 1];
+        let pat = CooPattern::from_tree(&parents);
+        let q = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let k = Tensor::randn(&[4, 8], 1.0, &mut rng);
+        let s = qkt_dense_masked(&q, &k, &pat, 0.35);
+        let (p, _m, l) = softmax_masked_rows(&s);
+        for i in 0..4 {
+            let sum: f32 = p.row(i).iter().sum();
+            assert!((sum - l[i]).abs() < 1e-4);
+            // masked entries contribute ~0
+            for j in 0..4 {
+                if !pat.to_bool_mask()[i * 4 + j] {
+                    assert!(p.at2(i, j) < 1e-20);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn self_only_rows_return_v() {
+        // star tree: every non-root attends to root and itself
+        let parents = [usize::MAX, 0, 0];
+        let pat = CooPattern::from_tree(&parents);
+        let mut rng = Rng::new(2);
+        let q = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let k = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let v = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let out = attention_dense_masked(&q, &k, &v, &pat, 0.5);
+        // row 0 attends only to itself -> o[0] == v[0]
+        for d in 0..4 {
+            assert!((out.o.at2(0, d) - v.at2(0, d)).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,109 @@
+//! Sparse attention computation for speculative decoding (paper §III-B.3).
+//!
+//! In tree verification only token pairs on the same verification-tree path
+//! need their correlation computed — Fig. 3 of the paper. The sparsity
+//! pattern is *known before inference* (it is the tree), so a COO index is
+//! built once per tree and reused every step.
+//!
+//! Three implementations, matching Fig 10(b):
+//!  * [`dense_ref`] — treat the sparse span as dense with an additive mask
+//!    (what cloud systems do; the "Dense" bar);
+//!  * [`spmm_naive`] — straightforward COO traversal (the "Naive sparse" bar);
+//!  * [`spmm_opt`] — the paper's optimized kernel: vectorized row-wise QKᵀ
+//!    with register-resident accumulation, reordered AV accumulation for
+//!    contiguous V access, blocked to keep the output panel in registers
+//!    (the "Optimized sparse" bar).
+
+mod coo;
+mod dense_ref;
+mod spmm_naive;
+mod spmm_opt;
+
+pub use coo::CooPattern;
+pub use dense_ref::{attention_dense_masked, qkt_dense_masked, softmax_masked_rows, av_dense};
+pub use spmm_naive::{qkt_coo_naive, av_coo_naive};
+pub use spmm_opt::{qkt_coo_opt, av_coo_opt, attention_sparse_opt};
+
+use crate::tensor::Tensor;
+
+/// Online-softmax partials of a masked/sparse attention span.
+#[derive(Clone, Debug)]
+pub struct Partials {
+    /// Normalized output, [W, Dh].
+    pub o: Tensor,
+    /// Row maxima, [W].
+    pub m: Vec<f32>,
+    /// Row partition sums, [W].
+    pub l: Vec<f32>,
+}
+
+/// Merge two online-softmax partials (the HCMP end-of-attention scaling).
+pub fn merge_partials(a: &Partials, b: &Partials) -> Tensor {
+    let w = a.m.len();
+    assert_eq!(b.m.len(), w);
+    let dh = a.o.shape()[1];
+    let mut out = Tensor::zeros(&[w, dh]);
+    for i in 0..w {
+        let m = a.m[i].max(b.m[i]);
+        let wa = (a.m[i] - m).exp() * a.l[i];
+        let wb = (b.m[i] - m).exp() * b.l[i];
+        let denom = wa + wb;
+        let (oa, ob) = (a.o.row(i), b.o.row(i));
+        let orow = out.row_mut(i);
+        for d in 0..dh {
+            orow[d] = (oa[d] * wa + ob[d] * wb) / denom;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Splitting a span and merging partials equals one joint softmax.
+    #[test]
+    fn merge_partials_equals_joint() {
+        let mut rng = Rng::new(5);
+        let (w, dh, span) = (6, 8, 20);
+        let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let k = Tensor::randn(&[span, dh], 1.0, &mut rng);
+        let v = Tensor::randn(&[span, dh], 1.0, &mut rng);
+        let scale = (dh as f32).powf(-0.5);
+
+        let part = |lo: usize, hi: usize| -> Partials {
+            let ks = k.rows(lo, hi);
+            let vs = v.rows(lo, hi);
+            let s = crate::tensor::gemm(&q, &ks.t());
+            let mut o = Tensor::zeros(&[w, dh]);
+            let mut ms = vec![0.0; w];
+            let mut ls = vec![0.0; w];
+            for i in 0..w {
+                let mut row: Vec<f32> = s.row(i).iter().map(|x| x * scale).collect();
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut l = 0.0;
+                for x in row.iter_mut() {
+                    *x = (*x - m).exp();
+                    l += *x;
+                }
+                for (j, p) in row.iter().enumerate() {
+                    for d in 0..dh {
+                        o.row_mut(i)[d] += p / l * vs.at2(j, d);
+                    }
+                }
+                ms[i] = m;
+                ls[i] = l;
+            }
+            Partials { o, m: ms, l: ls }
+        };
+
+        let a = part(0, 9);
+        let b = part(9, span);
+        let joint = part(0, span);
+        let merged = merge_partials(&a, &b);
+        for (x, y) in merged.data().iter().zip(joint.o.data()) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+}

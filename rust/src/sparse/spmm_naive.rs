@@ -1,0 +1,80 @@
+//! Naive COO sparse kernels — the "Naive sparse" series of Fig 10b.
+//!
+//! Straightforward per-entry traversal: one dot product per COO entry in
+//! QKᵀ, and column-by-column scatter in AV. No vectorization-friendly
+//! access pattern, no register blocking — exactly the implementation the
+//! paper shows losing to the dense baseline.
+
+use super::CooPattern;
+use crate::tensor::Tensor;
+
+/// Sparse S values (aligned with pattern entries): s[e] = scale * <q_rows[e], k_cols[e]>.
+pub fn qkt_coo_naive(q: &Tensor, k: &Tensor, pattern: &CooPattern, scale: f32) -> Vec<f32> {
+    let dh = q.shape()[1];
+    assert_eq!(k.shape()[1], dh);
+    let mut s = Vec::with_capacity(pattern.nnz());
+    for e in 0..pattern.nnz() {
+        let (i, j) = (pattern.rows[e] as usize, pattern.cols[e] as usize);
+        // scalar dot product, no unrolling
+        let mut acc = 0.0f32;
+        for d in 0..dh {
+            acc += q.at2(i, d) * k.at2(j, d);
+        }
+        s.push(acc * scale);
+    }
+    s
+}
+
+/// O[i, :] = sum_e P[e] * V[col(e), :] for entries in row i, walking output
+/// columns in the inner loop (strided V access — the naive order).
+pub fn av_coo_naive(p_vals: &[f32], pattern: &CooPattern, v: &Tensor) -> Tensor {
+    let (w, dh) = (pattern.n, v.shape()[1]);
+    let mut o = Tensor::zeros(&[w, dh]);
+    for d in 0..dh {
+        for e in 0..pattern.nnz() {
+            let (i, j) = (pattern.rows[e] as usize, pattern.cols[e] as usize);
+            o.data_mut()[i * dh + d] += p_vals[e] * v.at2(j, d);
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense_ref::{qkt_dense_masked, NEG_INF};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qkt_matches_dense_at_pattern() {
+        let mut rng = Rng::new(21);
+        let parents = [usize::MAX, 0, 0, 1, 2, 2];
+        let pat = CooPattern::from_tree(&parents);
+        let q = Tensor::randn(&[6, 16], 1.0, &mut rng);
+        let k = Tensor::randn(&[6, 16], 1.0, &mut rng);
+        let s_sparse = qkt_coo_naive(&q, &k, &pat, 0.25);
+        let s_dense = qkt_dense_masked(&q, &k, &pat, 0.25);
+        for e in 0..pat.nnz() {
+            let (i, j) = (pat.rows[e] as usize, pat.cols[e] as usize);
+            assert!((s_sparse[e] - s_dense.at2(i, j)).abs() < 1e-4);
+        }
+        // masked entries in dense are NEG_INF-ish
+        for i in 0..6 {
+            for j in 0..6 {
+                if !pat.to_bool_mask()[i * 6 + j] {
+                    assert!(s_dense.at2(i, j) < NEG_INF / 2.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn av_matches_manual() {
+        let parents = [usize::MAX, 0];
+        let pat = CooPattern::from_tree(&parents); // entries (0,0),(1,0),(1,1)
+        let v = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let p = vec![1.0, 0.5, 0.5];
+        let o = av_coo_naive(&p, &pat, &v);
+        assert_eq!(o.data(), &[1., 2., 0.5 * 1. + 0.5 * 3., 0.5 * 2. + 0.5 * 4.]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Optimized COO/CSR sparse kernels — the paper's §III-B.3 ARM optimization,
+//! re-expressed for the host ISA ("Optimized sparse" series of Fig 10b).
+//!
+//! QKᵀ: row-wise continuous access over Q and K with an unrolled 4-lane FMA
+//! (the NEON 128-bit vector analogue); each output value accumulates in
+//! registers until final (no intermediate load/store).
+//!
+//! AV: execution order reordered so each nonzero A[i,j] multiplies the whole
+//! *row* j of V (contiguous) and accumulates into row i of O, blocked along
+//! Dh so the O panel stays register/cache resident.
+
+use super::{CooPattern, Partials};
+use crate::tensor::Tensor;
+
+/// 4-lane unrolled dot product (register-accumulated).
+#[inline]
+fn dot4(a: &[f32], b: &[f32]) -> f32 {
+    let n4 = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut d = 0;
+    while d < n4 {
+        s0 += a[d] * b[d];
+        s1 += a[d + 1] * b[d + 1];
+        s2 += a[d + 2] * b[d + 2];
+        s3 += a[d + 3] * b[d + 3];
+        d += 4;
+    }
+    let mut tail = 0.0f32;
+    while d < a.len() {
+        tail += a[d] * b[d];
+        d += 1;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Sparse QKᵀ: values aligned with pattern entries, vectorized row-wise.
+pub fn qkt_coo_opt(q: &Tensor, k: &Tensor, pattern: &CooPattern, scale: f32) -> Vec<f32> {
+    let dh = q.shape()[1];
+    assert_eq!(k.shape()[1], dh);
+    let mut s = vec![0.0f32; pattern.nnz()];
+    let qd = q.data();
+    let kd = k.data();
+    for i in 0..pattern.n {
+        let qrow = &qd[i * dh..(i + 1) * dh];
+        let (lo, hi) = (pattern.row_ptr[i] as usize, pattern.row_ptr[i + 1] as usize);
+        for e in lo..hi {
+            let j = pattern.cols[e] as usize;
+            let krow = &kd[j * dh..(j + 1) * dh];
+            s[e] = dot4(qrow, krow) * scale;
+        }
+    }
+    s
+}
+
+/// Dh block size: a panel of BLK f32 accumulators fits comfortably in
+/// registers/L1 while V rows stream contiguously.
+const BLK: usize = 32;
+
+/// Sparse AV with the paper's reordered, blocked accumulation.
+pub fn av_coo_opt(p_vals: &[f32], pattern: &CooPattern, v: &Tensor) -> Tensor {
+    let (w, dh) = (pattern.n, v.shape()[1]);
+    let mut o = Tensor::zeros(&[w, dh]);
+    let vd = v.data();
+    let od = o.data_mut();
+    let mut d0 = 0;
+    while d0 < dh {
+        let blk = BLK.min(dh - d0);
+        for i in 0..w {
+            let (lo, hi) = (pattern.row_ptr[i] as usize, pattern.row_ptr[i + 1] as usize);
+            // register-resident accumulation panel for row i
+            let mut acc = [0.0f32; BLK];
+            for e in lo..hi {
+                let j = pattern.cols[e] as usize;
+                let a = p_vals[e];
+                let vrow = &vd[j * dh + d0..j * dh + d0 + blk];
+                // unrolled FMA into the panel
+                let mut d = 0;
+                let b4 = blk / 4 * 4;
+                while d < b4 {
+                    acc[d] += a * vrow[d];
+                    acc[d + 1] += a * vrow[d + 1];
+                    acc[d + 2] += a * vrow[d + 2];
+                    acc[d + 3] += a * vrow[d + 3];
+                    d += 4;
+                }
+                while d < blk {
+                    acc[d] += a * vrow[d];
+                    d += 1;
+                }
+            }
+            od[i * dh + d0..i * dh + d0 + blk].copy_from_slice(&acc[..blk]);
+        }
+        d0 += blk;
+    }
+    o
+}
+
+/// Full sparse-span attention partials using the optimized kernels: sparse
+/// QKᵀ → per-row masked softmax over present entries only → sparse AV.
+pub fn attention_sparse_opt(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    pattern: &CooPattern,
+    scale: f32,
+) -> Partials {
+    let mut s = qkt_coo_opt(q, k, pattern, scale);
+    let w = pattern.n;
+    let mut ms = vec![0.0f32; w];
+    let mut ls = vec![0.0f32; w];
+    // softmax over present entries of each row (no masked lanes at all)
+    for i in 0..w {
+        let (lo, hi) = (pattern.row_ptr[i] as usize, pattern.row_ptr[i + 1] as usize);
+        let row = &mut s[lo..hi];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            l += *x;
+        }
+        let inv = 1.0 / l;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+        ms[i] = m;
+        ls[i] = l;
+    }
+    let o = av_coo_opt(&s, pattern, v);
+    Partials { o, m: ms, l: ls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::dense_ref::attention_dense_masked;
+    use crate::sparse::spmm_naive::{av_coo_naive, qkt_coo_naive};
+    use crate::util::prop::{check, gens};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn qkt_opt_matches_naive() {
+        let mut rng = Rng::new(31);
+        let parents = [usize::MAX, 0, 0, 1, 1, 2, 5, 5, 3, 0];
+        let pat = CooPattern::from_tree(&parents);
+        let q = Tensor::randn(&[10, 33], 1.0, &mut rng); // odd Dh exercises tails
+        let k = Tensor::randn(&[10, 33], 1.0, &mut rng);
+        let a = qkt_coo_naive(&q, &k, &pat, 0.2);
+        let b = qkt_coo_opt(&q, &k, &pat, 0.2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn av_opt_matches_naive() {
+        let mut rng = Rng::new(32);
+        let parents = [usize::MAX, 0, 1, 1, 0, 4, 4, 2];
+        let pat = CooPattern::from_tree(&parents);
+        let v = Tensor::randn(&[8, 70], 1.0, &mut rng); // > BLK exercises blocking
+        let p: Vec<f32> = (0..pat.nnz()).map(|_| rng.f32()).collect();
+        let a = av_coo_naive(&p, &pat, &v);
+        let b = av_coo_opt(&p, &pat, &v);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sparse_attention_matches_masked_dense() {
+        let mut rng = Rng::new(33);
+        let parents = [usize::MAX, 0, 0, 1, 2, 2, 3, 6];
+        let pat = CooPattern::from_tree(&parents);
+        let w = parents.len();
+        let q = Tensor::randn(&[w, 32], 1.0, &mut rng);
+        let k = Tensor::randn(&[w, 32], 1.0, &mut rng);
+        let v = Tensor::randn(&[w, 32], 1.0, &mut rng);
+        let scale = 32f32.powf(-0.5);
+        let sp = attention_sparse_opt(&q, &k, &v, &pat, scale);
+        let de = attention_dense_masked(&q, &k, &v, &pat, scale);
+        for (x, y) in sp.o.data().iter().zip(de.o.data()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        for i in 0..w {
+            assert!((sp.m[i] - de.m[i]).abs() < 1e-4);
+            // dense l includes ~0 contributions from masked lanes
+            assert!((sp.l[i] - de.l[i]).abs() / de.l[i] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn property_sparse_equals_dense_random_trees() {
+        check(
+            "spmm-opt-vs-dense",
+            40,
+            |r| {
+                let n = r.range(1, 33);
+                (gens::tree_parents(r, n), r.next_u64())
+            },
+            |(parents, seed)| {
+                let pat = CooPattern::from_tree(parents);
+                let w = parents.len();
+                let mut rng = Rng::new(*seed);
+                let dh = [4usize, 8, 16, 31][rng.below(4)];
+                let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+                let k = Tensor::randn(&[w, dh], 1.0, &mut rng);
+                let v = Tensor::randn(&[w, dh], 1.0, &mut rng);
+                let scale = (dh as f32).powf(-0.5);
+                let sp = attention_sparse_opt(&q, &k, &v, &pat, scale);
+                let de = attention_dense_masked(&q, &k, &v, &pat, scale);
+                for (x, y) in sp.o.data().iter().zip(de.o.data()) {
+                    if (x - y).abs() > 1e-3 {
+                        return Err(format!("mismatch {x} vs {y} (w={w}, dh={dh})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,265 @@
+//! The draft-then-verify decode loop, generic over the step executor so the
+//! same controller drives the pure-Rust model (tests, simulator) and the
+//! PJRT runtime (serving).
+
+use crate::model::forward::{RustModel, StepOutput};
+use crate::model::kv_cache::KvCache;
+use crate::model::tokenizer::EOS;
+use crate::model::ModelConfig;
+use crate::sparse::CooPattern;
+use crate::spec::drafter::MedusaDrafter;
+use crate::spec::tree::VerificationTree;
+use crate::spec::verify::verify_greedy;
+use crate::util::mathx::argmax;
+use crate::util::stats::OnlineStats;
+
+/// Anything that can run one decode step of width W. Implemented by the
+/// pure-Rust model here and by `runtime::Engine` (PJRT) in `runtime/`.
+pub trait StepExecutor {
+    fn cfg(&self) -> &ModelConfig;
+    /// Widths this executor supports (AOT executables are fixed-width; the
+    /// pure-Rust model supports any width).
+    fn supports_width(&self, w: usize) -> bool;
+    fn decode(
+        &mut self,
+        tokens: &[u32],
+        pos: &[usize],
+        pattern: &CooPattern,
+        cache: &KvCache,
+    ) -> anyhow::Result<StepOutput>;
+}
+
+impl StepExecutor for RustModel {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn supports_width(&self, _w: usize) -> bool {
+        true
+    }
+
+    fn decode(
+        &mut self,
+        tokens: &[u32],
+        pos: &[usize],
+        pattern: &CooPattern,
+        cache: &KvCache,
+    ) -> anyhow::Result<StepOutput> {
+        Ok(RustModel::decode_step(self, tokens, pos, pattern, cache))
+    }
+}
+
+/// Decoding strategy for a generation.
+#[derive(Clone, Debug)]
+pub enum DecodeMode {
+    /// One token per step (the paper's Sequential baseline).
+    Sequential,
+    /// Medusa tree verification with the given ARCA tree.
+    Speculative(VerificationTree),
+}
+
+/// Outcome of one generation.
+#[derive(Clone, Debug)]
+pub struct GenerateOutcome {
+    pub tokens: Vec<u32>,
+    pub steps: usize,
+    pub acceptance: OnlineStats,
+    pub hit_eos: bool,
+}
+
+impl GenerateOutcome {
+    pub fn mean_acceptance(&self) -> f64 {
+        self.acceptance.mean()
+    }
+}
+
+pub struct SpeculativeController<'a, E: StepExecutor> {
+    exec: &'a mut E,
+    /// Prefill chunk width (must be a supported executor width).
+    prefill_width: usize,
+    drafter: MedusaDrafter,
+}
+
+impl<'a, E: StepExecutor> SpeculativeController<'a, E> {
+    pub fn new(exec: &'a mut E, prefill_width: usize, top_k: usize) -> Self {
+        assert!(exec.supports_width(prefill_width));
+        Self { exec, prefill_width, drafter: MedusaDrafter::new(top_k) }
+    }
+
+    /// Prefill the prompt in chunks, committing KV; returns (logits row,
+    /// medusa rows) at the last prompt position.
+    pub fn prefill(
+        &mut self,
+        prompt: &[u32],
+        cache: &mut KvCache,
+    ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
+        assert!(!prompt.is_empty(), "empty prompt");
+        assert!(prompt.len() <= cache.remaining(), "prompt exceeds context");
+        let w = self.prefill_width;
+        let mut last: Option<(Vec<f32>, Vec<Vec<f32>>)> = None;
+        let mut off = 0;
+        while off < prompt.len() {
+            let n = w.min(prompt.len() - off);
+            // pad the chunk to the executable width with repeats of the last
+            // token; padded positions are never committed or read.
+            let mut toks: Vec<u32> = prompt[off..off + n].to_vec();
+            toks.resize(w, *toks.last().unwrap());
+            let pos: Vec<usize> = (0..w).map(|i| cache.len() + i).collect();
+            let pattern = CooPattern::from_tree(
+                &(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>(),
+            );
+            let out = self.exec.decode(&toks, &pos, &pattern, cache)?;
+            cache.commit_prefix(&out.k_new, &out.v_new, w, n);
+            let row = out.logits.row(n - 1).to_vec();
+            let medusa_rows: Vec<Vec<f32>> =
+                out.medusa_logits.iter().map(|t| t.row(n - 1).to_vec()).collect();
+            last = Some((row, medusa_rows));
+            off += n;
+        }
+        Ok(last.expect("non-empty prompt"))
+    }
+
+    /// Generate up to `max_new` tokens (greedy), in the given mode.
+    pub fn generate(
+        &mut self,
+        prompt: &[u32],
+        max_new: usize,
+        mode: &DecodeMode,
+        cache: &mut KvCache,
+    ) -> anyhow::Result<GenerateOutcome> {
+        let tree = match mode {
+            DecodeMode::Sequential => VerificationTree::root_only(),
+            DecodeMode::Speculative(t) => t.clone(),
+        };
+        assert!(self.exec.supports_width(tree.width()), "no executable for width {}", tree.width());
+
+        let (last_logits, mut medusa_rows) = self.prefill(prompt, cache)?;
+        let mut root = argmax(&last_logits) as u32;
+        let mut out_tokens: Vec<u32> = Vec::new();
+        let mut acceptance = OnlineStats::new();
+        let mut steps = 0usize;
+        let mut hit_eos = false;
+
+        'outer: while out_tokens.len() < max_new {
+            if cache.remaining() < tree.width() {
+                break; // context exhausted
+            }
+            let head_topk: Vec<Vec<u32>> = medusa_rows
+                .iter()
+                .map(|row| {
+                    crate::util::mathx::topk(row, self.drafter.top_k)
+                        .into_iter()
+                        .map(|i| i as u32)
+                        .collect()
+                })
+                .collect();
+            let draft = tree.fill_tokens(root, &head_topk);
+            let pos = tree.positions(cache.len());
+            let pattern = tree.pattern();
+            let out = self.exec.decode(&draft, &pos, &pattern, cache)?;
+            steps += 1;
+
+            let verdict = verify_greedy(&tree, &draft, &out.logits);
+            acceptance.push(verdict.accepted_nodes.len() as f64);
+            cache.commit_selected(&out.k_new, &out.v_new, tree.width(), &verdict.accepted_nodes);
+
+            for &t in &verdict.accepted_tokens {
+                out_tokens.push(t);
+                if t == EOS || out_tokens.len() >= max_new {
+                    hit_eos = t == EOS;
+                    break 'outer;
+                }
+            }
+            root = verdict.next_token;
+            medusa_rows = out
+                .medusa_logits
+                .iter()
+                .map(|t| t.row(verdict.last_node).to_vec())
+                .collect();
+        }
+
+        Ok(GenerateOutcome { tokens: out_tokens, steps, acceptance, hit_eos })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Weights;
+
+    fn setup() -> RustModel {
+        let cfg = ModelConfig::test_small();
+        RustModel::new(cfg.clone(), Weights::random(&cfg, 42))
+    }
+
+    #[test]
+    fn sequential_generates_tokens() {
+        let mut model = setup();
+        let mut cache = KvCache::new(&model.cfg);
+        let mut ctl = SpeculativeController::new(&mut model, 8, 4);
+        let out = ctl
+            .generate(&[1, 2, 3], 10, &DecodeMode::Sequential, &mut cache)
+            .unwrap();
+        assert_eq!(out.tokens.len(), 10);
+        assert_eq!(out.steps, 10);
+        assert!((out.mean_acceptance() - 1.0).abs() < 1e-9);
+    }
+
+    /// THE speculative-decoding correctness invariant: speculative greedy
+    /// output must equal sequential greedy output token-for-token.
+    #[test]
+    fn speculative_output_equals_sequential() {
+        let mut model = setup();
+        let prompt = [1u32, 5, 7, 2];
+        let mut cache_a = KvCache::new(&model.cfg);
+        let seq = {
+            let mut ctl = SpeculativeController::new(&mut model, 8, 4);
+            ctl.generate(&prompt, 12, &DecodeMode::Sequential, &mut cache_a).unwrap()
+        };
+
+        for tree in [
+            VerificationTree::chain(2),
+            VerificationTree::chain(3),
+            VerificationTree::new(vec![usize::MAX, 0, 0, 1, 1, 2], vec![0, 0, 1, 0, 1, 0]),
+        ] {
+            tree.validate().unwrap();
+            let mut cache_b = KvCache::new(&model.cfg);
+            let spec = {
+                let mut ctl = SpeculativeController::new(&mut model, 8, 4);
+                ctl.generate(&prompt, 12, &DecodeMode::Speculative(tree.clone()), &mut cache_b)
+                    .unwrap()
+            };
+            assert_eq!(
+                spec.tokens, seq.tokens,
+                "speculative (width {}) diverged from sequential",
+                tree.width()
+            );
+            assert!(spec.steps <= seq.steps, "speculation should not take more steps");
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_same_output_as_wide() {
+        let mut model = setup();
+        let prompt: Vec<u32> = (1..=11).collect();
+        let mut out = Vec::new();
+        for pf_w in [4usize, 8, 16] {
+            let mut cache = KvCache::new(&model.cfg);
+            let mut ctl = SpeculativeController::new(&mut model, pf_w, 4);
+            out.push(ctl.generate(&prompt, 6, &DecodeMode::Sequential, &mut cache).unwrap().tokens);
+        }
+        assert_eq!(out[0], out[1]);
+        assert_eq!(out[1], out[2]);
+    }
+
+    #[test]
+    fn acceptance_stats_recorded() {
+        let mut model = setup();
+        let mut cache = KvCache::new(&model.cfg);
+        let tree = VerificationTree::chain(3); // depth 2 == n_medusa of test_small
+        let mut ctl = SpeculativeController::new(&mut model, 8, 4);
+        let out = ctl.generate(&[3, 1], 8, &DecodeMode::Speculative(tree), &mut cache).unwrap();
+        assert!(out.acceptance.count() as usize == out.steps);
+        assert!(out.mean_acceptance() >= 1.0);
+    }
+}

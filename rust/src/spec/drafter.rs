@@ -1,0 +1,206 @@
+//! Candidate sources for drafting.
+//!
+//! Two drafters:
+//!  * [`MedusaDrafter`] — extracts top-k candidates from real Medusa head
+//!    logits (the end-to-end serving path with the tiny model).
+//!  * [`AccuracyProfile`] — the calibrated per-head/per-rank accuracy tables
+//!    used for the paper-scale acceptance experiments (Table I). It samples
+//!    accept/reject events under the paper's §III-C.1 independence model:
+//!    within one head, ranks are mutually exclusive (the true token matches
+//!    at most one candidate), so per step we draw which rank (if any) of
+//!    each head is correct.
+
+use crate::spec::tree::VerificationTree;
+use crate::util::mathx::topk;
+use crate::util::rng::Rng;
+
+/// Top-k candidate extraction from real Medusa head logits.
+pub struct MedusaDrafter {
+    pub top_k: usize,
+}
+
+impl MedusaDrafter {
+    pub fn new(top_k: usize) -> Self {
+        Self { top_k }
+    }
+
+    /// `head_logits[d]` is the logits row (len vocab) of Medusa head d at the
+    /// last accepted position. Returns per-head top-k token ids.
+    pub fn candidates(&self, head_logits: &[&[f32]]) -> Vec<Vec<u32>> {
+        head_logits
+            .iter()
+            .map(|row| topk(row, self.top_k).into_iter().map(|i| i as u32).collect())
+            .collect()
+    }
+}
+
+/// Calibrated per-head, per-rank top-k accuracy table: `heads[d][k]` is the
+/// probability that Medusa head d's rank-k candidate equals the true token
+/// at position +d+1, given the prefix up to +d is correct.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AccuracyProfile {
+    pub name: String,
+    pub heads: Vec<Vec<f64>>,
+}
+
+impl AccuracyProfile {
+    pub fn new(name: impl Into<String>, heads: Vec<Vec<f64>>) -> Self {
+        let p = Self { name: name.into(), heads };
+        for (d, h) in p.heads.iter().enumerate() {
+            let s: f64 = h.iter().sum();
+            assert!(s <= 1.0 + 1e-9, "head {d} rank accuracies sum to {s} > 1");
+            assert!(h.windows(2).all(|w| w[0] >= w[1] - 1e-12), "head {d} ranks not descending");
+        }
+        p
+    }
+
+    /// Geometric-family profile: head d rank k accuracy = c·ρ^d·r^k,
+    /// truncated so each head sums below `cap`. This is the 4-parameter
+    /// family the ARCA calibration fits to Table I.
+    pub fn geometric(name: impl Into<String>, c: f64, rho: f64, r: f64, ranks: usize, cap: f64) -> Self {
+        let mut heads = Vec::new();
+        for d in 0..8 {
+            let mut h: Vec<f64> = (0..ranks).map(|k| c * rho.powi(d as i32) * r.powi(k as i32)).collect();
+            let s: f64 = h.iter().sum();
+            if s > cap {
+                for x in h.iter_mut() {
+                    *x *= cap / s;
+                }
+            }
+            heads.push(h);
+        }
+        Self::new(name, heads)
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    /// Draw, for each head, which rank is correct this step (or None).
+    pub fn draw_correct_ranks(&self, rng: &mut Rng) -> Vec<Option<usize>> {
+        self.heads
+            .iter()
+            .map(|ranks| {
+                let mut x = rng.f64();
+                for (k, &a) in ranks.iter().enumerate() {
+                    x -= a;
+                    if x < 0.0 {
+                        return Some(k);
+                    }
+                }
+                None
+            })
+            .collect()
+    }
+
+    /// Sample the acceptance length of one verification step of `tree`:
+    /// the longest root path whose every node's (head, rank) was drawn
+    /// correct, plus the root itself.
+    pub fn sample_acceptance(&self, tree: &VerificationTree, rng: &mut Rng) -> usize {
+        let correct = self.draw_correct_ranks(rng);
+        let n = tree.width();
+        let mut alive = vec![false; n];
+        alive[0] = true;
+        let mut best = 1usize;
+        for i in 1..n {
+            let head = tree.depths[i] - 1;
+            let ok = alive[tree.parents[i]]
+                && correct.get(head).copied().flatten() == Some(tree.ranks[i]);
+            alive[i] = ok;
+            if ok {
+                best = best.max(tree.depths[i] + 1);
+            }
+        }
+        best
+    }
+
+    /// Monte-Carlo mean acceptance length over `steps` draws.
+    pub fn measure_acceptance(&self, tree: &VerificationTree, steps: usize, seed: u64) -> f64 {
+        let mut rng = Rng::new(seed);
+        let total: usize = (0..steps).map(|_| self.sample_acceptance(tree, &mut rng)).sum();
+        total as f64 / steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medusa_drafter_topk() {
+        let d = MedusaDrafter::new(3);
+        let row0 = vec![0.0f32, 5.0, 1.0, 4.0];
+        let row1 = vec![2.0f32, 0.0, 3.0, -1.0];
+        let c = d.candidates(&[&row0, &row1]);
+        assert_eq!(c[0], vec![1, 3, 2]);
+        assert_eq!(c[1], vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn sample_acceptance_root_only_is_one() {
+        let p = AccuracyProfile::new("t", vec![vec![0.9]]);
+        let t = VerificationTree::root_only();
+        let mut rng = Rng::new(0);
+        for _ in 0..10 {
+            assert_eq!(p.sample_acceptance(&t, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn monte_carlo_matches_expectation_chain() {
+        let p = AccuracyProfile::new("t", vec![vec![0.7], vec![0.5], vec![0.3]]);
+        let t = VerificationTree::chain(4);
+        let expect = t.expected_acceptance(&p.heads);
+        let measured = p.measure_acceptance(&t, 200_000, 42);
+        assert!((measured - expect).abs() < 0.01, "measured {measured} vs expected {expect}");
+    }
+
+    #[test]
+    fn monte_carlo_matches_expectation_branchy() {
+        let p = AccuracyProfile::new(
+            "t",
+            vec![vec![0.55, 0.15, 0.08], vec![0.4, 0.1], vec![0.3]],
+        );
+        // root; two head-0 kids; under first: two head-1 kids; one head-2 leaf
+        let t = VerificationTree::new(
+            vec![usize::MAX, 0, 0, 1, 1, 3],
+            vec![0, 0, 1, 0, 1, 0],
+        );
+        t.validate().unwrap();
+        let expect = t.expected_acceptance(&p.heads);
+        let measured = p.measure_acceptance(&t, 300_000, 7);
+        assert!((measured - expect).abs() < 0.01, "measured {measured} vs expected {expect}");
+    }
+
+    #[test]
+    fn mutually_exclusive_ranks() {
+        // two sibling ranks of the same head can never both be accepted
+        let p = AccuracyProfile::new("t", vec![vec![0.5, 0.5]]);
+        let t = VerificationTree::new(vec![usize::MAX, 0, 0], vec![0, 0, 1]);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            // acceptance length is 1 or 2, never 3 (can't accept both kids)
+            let l = p.sample_acceptance(&t, &mut rng);
+            assert!(l <= 2);
+        }
+        // and with probabilities summing to 1.0 a child is ALWAYS accepted
+        let m = p.measure_acceptance(&t, 50_000, 4);
+        assert!((m - 2.0).abs() < 0.01, "{m}");
+    }
+
+    #[test]
+    #[should_panic(expected = "sum")]
+    fn rejects_overcommitted_head() {
+        AccuracyProfile::new("bad", vec![vec![0.8, 0.4]]);
+    }
+
+    #[test]
+    fn geometric_family_shape() {
+        let p = AccuracyProfile::geometric("g", 0.7, 0.8, 0.3, 6, 0.95);
+        assert!(p.heads[0][0] > p.heads[1][0]); // heads decay
+        assert!(p.heads[0][0] > p.heads[0][1]); // ranks decay
+        for h in &p.heads {
+            assert!(h.iter().sum::<f64>() <= 0.95 + 1e-9);
+        }
+    }
+}

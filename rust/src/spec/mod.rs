@@ -1,0 +1,19 @@
+//! Speculative decoding (Medusa-style multi-head drafting with tree
+//! verification) — the algorithmic half of Ghidorah.
+//!
+//! * [`tree`] — the verification tree: structure, sparsity pattern, masks.
+//! * [`drafter`] — candidate sources: real Medusa heads, or the calibrated
+//!   accuracy-profile drafter used for the paper-scale experiments.
+//! * [`verify`] — greedy tree verification (longest accepted path).
+//! * [`controller`] — the draft-then-verify decode loop over any step
+//!   executor (pure-Rust model or PJRT runtime).
+
+pub mod controller;
+pub mod drafter;
+pub mod tree;
+pub mod verify;
+
+pub use controller::{DecodeMode, GenerateOutcome, SpeculativeController, StepExecutor};
+pub use drafter::AccuracyProfile;
+pub use tree::VerificationTree;
+pub use verify::verify_greedy;

@@ -1,0 +1,202 @@
+//! The verification tree (paper §III-C.1, Fig. 8).
+//!
+//! Node 0 is the root: the target model's own next-token prediction
+//! (always accepted). A node at depth d >= 1 is a candidate from Medusa
+//! head d-1 (the head predicting position +d+1), identified by its top-k
+//! *rank* within that head. The structure is chosen offline by ARCA; the
+//! candidate *tokens* are filled in per decode step from the head logits.
+
+use crate::sparse::CooPattern;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct VerificationTree {
+    /// Parent of each node; parents[0] == usize::MAX (root).
+    pub parents: Vec<usize>,
+    /// Top-k rank of each node within its head; rank[0] == 0 (unused).
+    pub ranks: Vec<usize>,
+    /// Depth of each node (root = 0). Node at depth d draws from head d-1.
+    pub depths: Vec<usize>,
+    /// Children lists (derived).
+    pub children: Vec<Vec<usize>>,
+}
+
+impl VerificationTree {
+    /// Build from parent + rank vectors; depths/children derived.
+    pub fn new(parents: Vec<usize>, ranks: Vec<usize>) -> Self {
+        assert_eq!(parents.len(), ranks.len());
+        assert!(!parents.is_empty(), "tree needs at least the root");
+        assert_eq!(parents[0], usize::MAX, "node 0 must be root");
+        let n = parents.len();
+        let mut depths = vec![0usize; n];
+        let mut children = vec![Vec::new(); n];
+        for i in 1..n {
+            assert!(parents[i] < i, "parents must be topologically ordered");
+            depths[i] = depths[parents[i]] + 1;
+            children[parents[i]].push(i);
+        }
+        Self { parents, ranks, depths, children }
+    }
+
+    /// Root-only tree (sequential decoding; verification width 1).
+    pub fn root_only() -> Self {
+        Self::new(vec![usize::MAX], vec![0])
+    }
+
+    /// A simple chain tree of width w: root + head d top-1 for d = 1..w-1.
+    pub fn chain(w: usize) -> Self {
+        let parents = (0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect();
+        Self::new(parents, vec![0; w])
+    }
+
+    /// Verification width (total number of nodes to verify in one step).
+    pub fn width(&self) -> usize {
+        self.parents.len()
+    }
+
+    /// Maximum depth (== number of Medusa heads actually used).
+    pub fn max_depth(&self) -> usize {
+        self.depths.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The draft-span sparsity pattern (ancestor-or-self).
+    pub fn pattern(&self) -> CooPattern {
+        CooPattern::from_tree(&self.parents)
+    }
+
+    /// Additive f32 attention mask [W, W].
+    pub fn additive_mask(&self, neg: f32) -> Vec<f32> {
+        self.pattern().to_additive_mask(neg)
+    }
+
+    /// Absolute positions of the draft tokens given the committed length.
+    pub fn positions(&self, cache_len: usize) -> Vec<usize> {
+        self.depths.iter().map(|&d| cache_len + d).collect()
+    }
+
+    /// Fill in the draft tokens for this step: `root_token` is the model's
+    /// next-token prediction; `head_topk[d][k]` is rank-k candidate of
+    /// Medusa head d. Requires head_topk.len() >= max_depth().
+    pub fn fill_tokens(&self, root_token: u32, head_topk: &[Vec<u32>]) -> Vec<u32> {
+        assert!(head_topk.len() >= self.max_depth(), "not enough heads for tree depth");
+        self.parents
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                if i == 0 {
+                    root_token
+                } else {
+                    let head = self.depths[i] - 1;
+                    head_topk[head][self.ranks[i]]
+                }
+            })
+            .collect()
+    }
+
+    /// Expected acceptance length under per-head rank accuracies
+    /// (independence assumption of §III-C.1):
+    /// E[L] = 1 + Σ_{node != root} Π_{(d, k) on path} a_{d-1}(k).
+    pub fn expected_acceptance(&self, head_acc: &[Vec<f64>]) -> f64 {
+        let n = self.width();
+        let mut path_prob = vec![0.0f64; n];
+        path_prob[0] = 1.0;
+        let mut e = 1.0;
+        for i in 1..n {
+            let head = self.depths[i] - 1;
+            let acc = head_acc
+                .get(head)
+                .and_then(|h| h.get(self.ranks[i]))
+                .copied()
+                .unwrap_or(0.0);
+            path_prob[i] = path_prob[self.parents[i]] * acc;
+            e += path_prob[i];
+        }
+        e
+    }
+
+    /// Validity check used by property tests and the ARCA search.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.width();
+        for i in 1..n {
+            if self.parents[i] >= i {
+                return Err(format!("node {i} parent {} not topological", self.parents[i]));
+            }
+            if self.depths[i] != self.depths[self.parents[i]] + 1 {
+                return Err(format!("node {i} depth inconsistent"));
+            }
+        }
+        // ranks unique among siblings (same parent): duplicated candidate
+        // tokens in one sibling set would be redundant verification work.
+        for (p, kids) in self.children.iter().enumerate() {
+            let mut seen = std::collections::HashSet::new();
+            for &c in kids {
+                if !seen.insert(self.ranks[c]) {
+                    return Err(format!("duplicate sibling rank under node {p}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_structure() {
+        let t = VerificationTree::chain(4);
+        assert_eq!(t.width(), 4);
+        assert_eq!(t.max_depth(), 3);
+        assert_eq!(t.depths, vec![0, 1, 2, 3]);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn fill_tokens_uses_head_rank() {
+        // root + two head-0 candidates + one head-1 candidate under first
+        let t = VerificationTree::new(vec![usize::MAX, 0, 0, 1], vec![0, 0, 1, 0]);
+        let toks = t.fill_tokens(99, &[vec![10, 11], vec![20, 21]]);
+        assert_eq!(toks, vec![99, 10, 11, 20]);
+    }
+
+    #[test]
+    fn expected_acceptance_chain() {
+        let t = VerificationTree::chain(3); // root -> h0 top1 -> h1 top1
+        let acc = vec![vec![0.8], vec![0.5]];
+        let e = t.expected_acceptance(&acc);
+        assert!((e - (1.0 + 0.8 + 0.4)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_acceptance_branches_sum() {
+        // root with two head-0 children (ranks 0, 1)
+        let t = VerificationTree::new(vec![usize::MAX, 0, 0], vec![0, 0, 1]);
+        let acc = vec![vec![0.6, 0.2]];
+        assert!((t.expected_acceptance(&acc) - 1.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn positions_offset_by_depth() {
+        let t = VerificationTree::new(vec![usize::MAX, 0, 1, 0], vec![0, 0, 0, 1]);
+        assert_eq!(t.positions(10), vec![10, 11, 12, 11]);
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_sibling_ranks() {
+        let t = VerificationTree {
+            parents: vec![usize::MAX, 0, 0],
+            ranks: vec![0, 1, 1],
+            depths: vec![0, 1, 1],
+            children: vec![vec![1, 2], vec![], vec![]],
+        };
+        assert!(t.validate().is_err());
+    }
+
+    #[test]
+    fn pattern_matches_ancestry() {
+        let t = VerificationTree::new(vec![usize::MAX, 0, 0, 1], vec![0, 0, 1, 0]);
+        let mask = t.pattern().to_bool_mask();
+        assert!(mask[3 * 4 + 1] && mask[3 * 4 + 0] && mask[3 * 4 + 3]);
+        assert!(!mask[3 * 4 + 2]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Greedy tree verification: find the longest drafted path the target model
+//! accepts, plus the bonus token that seeds the next step.
+
+use crate::spec::tree::VerificationTree;
+use crate::tensor::Tensor;
+use crate::util::mathx::argmax;
+
+/// Result of verifying one decode step.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Verdict {
+    /// Accepted node indices, in path order, starting with the root (0).
+    pub accepted_nodes: Vec<usize>,
+    /// The accepted tokens (same order) — these get emitted.
+    pub accepted_tokens: Vec<u32>,
+    /// The model's greedy prediction at the last accepted node: the next
+    /// committed token, which roots the next verification tree.
+    pub next_token: u32,
+    /// Per-head logit rows (medusa) index of the last accepted node — the
+    /// drafter reads candidates from this draft position.
+    pub last_node: usize,
+}
+
+/// Greedy acceptance: starting at the root (always accepted — it *is* the
+/// model's prediction from the previous step), repeatedly descend into the
+/// child whose draft token equals the model's greedy next token at the
+/// current node.
+pub fn verify_greedy(tree: &VerificationTree, draft_tokens: &[u32], logits: &Tensor) -> Verdict {
+    let w = tree.width();
+    assert_eq!(draft_tokens.len(), w);
+    assert_eq!(logits.shape()[0], w);
+
+    let mut accepted_nodes = vec![0usize];
+    let mut cur = 0usize;
+    loop {
+        let pred = argmax(logits.row(cur)) as u32;
+        let next = tree.children[cur].iter().copied().find(|&c| draft_tokens[c] == pred);
+        match next {
+            Some(c) => {
+                accepted_nodes.push(c);
+                cur = c;
+            }
+            None => break,
+        }
+    }
+    let next_token = argmax(logits.row(cur)) as u32;
+    Verdict {
+        accepted_tokens: accepted_nodes.iter().map(|&i| draft_tokens[i]).collect(),
+        accepted_nodes,
+        next_token,
+        last_node: cur,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// logits row that argmaxes to `t`.
+    fn row_for(vocab: usize, t: u32) -> Vec<f32> {
+        let mut r = vec![0.0f32; vocab];
+        r[t as usize] = 10.0;
+        r
+    }
+
+    fn logits_for(vocab: usize, preds: &[u32]) -> Tensor {
+        let mut data = Vec::new();
+        for &p in preds {
+            data.extend(row_for(vocab, p));
+        }
+        Tensor::from_vec(&[preds.len(), vocab], data)
+    }
+
+    #[test]
+    fn accepts_full_chain() {
+        let tree = VerificationTree::chain(3);
+        let draft = vec![5, 6, 7];
+        // model at node0 predicts 6 (matches child), at node1 predicts 7,
+        // at node2 predicts 8 (bonus).
+        let logits = logits_for(16, &[6, 7, 8]);
+        let v = verify_greedy(&tree, &draft, &logits);
+        assert_eq!(v.accepted_nodes, vec![0, 1, 2]);
+        assert_eq!(v.accepted_tokens, vec![5, 6, 7]);
+        assert_eq!(v.next_token, 8);
+    }
+
+    #[test]
+    fn rejects_at_first_mismatch() {
+        let tree = VerificationTree::chain(3);
+        let draft = vec![5, 6, 7];
+        let logits = logits_for(16, &[9, 7, 8]); // node0 predicts 9 != 6
+        let v = verify_greedy(&tree, &draft, &logits);
+        assert_eq!(v.accepted_nodes, vec![0]);
+        assert_eq!(v.next_token, 9);
+        assert_eq!(v.last_node, 0);
+    }
+
+    #[test]
+    fn picks_matching_branch() {
+        // root with two children; model prefers the second child's token
+        let tree = VerificationTree::new(vec![usize::MAX, 0, 0], vec![0, 0, 1]);
+        let draft = vec![5, 6, 7];
+        let logits = logits_for(16, &[7, 1, 2]); // at root predicts 7 -> child 2
+        let v = verify_greedy(&tree, &draft, &logits);
+        assert_eq!(v.accepted_nodes, vec![0, 2]);
+        assert_eq!(v.accepted_tokens, vec![5, 7]);
+        assert_eq!(v.next_token, 2);
+        assert_eq!(v.last_node, 2);
+    }
+
+    #[test]
+    fn root_only_emits_bonus() {
+        let tree = VerificationTree::root_only();
+        let logits = logits_for(8, &[3]);
+        let v = verify_greedy(&tree, &[2], &logits);
+        assert_eq!(v.accepted_tokens, vec![2]);
+        assert_eq!(v.next_token, 3);
+    }
+}

@@ -1,0 +1,218 @@
+//! A small dense f32 tensor substrate (ndarray-lite) used by the pure-Rust
+//! reference forward pass, the sparse kernels' dense baselines, and the
+//! hetero-core simulator's "real math" execution.
+//!
+//! Row-major, owned storage, 1–4 dims. Deliberately simple: the hot paths
+//! that matter for the paper (GEMM, masked attention, SpMM) live in
+//! dedicated blocked kernels below / in `sparse::`.
+
+mod gemm;
+
+pub use gemm::{gemm, gemm_bias, gemm_nt, matmul_cols};
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(|_| rng.normal() as f32 * std).collect() }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // ---- 2D access ---------------------------------------------------------
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Contiguous slice of the first axis: self[i] as an (ndim-1) tensor view
+    /// (copies; used off the hot path).
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor::from_vec(&self.shape[1..], self.data[i * inner..(i + 1) * inner].to_vec())
+    }
+
+    // ---- elementwise -------------------------------------------------------
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for a in self.data.iter_mut() {
+            *a = f(*a);
+        }
+        self
+    }
+
+    /// 2D transpose (copy).
+    pub fn t(&self) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(&[c, r]);
+        for i in 0..r {
+            for j in 0..c {
+                out.data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        out
+    }
+
+    /// Columns [lo, hi) of a 2D tensor (copy) — the HCMP column split.
+    pub fn cols(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(lo <= hi && hi <= c);
+        let w = hi - lo;
+        let mut out = Tensor::zeros(&[r, w]);
+        for i in 0..r {
+            out.data[i * w..(i + 1) * w].copy_from_slice(&self.data[i * c + lo..i * c + hi]);
+        }
+        out
+    }
+
+    /// Concatenate 2D tensors along axis 1 — the unified-memory "read the
+    /// other unit's slice" composition.
+    pub fn concat_cols(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let r = parts[0].shape[0];
+        let total: usize = parts.iter().map(|p| p.shape[1]).sum();
+        let mut out = Tensor::zeros(&[r, total]);
+        for i in 0..r {
+            let mut off = 0;
+            for p in parts {
+                assert_eq!(p.shape[0], r);
+                let c = p.shape[1];
+                out.data[i * total + off..i * total + off + c].copy_from_slice(p.row(i));
+                off += c;
+            }
+        }
+        out
+    }
+
+    /// Rows [lo, hi) of a 2D tensor (copy).
+    pub fn rows(&self, lo: usize, hi: usize) -> Tensor {
+        assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        Tensor::from_vec(&[hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_access() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn transpose() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.at2(2, 1), 6.0);
+        assert_eq!(tt.t(), t);
+    }
+
+    #[test]
+    fn cols_concat_roundtrip() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::randn(&[4, 10], 1.0, &mut rng);
+        let a = t.cols(0, 4);
+        let b = t.cols(4, 10);
+        let back = Tensor::concat_cols(&[&a, &b]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn index0_slices_first_axis() {
+        let t = Tensor::from_vec(&[2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let s = t.index0(1);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[4., 5., 6., 7.]);
+    }
+}

@@ -1,0 +1,104 @@
+//! Numeric helpers shared by the Rust forward pass, verification and ARCA.
+
+/// Numerically stable softmax in place.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    if xs.is_empty() {
+        return;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in xs.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// log(sum(exp(xs))) without overflow.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest elements, descending by value.
+pub fn topk(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    let k = k.min(xs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+/// Sigmoid-linear unit (swish), the LLaMA MLP activation.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Max relative-or-absolute deviation between two slices (for parity tests).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// `true` iff all pairs are within atol + rtol*|ref|.
+pub fn allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= atol + rtol * y.abs().max(x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![1.0f32, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut xs);
+        assert!((xs.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(xs[3] > xs[2] && xs[2] > xs[1]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut xs = vec![1000.0f32, 1001.0];
+        softmax_inplace(&mut xs);
+        assert!(xs.iter().all(|x| x.is_finite()));
+        assert!((xs[1] / xs[0] - std::f32::consts::E).abs() < 1e-3);
+    }
+
+    #[test]
+    fn topk_order() {
+        let xs = [0.1f32, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(topk(&xs, 3), vec![1, 3, 2]);
+        assert_eq!(topk(&xs, 10).len(), 5);
+        assert_eq!(argmax(&xs), 1);
+    }
+
+    #[test]
+    fn logsumexp_stable() {
+        let xs = [1000.0f32, 1000.0];
+        let v = logsumexp(&xs);
+        assert!((v - (1000.0 + 2.0f32.ln())).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained substrates: PRNG, JSON, stats, math helpers.
+//! (The build is fully offline; these replace rand/serde/etc.)
+
+pub mod json;
+pub mod mathx;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

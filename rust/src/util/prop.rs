@@ -1,0 +1,159 @@
+//! Mini property-testing framework (offline build: no proptest/quickcheck).
+//!
+//! Deterministic: every case derives from a fixed master seed, and failures
+//! report the case seed so they can be replayed exactly. Supports basic
+//! shrinking for integer vectors via halving.
+
+use crate::util::rng::Rng;
+
+pub const DEFAULT_CASES: usize = 128;
+
+/// Run `f` on `cases` generated inputs. `gen` builds an input from an Rng;
+/// `f` returns Err(msg) on property violation.
+pub fn check<T: std::fmt::Debug, G, F>(name: &str, cases: usize, mut gen: G, mut f: F)
+where
+    G: FnMut(&mut Rng) -> T,
+    F: FnMut(&T) -> Result<(), String>,
+{
+    let mut master = Rng::new(0x9E3779B97F4A7C15 ^ hash_name(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = f(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like `check` but additionally tries to shrink a failing `Vec<usize>`-like
+/// input by halving its length, reporting the smallest reproduction found.
+pub fn check_vec<G, F>(name: &str, cases: usize, mut gen: G, mut f: F)
+where
+    G: FnMut(&mut Rng) -> Vec<usize>,
+    F: FnMut(&[usize]) -> Result<(), String>,
+{
+    let mut master = Rng::new(0xDEADBEEF ^ hash_name(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = f(&input) {
+            // shrink: repeatedly try dropping halves / single elements
+            let mut best = input.clone();
+            let mut msg = first_msg;
+            let mut improved = true;
+            while improved && best.len() > 1 {
+                improved = false;
+                let half = best.len() / 2;
+                for candidate in [best[..half].to_vec(), best[half..].to_vec()] {
+                    if candidate.is_empty() {
+                        continue;
+                    }
+                    if let Err(m) = f(&candidate) {
+                        best = candidate;
+                        msg = m;
+                        improved = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}):\n  {msg}\n  shrunk input ({} elems): {best:?}",
+                best.len()
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Generator helpers.
+pub mod gens {
+    use crate::util::rng::Rng;
+
+    pub fn f32_vec(rng: &mut Rng, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| (rng.normal() as f32) * scale).collect()
+    }
+
+    pub fn usize_vec(rng: &mut Rng, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| rng.range(lo, hi)).collect()
+    }
+
+    /// Random verification-tree parent vector: parents[0] = usize::MAX
+    /// (root); parents[i] < i.
+    pub fn tree_parents(rng: &mut Rng, n: usize) -> Vec<usize> {
+        let mut p = vec![usize::MAX];
+        for i in 1..n {
+            p.push(rng.below(i));
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("sum-commutes", 50, |r| (r.below(100), r.below(100)), |&(a, b)| {
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+        count += 1;
+        assert_eq!(count, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, |r| r.below(10), |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk input")]
+    fn shrinking_reports_smaller_input() {
+        check_vec(
+            "has-a-seven",
+            50,
+            |r| gens::usize_vec(r, 20, 0, 10),
+            |xs| {
+                if xs.contains(&7) {
+                    Err("contains 7".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn tree_parents_valid() {
+        check("tree-parents", 30, |r| gens::tree_parents(r, 16), |p| {
+            if p[0] != usize::MAX {
+                return Err("root must have MAX parent".into());
+            }
+            for (i, &par) in p.iter().enumerate().skip(1) {
+                if par >= i {
+                    return Err(format!("parent {par} >= index {i}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,152 @@
+//! Workload generation: request traces for the serving experiments.
+//!
+//! The paper's setting is single-sample inference, but a deployed edge
+//! assistant still sees a *stream* of requests; the trace generator drives
+//! the end-to-end latency-under-load study in `bench ablation`.
+
+use crate::util::rng::Rng;
+
+/// Arrival process of a synthetic request trace.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Arrival {
+    /// Poisson arrivals at `rate` requests/second.
+    Poisson { rate: f64 },
+    /// Bursts of `burst` back-to-back requests every `period` seconds.
+    Bursty { period: f64, burst: usize },
+    /// Closed loop: next request issued immediately after the previous
+    /// completes (think one impatient user).
+    ClosedLoop,
+}
+
+/// One synthetic request.
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// Arrival time offset from trace start (seconds).
+    pub at: f64,
+    pub prompt_len: usize,
+    pub max_new: usize,
+}
+
+/// Generator for request traces with configurable arrival process and
+/// prompt/output length distributions (geometric around the means).
+#[derive(Clone, Debug)]
+pub struct TraceGenerator {
+    pub arrival: Arrival,
+    pub mean_prompt: usize,
+    pub mean_new: usize,
+    pub seed: u64,
+}
+
+impl TraceGenerator {
+    pub fn new(arrival: Arrival, mean_prompt: usize, mean_new: usize, seed: u64) -> Self {
+        Self { arrival, mean_prompt, mean_new, seed }
+    }
+
+    /// Sample a geometric-ish length with the given mean (min 1).
+    fn sample_len(rng: &mut Rng, mean: usize) -> usize {
+        let u = rng.f64().max(1e-12);
+        let x = (-u.ln() * mean as f64).round() as usize;
+        x.max(1)
+    }
+
+    /// Generate `n` requests.
+    pub fn generate(&self, n: usize) -> Vec<TraceRequest> {
+        let mut rng = Rng::new(self.seed);
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        let mut i = 0u64;
+        while out.len() < n {
+            match self.arrival {
+                Arrival::Poisson { rate } => {
+                    // exponential inter-arrival
+                    t += -rng.f64().max(1e-12).ln() / rate;
+                    out.push(self.mk(&mut rng, i, t));
+                    i += 1;
+                }
+                Arrival::Bursty { period, burst } => {
+                    for _ in 0..burst {
+                        if out.len() >= n {
+                            break;
+                        }
+                        out.push(self.mk(&mut rng, i, t));
+                        i += 1;
+                    }
+                    t += period;
+                }
+                Arrival::ClosedLoop => {
+                    out.push(self.mk(&mut rng, i, 0.0));
+                    i += 1;
+                }
+            }
+        }
+        out
+    }
+
+    fn mk(&self, rng: &mut Rng, id: u64, at: f64) -> TraceRequest {
+        TraceRequest {
+            id,
+            at,
+            prompt_len: Self::sample_len(rng, self.mean_prompt),
+            max_new: Self::sample_len(rng, self.mean_new),
+        }
+    }
+}
+
+/// Random printable prompt of a given byte length (for the byte tokenizer).
+pub fn synthetic_prompt(rng: &mut Rng, len: usize) -> String {
+    (0..len).map(|_| (b' ' + rng.below(95) as u8) as char).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_rate_approximately_holds() {
+        let g = TraceGenerator::new(Arrival::Poisson { rate: 10.0 }, 16, 32, 1);
+        let trace = g.generate(2000);
+        let span = trace.last().unwrap().at;
+        let measured = trace.len() as f64 / span;
+        assert!((measured - 10.0).abs() / 10.0 < 0.15, "rate {measured}");
+        // arrivals strictly increasing
+        assert!(trace.windows(2).all(|w| w[1].at >= w[0].at));
+    }
+
+    #[test]
+    fn bursty_produces_bursts() {
+        let g = TraceGenerator::new(Arrival::Bursty { period: 1.0, burst: 4 }, 8, 8, 2);
+        let trace = g.generate(12);
+        assert_eq!(trace.len(), 12);
+        assert_eq!(trace[0].at, trace[3].at);
+        assert!(trace[4].at > trace[3].at);
+    }
+
+    #[test]
+    fn lengths_have_requested_mean() {
+        let g = TraceGenerator::new(Arrival::ClosedLoop, 20, 40, 3);
+        let trace = g.generate(4000);
+        let mp: f64 =
+            trace.iter().map(|r| r.prompt_len as f64).sum::<f64>() / trace.len() as f64;
+        let mn: f64 = trace.iter().map(|r| r.max_new as f64).sum::<f64>() / trace.len() as f64;
+        assert!((mp - 20.0).abs() < 2.0, "prompt mean {mp}");
+        assert!((mn - 40.0).abs() < 4.0, "new mean {mn}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = TraceGenerator::new(Arrival::Poisson { rate: 5.0 }, 16, 16, 9);
+        let a = g.generate(50);
+        let b = g.generate(50);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.at == y.at && x.prompt_len == y.prompt_len));
+    }
+
+    #[test]
+    fn synthetic_prompts_are_printable() {
+        let mut rng = Rng::new(4);
+        let p = synthetic_prompt(&mut rng, 64);
+        assert_eq!(p.len(), 64);
+        assert!(p.bytes().all(|b| (b' '..=b'~').contains(&b)));
+    }
+}

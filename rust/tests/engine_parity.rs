@@ -1,0 +1,99 @@
+//! Property-style parity: the PJRT (AOT) engine and the pure-Rust forward
+//! must agree on random tree steps and random cache states. Skipped when
+//! artifacts are missing.
+
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::kv_cache::KvCache;
+use ghidorah::model::weights::Weights;
+use ghidorah::runtime::{Artifacts, Runtime};
+use ghidorah::sparse::CooPattern;
+use ghidorah::util::mathx::allclose;
+use ghidorah::util::rng::Rng;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = Artifacts::default_dir();
+    if Artifacts::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn chain(w: usize) -> CooPattern {
+    CooPattern::from_tree(
+        &(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>(),
+    )
+}
+
+/// 12 random (tree, cache-depth, tokens) cases at width 8 must match within
+/// f32 tolerance across engines.
+#[test]
+fn random_tree_steps_agree() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let w = 8usize;
+    let rt = Runtime::load_widths(&dir, &[w, 16]).expect("runtime");
+    let cfg = rt.cfg().clone();
+    let rust = RustModel::new(cfg.clone(), Weights::load_npz(&dir.join("weights.npz"), &cfg).unwrap());
+    let mut rng = Rng::new(0xD00D);
+
+    for case in 0..12 {
+        // random prefill depth via the rust engine
+        let mut cache = KvCache::new(&cfg);
+        let pf = rng.range(1, 17);
+        let toks: Vec<u32> = (0..pf).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let pos: Vec<usize> = (0..pf).collect();
+        let out = rust.decode_step(&toks, &pos, &chain(pf), &cache);
+        cache.commit_prefix(&out.k_new, &out.v_new, pf, pf);
+
+        // random verification tree of width 8
+        let parents: Vec<usize> = (0..w)
+            .map(|i| if i == 0 { usize::MAX } else { rng.below(i) })
+            .collect();
+        let pattern = CooPattern::from_tree(&parents);
+        let mut depth = vec![0usize; w];
+        for i in 1..w {
+            depth[i] = depth[parents[i]] + 1;
+        }
+        let draft: Vec<u32> = (0..w).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let dpos: Vec<usize> = depth.iter().map(|d| cache.len() + d).collect();
+
+        let a = rust.decode_step(&draft, &dpos, &pattern, &cache);
+        let b = rt.decode_step(&draft, &dpos, &pattern, &cache).expect("pjrt");
+        assert!(
+            allclose(a.logits.data(), b.logits.data(), 1e-2, 1e-2),
+            "case {case}: logits diverged (max {})",
+            ghidorah::util::mathx::max_abs_diff(a.logits.data(), b.logits.data())
+        );
+        assert!(allclose(&a.k_new, &b.k_new, 1e-2, 1e-2), "case {case}: k_new diverged");
+    }
+}
+
+/// Greedy argmax decisions (what the verifier consumes) must be identical,
+/// not merely close, over a long sequential rollout.
+#[test]
+fn greedy_decisions_identical_over_rollout() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    use ghidorah::spec::controller::{DecodeMode, SpeculativeController};
+
+    let mut rt = Runtime::load_widths(&dir, &[1, 16]).expect("runtime");
+    let cfg = rt.cfg().clone();
+    let mut rust =
+        RustModel::new(cfg.clone(), Weights::load_npz(&dir.join("weights.npz"), &cfg).unwrap());
+
+    for seed in [1u64, 2, 3] {
+        let mut rng = Rng::new(seed);
+        let plen = rng.range(2, 12);
+        let prompt: Vec<u32> = (0..plen).map(|_| rng.below(256) as u32).collect();
+
+        let mut ca = KvCache::new(&cfg);
+        let a = SpeculativeController::new(&mut rust, 16, 4)
+            .generate(&prompt, 16, &DecodeMode::Sequential, &mut ca)
+            .unwrap();
+        let mut cb = KvCache::new(&cfg);
+        let b = SpeculativeController::new(&mut rt, 16, 4)
+            .generate(&prompt, 16, &DecodeMode::Sequential, &mut cb)
+            .unwrap();
+        assert_eq!(a.tokens, b.tokens, "seed {seed}: rollouts diverged");
+    }
+}

@@ -1,0 +1,310 @@
+//! Cross-module property tests (custom `util::prop` framework; proptest is
+//! not vendorable offline). Each property runs over deterministic generated
+//! cases with seed-reporting on failure.
+
+use ghidorah::model::kv_cache::KvCache;
+use ghidorah::model::ModelConfig;
+use ghidorah::sparse::{
+    attention_dense_masked, attention_sparse_opt, merge_partials, CooPattern,
+};
+use ghidorah::spec::drafter::AccuracyProfile;
+use ghidorah::spec::tree::VerificationTree;
+use ghidorah::spec::verify::verify_greedy;
+use ghidorah::tensor::{gemm, gemm_nt, matmul_cols, Tensor};
+use ghidorah::util::json::Json;
+use ghidorah::util::prop::{check, gens};
+use ghidorah::util::rng::Rng;
+
+/// COO pattern from any tree: diagonal present, row-major sorted, ancestry
+/// closed (parent's ancestry ⊆ child's).
+#[test]
+fn prop_coo_pattern_wellformed() {
+    check("coo-wellformed", 200, |r| { let n = r.range(1, 65); gens::tree_parents(r, n) }, |parents| {
+        let pat = CooPattern::from_tree(parents);
+        let n = parents.len();
+        if pat.row_ptr.len() != n + 1 {
+            return Err("row_ptr length".into());
+        }
+        for i in 0..n {
+            let cols = pat.row_cols(i);
+            if cols.is_empty() || *cols.last().unwrap() as usize != i {
+                return Err(format!("row {i} missing diagonal"));
+            }
+            if !cols.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("row {i} not strictly ascending"));
+            }
+            // ancestry closure
+            if parents[i] != usize::MAX {
+                let pcols = pat.row_cols(parents[i]);
+                for c in pcols {
+                    if !cols.contains(c) {
+                        return Err(format!("row {i} missing ancestor {c}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Optimized sparse attention == masked dense attention for any tree/shape.
+#[test]
+fn prop_sparse_equals_dense() {
+    check(
+        "sparse-vs-dense",
+        60,
+        |r| { let n = r.range(1, 40); (gens::tree_parents(r, n), r.next_u64()) },
+        |(parents, seed)| {
+            let pat = CooPattern::from_tree(parents);
+            let w = parents.len();
+            let mut rng = Rng::new(*seed);
+            let dh = [4usize, 8, 16, 32][rng.below(4)];
+            let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+            let k = Tensor::randn(&[w, dh], 1.0, &mut rng);
+            let v = Tensor::randn(&[w, dh], 1.0, &mut rng);
+            let scale = (dh as f32).powf(-0.5);
+            let a = attention_sparse_opt(&q, &k, &v, &pat, scale);
+            let b = attention_dense_masked(&q, &k, &v, &pat, scale);
+            for (x, y) in a.o.data().iter().zip(b.o.data()) {
+                if (x - y).abs() > 1e-3 {
+                    return Err(format!("o mismatch {x} vs {y}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Splitting any key span and merging online-softmax partials == joint
+/// softmax over the whole span (HCMP's core numerical identity).
+#[test]
+fn prop_online_softmax_split_invariant() {
+    check("online-softmax-split", 80, |r| (r.range(1, 12), r.range(2, 40), r.next_u64()), |&(w, span, seed)| {
+        let mut rng = Rng::new(seed);
+        let dh = 8;
+        let cut = rng.range(1, span);
+        let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let k = Tensor::randn(&[span, dh], 1.0, &mut rng);
+        let v = Tensor::randn(&[span, dh], 1.0, &mut rng);
+        let scale = (dh as f32).powf(-0.5);
+
+        let part = |lo: usize, hi: usize| {
+            // dense attention of q against k[lo..hi] as partials
+            let ks = k.rows(lo, hi);
+            let vs = v.rows(lo, hi);
+            let s = gemm_nt(&q, &ks);
+            let mut o = Tensor::zeros(&[w, dh]);
+            let (mut ms, mut ls) = (vec![0.0f32; w], vec![0.0f32; w]);
+            for i in 0..w {
+                let row: Vec<f32> = s.row(i).iter().map(|x| x * scale).collect();
+                let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let e: Vec<f32> = row.iter().map(|x| (x - m).exp()).collect();
+                let l: f32 = e.iter().sum();
+                for (j, p) in e.iter().enumerate() {
+                    for d in 0..dh {
+                        o.row_mut(i)[d] += p / l * vs.at2(j, d);
+                    }
+                }
+                ms[i] = m;
+                ls[i] = l;
+            }
+            ghidorah::sparse::Partials { o, m: ms, l: ls }
+        };
+        let joint = part(0, span);
+        let merged = merge_partials(&part(0, cut), &part(cut, span));
+        for (x, y) in merged.data().iter().zip(joint.o.data()) {
+            if (x - y).abs() > 1e-4 {
+                return Err(format!("merge mismatch {x} vs {y} (cut {cut}/{span})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Column-split GEMM shards always compose to the full GEMM.
+#[test]
+fn prop_column_split_composes() {
+    check("column-split", 60, |r| (r.range(1, 10), r.range(1, 40), r.range(2, 50), r.next_u64()), |&(m, k, n, seed)| {
+        let mut rng = Rng::new(seed);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let cut = rng.range(1, n);
+        let full = gemm(&a, &b);
+        let left = matmul_cols(&a, &b, 0, cut);
+        let right = matmul_cols(&a, &b, cut, n);
+        let joined = Tensor::concat_cols(&[&left, &right]);
+        for (x, y) in joined.data().iter().zip(full.data()) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("{x} vs {y} at cut {cut}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Greedy verification accepts exactly a root-path and the verdict tokens
+/// match the draft; acceptance length is within [1, depth+1].
+#[test]
+fn prop_verify_accepts_root_path() {
+    check("verify-path", 100, |r| { let n = r.range(1, 24); (gens::tree_parents(r, n), r.next_u64()) }, |(parents, seed)| {
+        let mut rng = Rng::new(*seed);
+        let w = parents.len();
+        // random ranks with unique siblings
+        let tree = {
+            let mut ranks = vec![0usize; w];
+            let mut count = vec![0usize; w];
+            for i in 1..w {
+                ranks[i] = count[parents[i]];
+                count[parents[i]] += 1;
+            }
+            VerificationTree::new(parents.clone(), ranks)
+        };
+        let vocab = 64usize;
+        let draft: Vec<u32> = (0..w).map(|_| rng.below(vocab) as u32).collect();
+        let mut logits = Tensor::zeros(&[w, vocab]);
+        for i in 0..w {
+            logits.row_mut(i)[rng.below(vocab)] = 5.0;
+        }
+        let v = verify_greedy(&tree, &draft, &logits);
+        if v.accepted_nodes.is_empty() || v.accepted_nodes[0] != 0 {
+            return Err("must accept the root".into());
+        }
+        // path property: consecutive accepted nodes are parent-child
+        for w2 in v.accepted_nodes.windows(2) {
+            if tree.parents[w2[1]] != w2[0] {
+                return Err("accepted nodes are not a path".into());
+            }
+        }
+        if v.accepted_tokens.len() > tree.max_depth() + 1 {
+            return Err("acceptance exceeds depth bound".into());
+        }
+        Ok(())
+    });
+}
+
+/// Expected acceptance == Monte-Carlo measurement for random profiles/trees.
+#[test]
+fn prop_expectation_matches_monte_carlo() {
+    check("acceptance-expectation", 12, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let n_heads = rng.range(1, 5);
+        let heads: Vec<Vec<f64>> = (0..n_heads)
+            .map(|_| {
+                let k = rng.range(1, 5);
+                let mut h: Vec<f64> = (0..k).map(|_| rng.f64() * 0.4).collect();
+                h.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                let s: f64 = h.iter().sum();
+                if s > 0.95 {
+                    for x in h.iter_mut() {
+                        *x *= 0.95 / s;
+                    }
+                }
+                h
+            })
+            .collect();
+        let profile = AccuracyProfile::new("rand", heads.clone());
+        let tree = ghidorah::arca::tree_builder::build_tree(&heads, rng.range(2, 20));
+        let expect = tree.expected_acceptance(&heads);
+        let measured = profile.measure_acceptance(&tree, 120_000, seed ^ 0xABCD);
+        if (measured - expect).abs() > 0.025 {
+            return Err(format!("measured {measured} vs expected {expect}"));
+        }
+        Ok(())
+    });
+}
+
+/// KV commit-then-truncate restores exact state; selective commit equals
+/// prefix commit of the permuted block.
+#[test]
+fn prop_kv_cache_commit_rollback() {
+    check("kv-commit-rollback", 50, |r| (r.range(1, 9), r.next_u64()), |&(w, seed)| {
+        let cfg = ModelConfig::test_small();
+        let mut rng = Rng::new(seed);
+        let n = cfg.n_layers * w * cfg.n_heads * cfg.head_dim;
+        let k: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let v: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut cache = KvCache::new(&cfg);
+        let sel: Vec<usize> = {
+            let mut idx: Vec<usize> = (0..w).collect();
+            rng.shuffle(&mut idx);
+            idx.truncate(rng.range(1, w + 1));
+            idx
+        };
+        let before_len = cache.len();
+        cache.commit_selected(&k, &v, w, &sel);
+        if cache.len() != before_len + sel.len() {
+            return Err("length after commit".into());
+        }
+        let hd = cfg.n_heads * cfg.head_dim;
+        for (slot, &src) in sel.iter().enumerate() {
+            let got = &cache.k_layer(0)[slot * hd..(slot + 1) * hd];
+            let want = &k[src * hd..(src + 1) * hd];
+            if got != want {
+                return Err(format!("slot {slot} != draft {src}"));
+            }
+        }
+        cache.truncate(before_len);
+        if cache.len() != before_len {
+            return Err("rollback failed".into());
+        }
+        Ok(())
+    });
+}
+
+/// JSON roundtrip: dump(parse(x)) is a fixpoint for arbitrary values built
+/// from our own constructors.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::num((rng.normal() * 100.0).round()),
+            3 => Json::str(format!("s{}\"\\\n{}", rng.below(100), rng.below(100))),
+            4 => Json::arr((0..rng.below(4)).map(|_| gen_json(rng, depth - 1)).collect()),
+            _ => Json::obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen_json(rng, depth - 1)))
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|(k, v)| (Box::leak(k.into_boxed_str()) as &str, v))
+                    .collect(),
+            ),
+        }
+    }
+    check("json-roundtrip", 150, |r| {
+        let mut rng = r.fork(1);
+        gen_json(&mut rng, 3)
+    }, |j| {
+        let s = j.dump();
+        let parsed = Json::parse(&s).map_err(|e| format!("parse failed: {e} for {s}"))?;
+        if &parsed != j {
+            return Err(format!("roundtrip mismatch: {s}"));
+        }
+        Ok(())
+    });
+}
+
+/// The ARCA greedy tree always dominates the chain tree of equal width.
+#[test]
+fn prop_greedy_tree_dominates_chain() {
+    check("greedy-dominates-chain", 40, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let heads: Vec<Vec<f64>> = (0..4)
+            .map(|d| {
+                let base = 0.3 + rng.f64() * 0.4;
+                (0..6).map(|k| base * 0.85f64.powi(d) * 0.35f64.powi(k)).collect()
+            })
+            .collect();
+        let w = rng.range(2, 33);
+        let greedy = ghidorah::arca::tree_builder::build_tree(&heads, w);
+        greedy.validate().map_err(|e| format!("invalid tree: {e}"))?;
+        let chain = VerificationTree::chain(w.min(5)); // chain limited by heads
+        let eg = greedy.expected_acceptance(&heads);
+        let ec = chain.expected_acceptance(&heads);
+        if eg + 1e-9 < ec {
+            return Err(format!("greedy {eg} < chain {ec} at width {w}"));
+        }
+        Ok(())
+    });
+}

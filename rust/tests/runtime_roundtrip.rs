@@ -1,0 +1,214 @@
+//! Integration: the AOT/PJRT path against the pure-Rust reference.
+//!
+//! These tests require `make artifacts` to have run; they skip (with a
+//! message) otherwise so `cargo test` stays green on a fresh checkout.
+
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::kv_cache::KvCache;
+use ghidorah::model::weights::Weights;
+use ghidorah::runtime::{Artifacts, Runtime};
+use ghidorah::sparse::CooPattern;
+use ghidorah::spec::tree::VerificationTree;
+use ghidorah::tensor::Tensor;
+use ghidorah::util::mathx::allclose;
+use ghidorah::util::rng::Rng;
+
+fn artifacts_or_skip() -> Option<std::path::PathBuf> {
+    let dir = Artifacts::default_dir();
+    if Artifacts::available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn chain_pattern(w: usize) -> CooPattern {
+    CooPattern::from_tree(&(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>())
+}
+
+/// PJRT-executed decode step must match the pure-Rust forward op-for-op.
+#[test]
+fn pjrt_decode_matches_rust_forward() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let rt = Runtime::load_widths(&dir, &[4]).expect("load runtime");
+    let cfg = rt.cfg().clone();
+    let weights = Weights::load_npz(&dir.join("weights.npz"), &cfg).expect("weights");
+    let rust = RustModel::new(cfg.clone(), weights);
+
+    let mut cache = KvCache::new(&cfg);
+    // seed the cache with a short prefill through the RUST path so both
+    // engines see identical cache contents
+    let prefill = rust.decode_step(&[300, 5, 9, 11], &[0, 1, 2, 3], &chain_pattern(4), &cache);
+    cache.commit_prefix(&prefill.k_new, &prefill.v_new, 4, 4);
+
+    // a branchy tree step on both engines
+    let parents = [usize::MAX, 0, 0, 1];
+    let pattern = CooPattern::from_tree(&parents);
+    let tokens = [7u32, 21, 22, 33];
+    let pos = [4usize, 5, 5, 6];
+
+    let rust_out = rust.decode_step(&tokens, &pos, &pattern, &cache);
+    let pjrt_out = rt.decode_step(&tokens, &pos, &pattern, &cache).expect("pjrt decode");
+
+    assert!(
+        allclose(pjrt_out.logits.data(), rust_out.logits.data(), 5e-3, 5e-3),
+        "logits diverged: max diff {}",
+        ghidorah::util::mathx::max_abs_diff(pjrt_out.logits.data(), rust_out.logits.data())
+    );
+    for (m, (a, b)) in pjrt_out.medusa_logits.iter().zip(&rust_out.medusa_logits).enumerate() {
+        assert!(allclose(a.data(), b.data(), 5e-3, 5e-3), "medusa head {m} diverged");
+    }
+    assert!(allclose(&pjrt_out.k_new, &rust_out.k_new, 5e-3, 5e-3), "k_new diverged");
+    assert!(allclose(&pjrt_out.v_new, &rust_out.v_new, 5e-3, 5e-3), "v_new diverged");
+}
+
+/// Same greedy tokens end-to-end through both engines (sequential mode).
+#[test]
+fn pjrt_generation_matches_rust_generation() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    use ghidorah::spec::controller::{DecodeMode, SpeculativeController};
+
+    let mut rt = Runtime::load_widths(&dir, &[1, 16]).expect("load runtime");
+    let cfg = rt.cfg().clone();
+    let weights = Weights::load_npz(&dir.join("weights.npz"), &cfg).expect("weights");
+    let mut rust = RustModel::new(cfg.clone(), weights);
+
+    let prompt: Vec<u32> = vec![256, 104, 101, 108, 108, 111]; // BOS "hello"
+    let max_new = 8;
+
+    let mut cache_a = KvCache::new(&cfg);
+    let mut ctl_a = SpeculativeController::new(&mut rust, 16, 4);
+    let rust_out = ctl_a.generate(&prompt, max_new, &DecodeMode::Sequential, &mut cache_a).unwrap();
+
+    let mut cache_b = KvCache::new(&cfg);
+    let mut ctl_b = SpeculativeController::new(&mut rt, 16, 4);
+    let pjrt_out = ctl_b.generate(&prompt, max_new, &DecodeMode::Sequential, &mut cache_b).unwrap();
+
+    assert_eq!(rust_out.tokens, pjrt_out.tokens, "generation diverged between engines");
+}
+
+/// Speculative == sequential greedy output *through PJRT* (the paper's
+/// lossless-acceleration invariant on the real AOT path).
+#[test]
+fn pjrt_speculative_equals_sequential() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    use ghidorah::spec::controller::{DecodeMode, SpeculativeController};
+
+    let mut rt = Runtime::load_widths(&dir, &[1, 4, 16]).expect("load runtime");
+    let cfg = rt.cfg().clone();
+    let prompt: Vec<u32> = vec![256, 116, 104, 101]; // BOS "the"
+
+    let mut cache_a = KvCache::new(&cfg);
+    let seq = SpeculativeController::new(&mut rt, 16, 4)
+        .generate(&prompt, 10, &DecodeMode::Sequential, &mut cache_a)
+        .unwrap();
+
+    // width-4 tree: root + 2 head-0 candidates + 1 head-1 candidate
+    let tree = VerificationTree::new(vec![usize::MAX, 0, 0, 1], vec![0, 0, 1, 0]);
+    tree.validate().unwrap();
+    let mut cache_b = KvCache::new(&cfg);
+    let spec = SpeculativeController::new(&mut rt, 16, 4)
+        .generate(&prompt, 10, &DecodeMode::Speculative(tree), &mut cache_b)
+        .unwrap();
+
+    assert_eq!(seq.tokens, spec.tokens, "speculative diverged on the PJRT path");
+    assert!(spec.steps <= seq.steps);
+}
+
+/// The HCMP column-split MLP shard executables compose to the monolithic MLP.
+#[test]
+fn mlp_shards_compose_via_pjrt() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::load_widths(&dir, &[]).expect("load runtime");
+    let cfg = rt.cfg().clone();
+    let w = 16; // shard demo width
+    let mut rng = Rng::new(99);
+    let x = Tensor::randn(&[w, cfg.d_model], 0.5, &mut rng);
+
+    let via_shards = rt.mlp_via_shards(&x).expect("shard mlp");
+
+    // reference: monolithic MLP on host weights
+    let weights = Weights::load_npz(&dir.join("weights.npz"), &cfg).unwrap();
+    let gate = ghidorah::tensor::gemm(&x, weights.get("l0_w_gate"));
+    let up = ghidorah::tensor::gemm(&x, weights.get("l0_w_up"));
+    let mut hfull = gate;
+    for (g, u) in hfull.data_mut().iter_mut().zip(up.data()) {
+        *g = ghidorah::util::mathx::silu(*g) * u;
+    }
+    let o_ref = ghidorah::tensor::gemm(&hfull, weights.get("l0_w_down"));
+
+    assert!(
+        allclose(via_shards.data(), o_ref.data(), 5e-3, 5e-3),
+        "column-sharded MLP diverged from monolithic"
+    );
+}
+
+/// The dense/sparse affinity attention shards merge to full attention.
+#[test]
+fn attention_shards_compose_via_pjrt() {
+    let Some(dir) = artifacts_or_skip() else { return };
+    let mut rt = Runtime::load_widths(&dir, &[]).expect("load runtime");
+    let cfg = rt.cfg().clone();
+    let (h, dh, c, w) = (cfg.n_heads, cfg.head_dim, cfg.max_ctx, 16);
+    let mut rng = Rng::new(7);
+    let q = Tensor::randn(&[h, w, dh], 1.0, &mut rng);
+    let kc = Tensor::randn(&[c, h, dh], 1.0, &mut rng);
+    let vc = Tensor::randn(&[c, h, dh], 1.0, &mut rng);
+    let kn = Tensor::randn(&[h, w, dh], 1.0, &mut rng);
+    let vn = Tensor::randn(&[h, w, dh], 1.0, &mut rng);
+    let cache_len = 37usize;
+
+    let parents: Vec<usize> =
+        (0..w).map(|i| if i == 0 { usize::MAX } else { (i - 1) / 2 }).collect();
+    let pattern = CooPattern::from_tree(&parents);
+    let mask = pattern.to_additive_mask(-1e9);
+
+    let merged =
+        rt.attention_via_shards(&q, &kc, &vc, cache_len, &kn, &vn, &mask).expect("attn shards");
+
+    // host reference: joint softmax over [cache(0..len) ++ draft span]
+    let scale = (dh as f32).powf(-0.5);
+    let mut o_ref = vec![0.0f32; h * w * dh];
+    for head in 0..h {
+        for i in 0..w {
+            let qrow: Vec<f32> = (0..dh).map(|d| q.data()[(head * w + i) * dh + d]).collect();
+            let mut scores = Vec::with_capacity(cache_len + w);
+            for j in 0..cache_len {
+                let mut s = 0.0;
+                for d in 0..dh {
+                    s += qrow[d] * kc.data()[(j * h + head) * dh + d];
+                }
+                scores.push(s * scale);
+            }
+            for j in 0..w {
+                let mut s = 0.0;
+                for d in 0..dh {
+                    s += qrow[d] * kn.data()[(head * w + j) * dh + d];
+                }
+                scores.push(s * scale + mask[i * w + j]);
+            }
+            let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut l = 0.0;
+            for s in scores.iter_mut() {
+                *s = (*s - m).exp();
+                l += *s;
+            }
+            for (j, p) in scores.iter().enumerate() {
+                let vrow = if j < cache_len {
+                    &vc.data()[(j * h + head) * dh..(j * h + head) * dh + dh]
+                } else {
+                    let jj = j - cache_len;
+                    &vn.data()[(head * w + jj) * dh..(head * w + jj) * dh + dh]
+                };
+                for d in 0..dh {
+                    o_ref[(head * w + i) * dh + d] += p / l * vrow[d];
+                }
+            }
+        }
+    }
+    assert!(
+        allclose(merged.data(), &o_ref, 5e-3, 5e-3),
+        "affinity-sharded attention diverged from joint softmax"
+    );
+}
