@@ -1,7 +1,8 @@
 //! End-to-end serving driver (DESIGN.md §e2e-serving): starts the TCP
 //! server on the AOT-compiled tiny model, fires a batch of concurrent
-//! client requests (mixed sequential/speculative), and reports
-//! latency/throughput percentiles. Results are recorded in EXPERIMENTS.md.
+//! client requests (mixed sequential/speculative) that share continuous-
+//! batching decode steps, and reports latency/throughput percentiles plus
+//! the observed batch occupancy. Results are recorded in EXPERIMENTS.md.
 //!
 //! Run: `make artifacts && cargo run --release --example serve_requests`
 
@@ -105,6 +106,12 @@ fn main() -> anyhow::Result<()> {
         lat.mean()
     );
     println!("aggregate throughput: {:.1} tok/s  ({:.2} req/s)", total_tokens as f64 / wall, n as f64 / wall);
+    println!(
+        "batch occupancy: mean {:.2}, max {:.0}  |  queue delay p95: {:.1} ms",
+        stats.get("batch_occupancy_mean").and_then(Json::as_f64).unwrap_or(0.0),
+        stats.get("batch_occupancy_max").and_then(Json::as_f64).unwrap_or(0.0),
+        stats.get("queue_delay_ms_p95").and_then(Json::as_f64).unwrap_or(0.0),
+    );
     println!("server metrics: {}", stats.dump());
     Ok(())
 }

@@ -1,4 +1,6 @@
-//! Serving metrics: request latency, decode throughput, acceptance lengths.
+//! Serving metrics: request latency, decode throughput, acceptance lengths,
+//! and the continuous-batching signals (per-step batch occupancy, per-request
+//! queueing delay before a lane frees up).
 
 use std::sync::Mutex;
 
@@ -13,6 +15,11 @@ struct Inner {
     latency_ms: Samples,
     acceptance: OnlineStats,
     decode_time_s: f64,
+    /// Time each request spent queued before joining the batch.
+    queue_delay_ms: Samples,
+    /// Active sequences per batched step.
+    occupancy: OnlineStats,
+    occupancy_max: u64,
 }
 
 /// Thread-safe metrics sink shared by the scheduler and the server.
@@ -32,7 +39,7 @@ impl Metrics {
         steps: usize,
         latency_s: f64,
         mean_acceptance: f64,
-        decode_time_s: f64,
+        queue_delay_s: f64,
     ) {
         let mut m = self.inner.lock().unwrap();
         m.requests += 1;
@@ -42,11 +49,28 @@ impl Metrics {
         if steps > 0 {
             m.acceptance.push(mean_acceptance);
         }
-        m.decode_time_s += decode_time_s;
+        m.queue_delay_ms.push(queue_delay_s * 1e3);
+    }
+
+    /// Record one batched decode step serving `occupancy` sequences for
+    /// `step_time_s` of engine wall time. Decode time is accumulated here
+    /// (once per shared step) rather than per request, so
+    /// `decode_tokens_per_s` reports *aggregate* throughput — summing the
+    /// overlapped per-request times would undercount batching by ~B×.
+    pub fn record_step(&self, occupancy: usize, step_time_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.occupancy.push(occupancy as f64);
+        m.occupancy_max = m.occupancy_max.max(occupancy as u64);
+        m.decode_time_s += step_time_s;
     }
 
     pub fn requests(&self) -> u64 {
         self.inner.lock().unwrap().requests
+    }
+
+    /// Highest batch occupancy observed so far.
+    pub fn occupancy_max(&self) -> u64 {
+        self.inner.lock().unwrap().occupancy_max
     }
 
     /// Snapshot as JSON (served by the `stats` command).
@@ -54,6 +78,9 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         let thr = if m.decode_time_s > 0.0 { m.tokens_out as f64 / m.decode_time_s } else { 0.0 };
         let (p50, p95) = (m.latency_ms.p50(), m.latency_ms.p95());
+        let (q50, q95) = (m.queue_delay_ms.p50(), m.queue_delay_ms.p95());
+        let (occ_mean, occ_max, occ_steps) =
+            (m.occupancy.mean(), m.occupancy_max, m.occupancy.count());
         Json::obj(vec![
             ("requests", Json::num(m.requests as f64)),
             ("tokens_out", Json::num(m.tokens_out as f64)),
@@ -62,6 +89,11 @@ impl Metrics {
             ("mean_acceptance", Json::num(m.acceptance.mean())),
             ("latency_ms_p50", Json::num(p50)),
             ("latency_ms_p95", Json::num(p95)),
+            ("queue_delay_ms_p50", Json::num(q50)),
+            ("queue_delay_ms_p95", Json::num(q95)),
+            ("batch_steps", Json::num(occ_steps as f64)),
+            ("batch_occupancy_mean", Json::num(occ_mean)),
+            ("batch_occupancy_max", Json::num(occ_max as f64)),
         ])
     }
 }
@@ -73,8 +105,9 @@ mod tests {
     #[test]
     fn snapshot_aggregates() {
         let m = Metrics::new();
-        m.record_request(10, 5, 0.100, 2.0, 0.08);
-        m.record_request(20, 8, 0.200, 2.5, 0.15);
+        m.record_request(10, 5, 0.100, 2.0, 0.010);
+        m.record_request(20, 8, 0.200, 2.5, 0.030);
+        m.record_step(2, 0.23);
         let j = m.snapshot();
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("tokens_out").unwrap().as_usize(), Some(30));
@@ -82,5 +115,37 @@ mod tests {
         assert!((thr - 30.0 / 0.23).abs() < 1e-6);
         let acc = j.get("mean_acceptance").unwrap().as_f64().unwrap();
         assert!((acc - 2.25).abs() < 1e-9);
+        let q50 = j.get("queue_delay_ms_p50").unwrap().as_f64().unwrap();
+        assert!((q50 - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn occupancy_tracks_mean_and_max() {
+        let m = Metrics::new();
+        for occ in [1usize, 3, 2, 4, 2] {
+            m.record_step(occ, 0.01);
+        }
+        assert_eq!(m.occupancy_max(), 4);
+        let j = m.snapshot();
+        assert_eq!(j.get("batch_steps").unwrap().as_usize(), Some(5));
+        let mean = j.get("batch_occupancy_mean").unwrap().as_f64().unwrap();
+        assert!((mean - 2.4).abs() < 1e-9);
+        assert_eq!(j.get("batch_occupancy_max").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn decode_throughput_is_aggregate_not_per_lane() {
+        // 4 overlapped requests share 1s of engine time: throughput must be
+        // tokens / 1s, not tokens / 4s.
+        let m = Metrics::new();
+        for _ in 0..100 {
+            m.record_step(4, 0.01); // 1s of shared steps at occupancy 4
+        }
+        for _ in 0..4 {
+            m.record_request(50, 25, 1.0, 2.0, 0.0);
+        }
+        let j = m.snapshot();
+        let thr = j.get("decode_tokens_per_s").unwrap().as_f64().unwrap();
+        assert!((thr - 200.0).abs() < 1e-6, "got {thr}, want aggregate 200 tok/s");
     }
 }

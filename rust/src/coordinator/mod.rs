@@ -1,14 +1,17 @@
 //! The Layer-3 serving coordinator: request scheduling, decode-engine
 //! dispatch, metrics, and the TCP front-end.
 //!
-//! Single-sample semantics per the paper (end-user devices process one
-//! request at a time); the scheduler serializes requests onto the engine
-//! worker while the server accepts connections concurrently.
+//! Continuous-batching semantics: the scheduler owns one engine worker
+//! whose decode loop runs a *shared* step for every active sequence;
+//! requests join the running batch at step boundaries as KV lanes free up
+//! and leave the moment they finish, while the server accepts connections
+//! concurrently. Batch occupancy and queueing delay are tracked in
+//! [`Metrics`] and surfaced by the server's `stats` command.
 
 pub mod metrics;
 pub mod scheduler;
 pub mod server;
 
 pub use metrics::Metrics;
-pub use scheduler::{EngineChoice, Request, Response, Scheduler};
+pub use scheduler::{EngineChoice, Request, Response, Scheduler, DEFAULT_MAX_BATCH};
 pub use server::Server;

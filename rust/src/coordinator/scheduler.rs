@@ -1,20 +1,35 @@
-//! Request scheduler: serializes decode work onto a single engine worker
-//! (single-sample inference, per the paper's end-user scenario) while
-//! accepting requests from many connections.
+//! Continuous-batching request scheduler.
+//!
+//! One engine worker owns a [`BatchedDecoder`] over a multi-lane
+//! [`BatchKvCache`]. Requests from any number of connections queue on a
+//! channel; at every step boundary the worker admits queued requests into
+//! free KV lanes (join), runs one shared batched decode step for all
+//! active sequences, and retires finished sequences (leave), releasing
+//! their lanes for the next waiting request. A request therefore waits
+//! only while all lanes are busy — not behind the whole queue, as the old
+//! single-sample worker did.
+//!
+//! Metrics: the worker records per-step batch occupancy and per-request
+//! queue delay (submit → lane admission), both surfaced through the
+//! server's `stats` command.
 
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::model::kv_cache::KvCache;
+use crate::model::kv_cache::BatchKvCache;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::model::ModelConfig;
-use crate::spec::controller::{DecodeMode, SpeculativeController, StepExecutor};
+use crate::spec::batch::{BatchedDecoder, BatchedStepExecutor};
 use crate::spec::tree::VerificationTree;
 
 use super::metrics::Metrics;
+
+/// Default maximum number of sequences decoded per shared step.
+pub const DEFAULT_MAX_BATCH: usize = 8;
 
 /// Which decode engine a request wants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -50,12 +65,23 @@ pub struct Response {
     pub steps: usize,
     pub mean_acceptance: f64,
     pub latency_s: f64,
+    /// Time spent queued before a KV lane freed up.
+    pub queue_delay_s: f64,
 }
 
-type Job = (Request, mpsc::Sender<Result<Response, String>>);
+type Reply = mpsc::Sender<Result<Response, String>>;
+type Job = (Request, Reply, Instant);
+
+struct InFlight {
+    req_id: u64,
+    reply: Reply,
+    enqueued: Instant,
+    admitted: Instant,
+}
 
 /// The scheduler owns the engine on a worker thread; `submit` is
-/// thread-safe and blocks until the response is ready.
+/// thread-safe and blocks until the response is ready. Concurrent
+/// submissions share batched decode steps.
 pub struct Scheduler {
     tx: mpsc::Sender<Job>,
     pub metrics: Arc<Metrics>,
@@ -63,20 +89,43 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// Spawn the worker around any step executor. `tree` is the ARCA
-    /// verification tree used for `EngineChoice::Ghidorah`.
+    /// Spawn the worker around any batched step executor with the default
+    /// batch size. `tree` is the ARCA verification tree used for
+    /// `EngineChoice::Ghidorah`.
     ///
     /// The executor is *constructed inside the worker thread* by `factory`:
     /// PJRT handles (the `xla` crate's client/buffers) are not `Send`, so
     /// the engine must be born on the thread that uses it.
-    pub fn spawn<E, F>(factory: F, tree: VerificationTree, prefill_width: usize, top_k: usize) -> Self
+    pub fn spawn<E, F>(
+        factory: F,
+        tree: VerificationTree,
+        prefill_width: usize,
+        top_k: usize,
+    ) -> Self
     where
-        E: StepExecutor + 'static,
+        E: BatchedStepExecutor + 'static,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
+        Self::spawn_with(factory, tree, prefill_width, top_k, DEFAULT_MAX_BATCH)
+    }
+
+    /// Like [`Scheduler::spawn`], with an explicit maximum batch size
+    /// (= number of KV lanes held resident).
+    pub fn spawn_with<E, F>(
+        factory: F,
+        tree: VerificationTree,
+        prefill_width: usize,
+        top_k: usize,
+        max_batch: usize,
+    ) -> Self
+    where
+        E: BatchedStepExecutor + 'static,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Metrics::new());
         let metrics_w = Arc::clone(&metrics);
+        let max_batch = max_batch.max(1);
         let worker = std::thread::Builder::new()
             .name("ghidorah-engine".into())
             .spawn(move || {
@@ -84,40 +133,130 @@ impl Scheduler {
                     Ok(e) => e,
                     Err(e) => {
                         // drain the queue reporting the startup failure
-                        while let Ok((_req, reply)) = rx.recv() {
+                        while let Ok((_req, reply, _enq)) = rx.recv() {
                             let _ = reply.send(Err(format!("engine startup failed: {e:#}")));
                         }
                         return;
                     }
                 };
-                let tokenizer = ByteTokenizer::new();
                 let cfg: ModelConfig = engine.cfg().clone();
-                while let Ok((req, reply)) = rx.recv() {
-                    let started = Instant::now();
-                    let result = run_one(
-                        &mut engine,
-                        &cfg,
-                        &tokenizer,
-                        &req,
-                        &tree,
-                        prefill_width,
-                        top_k,
-                    );
-                    let out = match result {
-                        Ok(mut resp) => {
-                            resp.latency_s = started.elapsed().as_secs_f64();
-                            metrics_w.record_request(
-                                resp.tokens,
-                                resp.steps,
-                                resp.latency_s,
-                                resp.mean_acceptance,
-                                resp.latency_s, // single-sample: decode dominates
-                            );
-                            Ok(resp)
+                let tokenizer = ByteTokenizer::new();
+                let mut caches = BatchKvCache::new(&cfg, max_batch);
+                let mut dec = BatchedDecoder::new(prefill_width, top_k);
+                let mut queue: VecDeque<Job> = VecDeque::new();
+                let mut inflight: HashMap<u64, InFlight> = HashMap::new();
+                let mut next_seq: u64 = 0;
+                let mut closed = false;
+
+                loop {
+                    // block for work when fully idle; otherwise only drain
+                    // what is already queued so the batch keeps stepping.
+                    if dec.active() == 0 && queue.is_empty() {
+                        if closed {
+                            break;
                         }
-                        Err(e) => Err(format!("{e:#}")),
+                        match rx.recv() {
+                            Ok(job) => queue.push_back(job),
+                            Err(_) => break,
+                        }
+                    }
+                    loop {
+                        match rx.try_recv() {
+                            Ok(job) => queue.push_back(job),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                closed = true;
+                                break;
+                            }
+                        }
+                    }
+
+                    // join: admit queued requests while lanes are free
+                    while dec.active() < max_batch && caches.free_lanes() > 0 {
+                        let Some((req, reply, enqueued)) = queue.pop_front() else { break };
+                        let (prompt, max_new, seq_tree) =
+                            match prepare(&cfg, &tokenizer, &req, &tree) {
+                                Ok(p) => p,
+                                Err(e) => {
+                                    let _ = reply.send(Err(e));
+                                    continue;
+                                }
+                            };
+                        let Some(lane) = caches.alloc() else {
+                            queue.push_front((req, reply, enqueued));
+                            break;
+                        };
+                        let sid = next_seq;
+                        next_seq += 1;
+                        if let Err(e) =
+                            dec.admit(&engine, sid, prompt, max_new, seq_tree, lane, &caches)
+                        {
+                            caches.release(lane);
+                            let _ = reply.send(Err(format!("{e:#}")));
+                            continue;
+                        }
+                        inflight.insert(
+                            sid,
+                            InFlight { req_id: req.id, reply, enqueued, admitted: Instant::now() },
+                        );
+                    }
+
+                    if dec.active() == 0 {
+                        continue; // nothing admitted (e.g. all rejected)
+                    }
+                    let occupancy = dec.active();
+                    let step_started = Instant::now();
+                    let step_result = dec.step(&mut engine, &mut caches);
+                    metrics_w.record_step(occupancy, step_started.elapsed().as_secs_f64());
+                    let deliver = |f: crate::spec::batch::FinishedSeq,
+                                   caches: &mut BatchKvCache,
+                                   inflight: &mut HashMap<u64, InFlight>| {
+                        caches.release(f.lane);
+                        let Some(fl) = inflight.remove(&f.id) else { return };
+                        let latency_s = fl.enqueued.elapsed().as_secs_f64();
+                        let queue_delay_s =
+                            fl.admitted.duration_since(fl.enqueued).as_secs_f64();
+                        let resp = Response {
+                            id: fl.req_id,
+                            text: tokenizer.decode(&f.outcome.tokens),
+                            tokens: f.outcome.tokens.len(),
+                            steps: f.outcome.steps,
+                            mean_acceptance: f.outcome.mean_acceptance(),
+                            latency_s,
+                            queue_delay_s,
+                        };
+                        metrics_w.record_request(
+                            resp.tokens,
+                            resp.steps,
+                            latency_s,
+                            resp.mean_acceptance,
+                            queue_delay_s,
+                        );
+                        let _ = fl.reply.send(Ok(resp));
                     };
-                    let _ = reply.send(out);
+                    match step_result {
+                        Ok(finished) => {
+                            for f in finished {
+                                deliver(f, &mut caches, &mut inflight);
+                            }
+                        }
+                        Err(e) => {
+                            // engine failure: deliver sequences that had
+                            // already finished before the failing forward,
+                            // then fail the rest and reclaim their lanes;
+                            // the worker keeps serving.
+                            for f in dec.take_finished() {
+                                deliver(f, &mut caches, &mut inflight);
+                            }
+                            let msg = format!("engine failure: {e:#}");
+                            for (sid, lane) in dec.abort() {
+                                caches.release(lane);
+                                if let Some(fl) = inflight.remove(&sid) {
+                                    let _ = fl.reply.send(Err(msg.clone()));
+                                }
+                            }
+                        }
+                    }
                 }
             })
             .expect("spawn engine worker");
@@ -127,7 +266,9 @@ impl Scheduler {
     /// Submit a request and wait for its response.
     pub fn submit(&self, req: Request) -> Result<Response, String> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx.send((req, reply_tx)).map_err(|_| "scheduler shut down".to_string())?;
+        self.tx
+            .send((req, reply_tx, Instant::now()))
+            .map_err(|_| "scheduler shut down".to_string())?;
         reply_rx.recv().map_err(|_| "engine worker died".to_string())?
     }
 }
@@ -144,35 +285,23 @@ impl Drop for Scheduler {
     }
 }
 
-fn run_one<E: StepExecutor>(
-    engine: &mut E,
+/// Validate a request and resolve its decode configuration.
+fn prepare(
     cfg: &ModelConfig,
     tokenizer: &ByteTokenizer,
     req: &Request,
-    tree: &VerificationTree,
-    prefill_width: usize,
-    top_k: usize,
-) -> Result<Response> {
+    arca_tree: &VerificationTree,
+) -> Result<(Vec<u32>, usize, VerificationTree), String> {
     let prompt = tokenizer.encode(&req.prompt);
     if let Some(&bad) = prompt.iter().find(|&&t| t as usize >= cfg.vocab) {
-        anyhow::bail!("token {bad} out of vocabulary ({} slots)", cfg.vocab);
+        return Err(format!("token {bad} out of vocabulary ({} slots)", cfg.vocab));
     }
-    let mode = match req.engine {
-        EngineChoice::Sequential => DecodeMode::Sequential,
-        EngineChoice::Ghidorah => DecodeMode::Speculative(tree.clone()),
+    let tree = match req.engine {
+        EngineChoice::Sequential => VerificationTree::root_only(),
+        EngineChoice::Ghidorah => arca_tree.clone(),
     };
-    let mut cache = KvCache::new(cfg);
-    let max_new = req.max_new.min(cache.remaining().saturating_sub(prompt.len() + tree.width()));
-    let mut ctl = SpeculativeController::new(engine, prefill_width, top_k);
-    let out = ctl.generate(&prompt, max_new, &mode, &mut cache)?;
-    Ok(Response {
-        id: req.id,
-        text: tokenizer.decode(&out.tokens),
-        tokens: out.tokens.len(),
-        steps: out.steps,
-        mean_acceptance: out.mean_acceptance(),
-        latency_s: 0.0,
-    })
+    let max_new = req.max_new.min(cfg.max_ctx.saturating_sub(prompt.len() + tree.width()));
+    Ok((prompt, max_new, tree))
 }
 
 #[cfg(test)]
@@ -203,6 +332,7 @@ mod tests {
         assert_eq!(resp.tokens, 6);
         assert!(resp.latency_s > 0.0);
         assert_eq!(s.metrics.requests(), 1);
+        assert!(s.metrics.occupancy_max() >= 1);
     }
 
     #[test]
@@ -219,7 +349,7 @@ mod tests {
     }
 
     #[test]
-    fn concurrent_submissions_serialize() {
+    fn concurrent_submissions_share_batched_steps() {
         let s = Arc::new(sched());
         let mut handles = vec![];
         for i in 0..6 {
@@ -239,5 +369,51 @@ mod tests {
             assert_eq!(r.tokens, 4);
         }
         assert_eq!(s.metrics.requests(), 6);
+    }
+
+    #[test]
+    fn batched_responses_match_serialized_responses() {
+        // the same mixed workload, submitted concurrently vs one at a time,
+        // must yield identical text (continuous batching is lossless).
+        let prompts = ["one", "two", "three", "four", "five"];
+        let serial = sched();
+        let mut want = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let engine =
+                if i % 2 == 0 { EngineChoice::Sequential } else { EngineChoice::Ghidorah };
+            want.push(
+                serial
+                    .submit(Request { id: i as u64, prompt: p.to_string(), max_new: 8, engine })
+                    .unwrap()
+                    .text,
+            );
+        }
+        let batched = Arc::new(sched());
+        let mut handles = vec![];
+        for (i, p) in prompts.iter().enumerate() {
+            let s2 = Arc::clone(&batched);
+            let p = p.to_string();
+            handles.push(std::thread::spawn(move || {
+                let engine =
+                    if i % 2 == 0 { EngineChoice::Sequential } else { EngineChoice::Ghidorah };
+                (i, s2.submit(Request { id: i as u64, prompt: p, max_new: 8, engine }).unwrap())
+            }));
+        }
+        for h in handles {
+            let (i, got) = h.join().unwrap();
+            assert_eq!(got.text, want[i], "prompt {i} diverged under concurrent batching");
+        }
+    }
+
+    #[test]
+    fn oversized_token_reports_error() {
+        // vocab-overflow validation is still enforced per request
+        let cfg = ModelConfig::test_small(); // vocab 64 < byte ids
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 1));
+        let s = Scheduler::spawn(move || Ok(model), VerificationTree::root_only(), 8, 4);
+        let err = s
+            .submit(Request { id: 1, prompt: "zz".into(), max_new: 4, engine: EngineChoice::Sequential })
+            .unwrap_err();
+        assert!(err.contains("vocabulary"), "unexpected error: {err}");
     }
 }

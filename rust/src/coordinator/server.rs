@@ -3,12 +3,13 @@
 //! Protocol (one JSON object per line, response per line):
 //!   {"id": 1, "prompt": "hello", "max_new": 32, "engine": "ghidorah"}
 //!   -> {"id": 1, "text": "...", "tokens": 32, "steps": 12,
-//!       "mean_acceptance": 2.6, "latency_ms": 41.2}
-//!   {"cmd": "stats"}    -> metrics snapshot
+//!       "mean_acceptance": 2.6, "latency_ms": 41.2, "queue_delay_ms": 0.3}
+//!   {"cmd": "stats"}    -> metrics snapshot (includes batch occupancy and
+//!                          queue-delay percentiles)
 //!   {"cmd": "shutdown"} -> stops the listener
 //!
-//! Connections are handled on a thread pool; decode work is serialized by
-//! the `Scheduler` (single-sample inference).
+//! Connections are handled on a thread pool; concurrent requests share
+//! batched decode steps through the continuous-batching `Scheduler`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -143,6 +144,7 @@ fn handle_request(msg: &Json, sched: &Scheduler) -> Json {
             ("steps", Json::num(r.steps as f64)),
             ("mean_acceptance", Json::num(r.mean_acceptance)),
             ("latency_ms", Json::num(r.latency_s * 1e3)),
+            ("queue_delay_ms", Json::num(r.queue_delay_s * 1e3)),
         ]),
         Err(e) => Json::obj(vec![("id", Json::num(id as f64)), ("error", Json::str(e))]),
     }

@@ -16,6 +16,6 @@ pub mod unit;
 
 pub use cost::Op;
 pub use partition::{AttentionSplit, PartitionPlan};
-pub use schedule::{EngineKind, StepSchedule};
+pub use schedule::{build_batched_step, build_step, EngineKind, StepSchedule};
 pub use simulator::{SimReport, Simulator};
 pub use unit::{UnifiedMemory, UnitSpec};

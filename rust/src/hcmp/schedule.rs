@@ -65,7 +65,7 @@ fn split_gemm(m: usize, k: usize, n: usize, ratio: f64, gpu: &mut Vec<Op>, cpu: 
     }
 }
 
-/// Build the schedule of one decode step.
+/// Build the schedule of one decode step (single sequence).
 ///
 /// `ctx` is the committed KV length; `pattern` the draft-span sparsity
 /// (None => width-1 sequential, or masked-dense baselines).
@@ -77,11 +77,37 @@ pub fn build_step(
     pattern: Option<&CooPattern>,
     plan: &PartitionPlan,
 ) -> StepSchedule {
+    build_batched_step(cfg, engine, 1, width, ctx, pattern, plan)
+}
+
+/// Build the schedule of one *batched* decode step: `batch` sequences, each
+/// verifying a `width`-wide draft tree against its own `ctx`-long KV lane.
+///
+/// The batch dimension enters exactly where continuous batching executes
+/// it: every linear runs once over all `batch * width` rows (the weight
+/// stream is shared — this is the amortization that makes batching pay on
+/// the memory-bandwidth-bound decode), while the attention spans stay
+/// per-lane (each sequence reads only its own KV cache and draft pattern),
+/// so those ops are replicated per sequence. Keeping both shapes in one
+/// cost model is what lets the ARCA partition search stay consistent
+/// between single- and multi-tenant serving.
+pub fn build_batched_step(
+    cfg: &ModelConfig,
+    engine: EngineKind,
+    batch: usize,
+    width: usize,
+    ctx: usize,
+    pattern: Option<&CooPattern>,
+    plan: &PartitionPlan,
+) -> StepSchedule {
+    assert!(batch >= 1, "batch must be at least 1");
     let d = cfg.d_model;
     let qkv = cfg.qkv_dim();
     let f = cfg.ffn;
     let h = cfg.n_heads;
     let dh = cfg.head_dim;
+    // linear (weight-sharing) row dimension vs per-lane attention width
+    let bm = batch * width;
     let mut phases = Vec::new();
 
     let nnz = pattern.map(|p| p.nnz()).unwrap_or(width * (width + 1) / 2);
@@ -90,17 +116,17 @@ pub fn build_step(
         match engine {
             EngineKind::Sequential | EngineKind::MedusaGpu => {
                 // everything on the GPU, draft span as masked dense
-                let mut gpu = vec![
-                    Op::Gemm { m: width, k: d, n: 3 * qkv }, // fused QKV
-                    Op::AttnDense { m: width, ctx, heads: h, dh },
-                ];
-                if width > 1 {
-                    gpu.push(Op::AttnDraftDense { m: width, heads: h, dh });
+                let mut gpu = vec![Op::Gemm { m: bm, k: d, n: 3 * qkv }]; // fused QKV
+                for _lane in 0..batch {
+                    gpu.push(Op::AttnDense { m: width, ctx, heads: h, dh });
+                    if width > 1 {
+                        gpu.push(Op::AttnDraftDense { m: width, heads: h, dh });
+                    }
                 }
-                gpu.push(Op::Gemm { m: width, k: qkv, n: d });
-                gpu.push(Op::Elementwise { elems: width * d });
-                gpu.push(Op::Gemm { m: width, k: d, n: 2 * f }); // gate+up
-                gpu.push(Op::Gemm { m: width, k: f, n: d });
+                gpu.push(Op::Gemm { m: bm, k: qkv, n: d });
+                gpu.push(Op::Elementwise { elems: bm * d });
+                gpu.push(Op::Gemm { m: bm, k: d, n: 2 * f }); // gate+up
+                gpu.push(Op::Gemm { m: bm, k: f, n: d });
                 phases.push(Phase { gpu, cpu: vec![], syncs: 0 });
             }
             EngineKind::MedusaEM => {
@@ -111,31 +137,33 @@ pub fn build_step(
                 let h_gpu = ((h as f64) * r).round() as usize;
                 let h_cpu = h - h_gpu;
                 let mut p1 = Phase::default();
-                split_gemm(width, d, 3 * qkv, r, &mut p1.gpu, &mut p1.cpu);
-                if h_gpu > 0 {
-                    p1.gpu.push(Op::AttnDense { m: width, ctx, heads: h_gpu, dh });
-                    if width > 1 {
-                        p1.gpu.push(Op::AttnDraftDense { m: width, heads: h_gpu, dh });
+                split_gemm(bm, d, 3 * qkv, r, &mut p1.gpu, &mut p1.cpu);
+                for _lane in 0..batch {
+                    if h_gpu > 0 {
+                        p1.gpu.push(Op::AttnDense { m: width, ctx, heads: h_gpu, dh });
+                        if width > 1 {
+                            p1.gpu.push(Op::AttnDraftDense { m: width, heads: h_gpu, dh });
+                        }
                     }
-                }
-                if h_cpu > 0 {
-                    p1.cpu.push(Op::AttnDense { m: width, ctx, heads: h_cpu, dh });
-                    if width > 1 {
-                        p1.cpu.push(Op::AttnDraftDense { m: width, heads: h_cpu, dh });
+                    if h_cpu > 0 {
+                        p1.cpu.push(Op::AttnDense { m: width, ctx, heads: h_cpu, dh });
+                        if width > 1 {
+                            p1.cpu.push(Op::AttnDraftDense { m: width, heads: h_cpu, dh });
+                        }
                     }
                 }
                 // row-split attn-out GEMM producing partial sums + allreduce
-                p1.gpu.push(Op::Gemm { m: width, k: ((qkv as f64) * r) as usize, n: d });
-                p1.cpu.push(Op::Gemm { m: width, k: qkv - ((qkv as f64) * r) as usize, n: d });
-                p1.gpu.push(Op::AllReduce { elems: width * d });
+                p1.gpu.push(Op::Gemm { m: bm, k: ((qkv as f64) * r) as usize, n: d });
+                p1.cpu.push(Op::Gemm { m: bm, k: qkv - ((qkv as f64) * r) as usize, n: d });
+                p1.gpu.push(Op::AllReduce { elems: bm * d });
                 p1.syncs = 1;
                 phases.push(p1);
 
                 let mut p2 = Phase::default();
-                split_gemm(width, d, 2 * f, r, &mut p2.gpu, &mut p2.cpu);
-                p2.gpu.push(Op::Gemm { m: width, k: ((f as f64) * r) as usize, n: d });
-                p2.cpu.push(Op::Gemm { m: width, k: f - ((f as f64) * r) as usize, n: d });
-                p2.gpu.push(Op::AllReduce { elems: width * d });
+                split_gemm(bm, d, 2 * f, r, &mut p2.gpu, &mut p2.cpu);
+                p2.gpu.push(Op::Gemm { m: bm, k: ((f as f64) * r) as usize, n: d });
+                p2.cpu.push(Op::Gemm { m: bm, k: f - ((f as f64) * r) as usize, n: d });
+                p2.gpu.push(Op::AllReduce { elems: bm * d });
                 p2.syncs = 1;
                 phases.push(p2);
             }
@@ -146,66 +174,68 @@ pub fn build_step(
                 let r = plan.linear_ratio;
                 let a = plan.attention;
                 let mut p1 = Phase::default();
-                split_gemm(width, d, 3 * qkv, r, &mut p1.gpu, &mut p1.cpu);
-                // dense span: context columns split dynamically
+                split_gemm(bm, d, 3 * qkv, r, &mut p1.gpu, &mut p1.cpu);
+                // dense span: context columns split dynamically, per lane
                 let ctx_gpu = ((ctx as f64) * a.dense_gpu_frac).round() as usize;
                 let ctx_cpu = ctx - ctx_gpu;
-                if ctx_gpu > 0 {
-                    p1.gpu.push(Op::AttnDense { m: width, ctx: ctx_gpu, heads: h, dh });
-                }
-                if ctx_cpu > 0 {
-                    p1.cpu.push(Op::AttnDense { m: width, ctx: ctx_cpu, heads: h, dh });
-                }
-                // sparse span: COO on CPU; left-boundary share joins the GPU
-                // as dense rows
                 let nnz_cpu = ((nnz as f64) * a.sparse_cpu_frac).round() as usize;
                 let nnz_gpu = nnz - nnz_cpu;
-                if nnz_cpu > 0 && width > 1 {
-                    p1.cpu.push(Op::AttnSparse { nnz: nnz_cpu, heads: h, dh });
-                }
-                if nnz_gpu > 0 && width > 1 {
-                    // handled as (partial) masked dense on the GPU
-                    let rows = nnz_gpu.div_ceil(width.max(1));
-                    p1.gpu.push(Op::AttnDraftDense { m: rows.max(1), heads: h, dh });
+                for _lane in 0..batch {
+                    if ctx_gpu > 0 {
+                        p1.gpu.push(Op::AttnDense { m: width, ctx: ctx_gpu, heads: h, dh });
+                    }
+                    if ctx_cpu > 0 {
+                        p1.cpu.push(Op::AttnDense { m: width, ctx: ctx_cpu, heads: h, dh });
+                    }
+                    // sparse span: COO on CPU; left-boundary share joins the
+                    // GPU as dense rows
+                    if nnz_cpu > 0 && width > 1 {
+                        p1.cpu.push(Op::AttnSparse { nnz: nnz_cpu, heads: h, dh });
+                    }
+                    if nnz_gpu > 0 && width > 1 {
+                        // handled as (partial) masked dense on the GPU
+                        let rows = nnz_gpu.div_ceil(width.max(1));
+                        p1.gpu.push(Op::AttnDraftDense { m: rows.max(1), heads: h, dh });
+                    }
                 }
                 // online-softmax merge fused into the attn-out read: one sync
-                split_gemm(width, qkv, d, r, &mut p1.gpu, &mut p1.cpu);
+                split_gemm(bm, qkv, d, r, &mut p1.gpu, &mut p1.cpu);
                 p1.syncs = 1;
                 phases.push(p1);
 
                 let mut p2 = Phase::default();
-                split_gemm(width, d, 2 * f, r, &mut p2.gpu, &mut p2.cpu);
-                split_gemm(width, f, d, r, &mut p2.gpu, &mut p2.cpu);
+                split_gemm(bm, d, 2 * f, r, &mut p2.gpu, &mut p2.cpu);
+                split_gemm(bm, f, d, r, &mut p2.gpu, &mut p2.cpu);
                 p2.syncs = 0; // zero-copy column composition, no reduce
                 phases.push(p2);
             }
         }
     }
 
-    // LM head over all W positions (needed to verify every draft token),
-    // plus the Medusa heads at ONE position (the last accepted node is the
-    // only place the next step's candidates are drafted from).
+    // LM head over all B·W positions (needed to verify every draft token),
+    // plus the Medusa heads at ONE position per sequence (the last accepted
+    // node is the only place the next step's candidates are drafted from).
     let heads_m = cfg.n_medusa;
     match engine {
         EngineKind::Sequential | EngineKind::MedusaGpu => {
-            let mut gpu = vec![Op::Gemm { m: width, k: d, n: cfg.vocab }];
+            let mut gpu = vec![Op::Gemm { m: bm, k: d, n: cfg.vocab }];
             if engine == EngineKind::MedusaGpu {
-                gpu.push(Op::Gemm { m: 1, k: d, n: heads_m * d });
-                gpu.push(Op::Gemm { m: heads_m, k: d, n: cfg.vocab });
+                gpu.push(Op::Gemm { m: batch, k: d, n: heads_m * d });
+                gpu.push(Op::Gemm { m: batch * heads_m, k: d, n: cfg.vocab });
             }
             phases.push(Phase { gpu, cpu: vec![], syncs: 0 });
         }
         EngineKind::MedusaEM | EngineKind::Ghidorah => {
             let r = plan.linear_ratio;
             let mut p = Phase::default();
-            split_gemm(width, d, cfg.vocab, r, &mut p.gpu, &mut p.cpu);
-            split_gemm(1, d, heads_m * d, r, &mut p.gpu, &mut p.cpu);
-            split_gemm(heads_m, d, cfg.vocab, r, &mut p.gpu, &mut p.cpu);
+            split_gemm(bm, d, cfg.vocab, r, &mut p.gpu, &mut p.cpu);
+            split_gemm(batch, d, heads_m * d, r, &mut p.gpu, &mut p.cpu);
+            split_gemm(batch * heads_m, d, cfg.vocab, r, &mut p.gpu, &mut p.cpu);
             phases.push(p);
         }
     }
 
-    StepSchedule { phases, width }
+    StepSchedule { phases, width: bm }
 }
 
 #[cfg(test)]
@@ -264,6 +294,63 @@ mod tests {
             .flat_map(|p| p.gpu.iter())
             .any(|o| matches!(o, Op::AttnSparse { .. }));
         assert!(cpu_sparse && !gpu_sparse);
+    }
+
+    fn all_ops(s: &StepSchedule) -> impl Iterator<Item = &Op> {
+        s.phases.iter().flat_map(|p| p.gpu.iter().chain(p.cpu.iter()))
+    }
+
+    #[test]
+    fn batch_of_one_equals_single_step() {
+        let pat = CooPattern::from_tree(&[usize::MAX, 0, 0, 1]);
+        for engine in
+            [EngineKind::Sequential, EngineKind::MedusaGpu, EngineKind::MedusaEM, EngineKind::Ghidorah]
+        {
+            let plan = PartitionPlan::hcmp(0.5);
+            let single = build_step(&cfg(), engine, 4, 256, Some(&pat), &plan);
+            let batched = build_batched_step(&cfg(), engine, 1, 4, 256, Some(&pat), &plan);
+            assert_eq!(single.width, batched.width);
+            assert_eq!(single.phases.len(), batched.phases.len());
+            let a: Vec<&Op> = all_ops(&single).collect();
+            let b: Vec<&Op> = all_ops(&batched).collect();
+            assert_eq!(a, b, "{engine:?}: batch=1 must be the identity");
+        }
+    }
+
+    #[test]
+    fn batched_step_conserves_flops_and_amortizes_weight_traffic() {
+        // B sequences in one step do exactly B times the arithmetic of one
+        // sequence, but stream the weight matrices once instead of B times.
+        let pat = CooPattern::from_tree(&[usize::MAX, 0, 0, 1, 1, 2, 3, 3]);
+        let plan = PartitionPlan::hcmp(0.5);
+        let b = 4usize;
+        let single = build_step(&cfg(), EngineKind::Ghidorah, 8, 256, Some(&pat), &plan);
+        let batched = build_batched_step(&cfg(), EngineKind::Ghidorah, b, 8, 256, Some(&pat), &plan);
+
+        let flops = |s: &StepSchedule| -> f64 { all_ops(s).map(Op::flops).sum() };
+        let gemm_bytes = |s: &StepSchedule| -> f64 {
+            all_ops(s).filter(|o| matches!(o, Op::Gemm { .. })).map(Op::bytes).sum()
+        };
+        let rel = (flops(&batched) - b as f64 * flops(&single)).abs() / flops(&batched);
+        assert!(rel < 1e-9, "batched flops not conserved (rel {rel})");
+        assert!(
+            gemm_bytes(&batched) < 0.5 * b as f64 * gemm_bytes(&single),
+            "weight traffic must amortize across the batch: {} vs {}",
+            gemm_bytes(&batched),
+            b as f64 * gemm_bytes(&single)
+        );
+    }
+
+    #[test]
+    fn batched_attention_is_per_lane() {
+        // attention cannot share KV across sequences: dense-span ops must
+        // appear once per lane.
+        let pat = CooPattern::from_tree(&[usize::MAX, 0, 0, 1]);
+        let plan = PartitionPlan::gpu_only();
+        let b = 3usize;
+        let s = build_batched_step(&cfg(), EngineKind::MedusaGpu, b, 4, 256, Some(&pat), &plan);
+        let n_dense = all_ops(&s).filter(|o| matches!(o, Op::AttnDense { .. })).count();
+        assert_eq!(n_dense, b * cfg().n_layers);
     }
 
     #[test]

@@ -1,5 +1,5 @@
-//! Ghidorah: fast single-sample LLM inference on edge devices with
-//! speculative decoding and hetero-core parallelism.
+//! Ghidorah: fast LLM inference on edge devices with speculative decoding,
+//! hetero-core parallelism, and continuous-batching multi-request serving.
 //!
 //! This crate is the Layer-3 (coordinator) of the three-layer
 //! Rust + JAX + Pallas architecture described in DESIGN.md:
@@ -8,10 +8,11 @@
 //!   `python/compile/kernels/`), AOT-lowered into the model HLO.
 //! * Layer 2 — JAX transformer + Medusa heads (`python/compile/model.py`),
 //!   lowered once to HLO text artifacts.
-//! * Layer 3 — this crate: the speculative-decoding controller, the
-//!   hetero-core model parallelism (HCMP) runtime, the architecture-aware
-//!   profiling (ARCA) pipeline, the PJRT runtime that executes the AOT
-//!   artifacts, and the serving front-end.
+//! * Layer 3 — this crate: the speculative-decoding controller (single
+//!   sequence and batched), the hetero-core model parallelism (HCMP)
+//!   runtime, the architecture-aware profiling (ARCA) pipeline, the PJRT
+//!   runtime that executes the AOT artifacts (feature `pjrt`), and the
+//!   continuous-batching serving front-end.
 
 pub mod arca;
 pub mod bench;

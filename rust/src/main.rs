@@ -45,7 +45,7 @@ fn usage() -> ! {
         "ghidorah {} — speculative decoding + hetero-core parallelism for edge LLM inference
 
 USAGE:
-  ghidorah serve    [--addr 127.0.0.1:7331] [--width 16] [--topk 4]
+  ghidorah serve    [--addr 127.0.0.1:7331] [--width 16] [--topk 4] [--batch 8]
   ghidorah generate --prompt TEXT [--max-new 32] [--engine ghidorah|sequential] [--width 16]
   ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256]
   ghidorah bench    table1|fig9|fig10a|fig10b|ablation|all
@@ -93,18 +93,30 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7331".into());
     let width: usize = flags.get("width").map(|s| s.parse()).transpose()?.unwrap_or(16);
     let top_k: usize = flags.get("topk").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let max_batch: usize = flags
+        .get("batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(ghidorah::coordinator::DEFAULT_MAX_BATCH);
 
     let cfg = load_cfg()?;
     let tree = serving_tree(&cfg, width);
     eprintln!(
-        "ghidorah: model d={} L={} medusa={} | ARCA tree width {} depth {}",
+        "ghidorah: model d={} L={} medusa={} | ARCA tree width {} depth {} | max batch {}",
         cfg.d_model,
         cfg.n_layers,
         cfg.n_medusa,
         tree.width(),
-        tree.max_depth()
+        tree.max_depth(),
+        max_batch
     );
-    let sched = Scheduler::spawn(move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]), tree, 64, top_k);
+    let sched = Scheduler::spawn_with(
+        move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]),
+        tree,
+        64,
+        top_k,
+        max_batch,
+    );
     let server = Server::new(sched, 8);
     server.serve(&addr, |a| eprintln!("ghidorah: listening on {a}"))?;
     eprintln!("ghidorah: shutdown");

@@ -8,6 +8,16 @@
 //! The attention is computed exactly as HCMP partitions it: a dense span
 //! (committed KV cache) and a sparse span (draft block, via the optimized
 //! COO kernels) merged by online softmax.
+//!
+//! Batched decoding runs *one* forward over the row-concatenation of
+//! several sequences' draft blocks ([`RustModel::decode_step_segments`]):
+//! every linear layer is a single GEMM over all B·W rows (this is where
+//! batching amortizes the memory-bandwidth-bound weight stream), while
+//! attention stays per-segment — each segment's rows attend to its own KV
+//! lane plus its own tree pattern. Because every op is row-local apart from
+//! attention (which is segment-local), the batched outputs are **bitwise
+//! identical** to running each sequence alone; the golden-trace parity
+//! tests rely on this.
 
 use super::kv_cache::KvCache;
 use super::weights::Weights;
@@ -29,6 +39,15 @@ pub struct StepOutput {
     pub v_new: Vec<f32>,
 }
 
+/// One sequence's share of a batched decode step: its draft tokens,
+/// absolute positions, tree sparsity, and KV lane.
+pub struct SegmentInput<'a> {
+    pub tokens: &'a [u32],
+    pub pos: &'a [usize],
+    pub pattern: &'a CooPattern,
+    pub cache: &'a KvCache,
+}
+
 pub struct RustModel {
     pub cfg: ModelConfig,
     pub weights: Weights,
@@ -48,50 +67,83 @@ impl RustModel {
         pattern: &CooPattern,
         cache: &KvCache,
     ) -> StepOutput {
+        let seg = SegmentInput { tokens, pos, pattern, cache };
+        self.decode_step_segments(std::slice::from_ref(&seg))
+            .pop()
+            .expect("one segment in, one output out")
+    }
+
+    /// One decode step over B concatenated segments (one per sequence).
+    /// Linears run once over all rows; attention is per-segment against each
+    /// segment's own KV lane and pattern. Returns one `StepOutput` per
+    /// segment, bitwise identical to decoding each segment alone.
+    pub fn decode_step_segments(&self, segs: &[SegmentInput<'_>]) -> Vec<StepOutput> {
+        assert!(!segs.is_empty(), "need at least one segment");
         let cfg = &self.cfg;
-        let w = tokens.len();
-        assert_eq!(pos.len(), w);
-        assert_eq!(pattern.n, w);
         let (d, hn, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim);
+        let hd = hn * dh;
         let scale = (dh as f32).powf(-0.5);
 
-        // token embedding
-        let emb = self.weights.get("tok_emb");
-        let mut x = Tensor::zeros(&[w, d]);
-        for (i, &t) in tokens.iter().enumerate() {
-            x.row_mut(i).copy_from_slice(emb.row(t as usize));
+        let widths: Vec<usize> = segs.iter().map(|s| s.tokens.len()).collect();
+        let mut offsets = Vec::with_capacity(segs.len());
+        let mut wt = 0usize;
+        for (seg, &w) in segs.iter().zip(&widths) {
+            assert_eq!(seg.pos.len(), w);
+            assert_eq!(seg.pattern.n, w);
+            offsets.push(wt);
+            wt += w;
         }
 
-        let mut k_new = Vec::with_capacity(cfg.n_layers * w * hn * dh);
-        let mut v_new = Vec::with_capacity(cfg.n_layers * w * hn * dh);
+        // token embedding over the concatenated rows
+        let emb = self.weights.get("tok_emb");
+        let mut x = Tensor::zeros(&[wt, d]);
+        let mut row = 0usize;
+        for seg in segs {
+            for &t in seg.tokens {
+                x.row_mut(row).copy_from_slice(emb.row(t as usize));
+                row += 1;
+            }
+        }
+        let pos_all: Vec<usize> = segs.iter().flat_map(|s| s.pos.iter().copied()).collect();
+
+        let mut k_new = Vec::with_capacity(cfg.n_layers * wt * hd);
+        let mut v_new = Vec::with_capacity(cfg.n_layers * wt * hd);
 
         for layer in 0..cfg.n_layers {
             let h = rmsnorm(&x, self.weights.get(&format!("l{layer}_attn_norm")).data());
             let mut q = gemm(&h, self.weights.get(&format!("l{layer}_wq")));
             let mut k = gemm(&h, self.weights.get(&format!("l{layer}_wk")));
             let v = gemm(&h, self.weights.get(&format!("l{layer}_wv")));
-            rope_inplace(&mut q, pos, hn, dh, cfg.rope_base);
-            rope_inplace(&mut k, pos, hn, dh, cfg.rope_base);
+            rope_inplace(&mut q, &pos_all, hn, dh, cfg.rope_base);
+            rope_inplace(&mut k, &pos_all, hn, dh, cfg.rope_base);
             k_new.extend_from_slice(k.data());
             v_new.extend_from_slice(v.data());
 
-            // per-head attention: dense span (cache) ⊕ sparse span (draft)
-            let mut o = Tensor::zeros(&[w, hn * dh]);
-            let kc = cache.k_layer(layer);
-            let vc = cache.v_layer(layer);
+            // per-head, per-segment attention:
+            // dense span (the segment's KV lane) ⊕ sparse span (its draft)
+            let mut o = Tensor::zeros(&[wt, hd]);
             for head in 0..hn {
                 let qh = head_cols(&q, head, dh);
                 let kh = head_cols(&k, head, dh);
                 let vh = head_cols(&v, head, dh);
-                let dense = dense_span(&qh, kc, vc, cache.len(), head, hn, dh, scale);
-                let sparse = attention_sparse_opt(&qh, &kh, &vh, pattern, scale);
-                let merged = if cache.len() == 0 {
-                    sparse.o.clone()
-                } else {
-                    merge_partials(&dense, &sparse)
-                };
-                for i in 0..w {
-                    o.row_mut(i)[head * dh..(head + 1) * dh].copy_from_slice(merged.row(i));
+                for (si, seg) in segs.iter().enumerate() {
+                    let (off, w) = (offsets[si], widths[si]);
+                    let qs = qh.rows(off, off + w);
+                    let ks = kh.rows(off, off + w);
+                    let vs = vh.rows(off, off + w);
+                    let kc = seg.cache.k_layer(layer);
+                    let vc = seg.cache.v_layer(layer);
+                    let dense = dense_span(&qs, kc, vc, seg.cache.len(), head, hn, dh, scale);
+                    let sparse = attention_sparse_opt(&qs, &ks, &vs, seg.pattern, scale);
+                    let merged = if seg.cache.len() == 0 {
+                        sparse.o.clone()
+                    } else {
+                        merge_partials(&dense, &sparse)
+                    };
+                    for i in 0..w {
+                        o.row_mut(off + i)[head * dh..(head + 1) * dh]
+                            .copy_from_slice(merged.row(i));
+                    }
                 }
             }
             let attn_out = gemm(&o, self.weights.get(&format!("l{layer}_wo")));
@@ -121,7 +173,24 @@ impl RustModel {
             medusa_logits.push(gemm(&res, w_lm));
         }
 
-        StepOutput { logits, medusa_logits, k_new, v_new }
+        // split the concatenated outputs back into per-segment StepOutputs
+        segs.iter()
+            .enumerate()
+            .map(|(si, _)| {
+                let (off, w) = (offsets[si], widths[si]);
+                let seg_logits = logits.rows(off, off + w);
+                let seg_medusa: Vec<Tensor> =
+                    medusa_logits.iter().map(|t| t.rows(off, off + w)).collect();
+                let mut sk = Vec::with_capacity(cfg.n_layers * w * hd);
+                let mut sv = Vec::with_capacity(cfg.n_layers * w * hd);
+                for layer in 0..cfg.n_layers {
+                    let base = layer * wt * hd + off * hd;
+                    sk.extend_from_slice(&k_new[base..base + w * hd]);
+                    sv.extend_from_slice(&v_new[base..base + w * hd]);
+                }
+                StepOutput { logits: seg_logits, medusa_logits: seg_medusa, k_new: sk, v_new: sv }
+            })
+            .collect()
     }
 }
 
@@ -290,6 +359,50 @@ mod tests {
                 "node {node} logits diverge from sequential"
             );
             seq_cache.commit_prefix(&o1.k_new, &o1.v_new, 1, 1);
+        }
+    }
+
+    #[test]
+    fn segments_bitwise_match_individual_steps() {
+        // two sequences at different cache depths with different trees,
+        // decoded in one concatenated forward, must equal isolated steps
+        // bit for bit (the continuous-batching correctness foundation).
+        let (_cfg, model, _cache) = setup();
+
+        let mut cache_a = KvCache::new(&model.cfg);
+        let oa = model.decode_step(&[5, 9], &[0, 1], &causal_pattern(2), &cache_a);
+        cache_a.commit_prefix(&oa.k_new, &oa.v_new, 2, 2);
+
+        let mut cache_b = KvCache::new(&model.cfg);
+        let ob = model.decode_step(&[7, 3, 1, 8], &[0, 1, 2, 3], &causal_pattern(4), &cache_b);
+        cache_b.commit_prefix(&ob.k_new, &ob.v_new, 4, 4);
+
+        let parents_a = [usize::MAX, 0, 0];
+        let tok_a: [u32; 3] = [11, 12, 13];
+        let pos_a = [2usize, 3, 3];
+        let pat_a = CooPattern::from_tree(&parents_a);
+
+        let parents_b = [usize::MAX, 0];
+        let tok_b: [u32; 2] = [21, 22];
+        let pos_b = [4usize, 5];
+        let pat_b = CooPattern::from_tree(&parents_b);
+
+        let solo_a = model.decode_step(&tok_a, &pos_a, &pat_a, &cache_a);
+        let solo_b = model.decode_step(&tok_b, &pos_b, &pat_b, &cache_b);
+
+        let segs = [
+            SegmentInput { tokens: &tok_a, pos: &pos_a, pattern: &pat_a, cache: &cache_a },
+            SegmentInput { tokens: &tok_b, pos: &pos_b, pattern: &pat_b, cache: &cache_b },
+        ];
+        let batched = model.decode_step_segments(&segs);
+        assert_eq!(batched.len(), 2);
+        for (solo, both) in [(&solo_a, &batched[0]), (&solo_b, &batched[1])] {
+            assert_eq!(solo.logits.data(), both.logits.data(), "logits not bitwise equal");
+            assert_eq!(solo.k_new, both.k_new, "k_new not bitwise equal");
+            assert_eq!(solo.v_new, both.v_new, "v_new not bitwise equal");
+            for (a, b) in solo.medusa_logits.iter().zip(&both.medusa_logits) {
+                assert_eq!(a.data(), b.data(), "medusa logits not bitwise equal");
+            }
         }
     }
 

@@ -1,10 +1,18 @@
-//! Per-sequence KV cache with speculative commit/rollback semantics.
+//! Per-sequence KV cache with speculative commit/rollback semantics, and
+//! the multi-lane [`BatchKvCache`] behind continuous batching.
 //!
 //! Layout: one flat row-major `[L, C, H, Dh]` buffer per side (C = max_ctx),
 //! exactly matching the AOT executables' cache inputs so the runtime hands
 //! the buffers to PJRT without any per-step reshuffling. Keys are stored
 //! *post-RoPE* (position-encoded at commit time), which is what makes tree
 //! verification cheap: rejected draft tokens simply never get committed.
+//!
+//! A [`BatchKvCache`] holds B independent sequence *lanes*, each a full
+//! `KvCache` with its own committed length, so per-lane commit/rollback is
+//! exactly the single-sequence semantics and lanes can never alias. Lanes
+//! are recycled through a free list: a sequence leaving the batch (EOS or
+//! token quota) releases its lane, which is scrubbed before reuse so a new
+//! tenant can never observe the previous sequence's keys.
 
 use super::ModelConfig;
 
@@ -110,6 +118,86 @@ impl KvCache {
     pub fn bytes(&self) -> usize {
         2 * self.k.len() * 4
     }
+
+    /// Scrub the cache: zero both buffers and reset the committed length.
+    /// Used when a batch lane is recycled, so a new tenant can never read
+    /// the previous sequence's keys (even through an out-of-bounds bug).
+    pub fn reset(&mut self) {
+        self.len = 0;
+        self.k.fill(0.0);
+        self.v.fill(0.0);
+    }
+}
+
+/// B independent KV lanes with a free list — the storage side of the
+/// continuous-batching scheduler.
+///
+/// A lane id is stable for the lifetime of one sequence: `alloc` hands out
+/// a scrubbed lane, the decode loop commits/rolls back through `lane_mut`,
+/// and `release` scrubs it and returns it to the free list at the step
+/// boundary where the sequence leaves the batch.
+#[derive(Clone, Debug)]
+pub struct BatchKvCache {
+    lanes: Vec<KvCache>,
+    active: Vec<bool>,
+    free: Vec<usize>,
+}
+
+impl BatchKvCache {
+    pub fn new(cfg: &ModelConfig, max_lanes: usize) -> Self {
+        assert!(max_lanes > 0, "need at least one lane");
+        Self {
+            lanes: (0..max_lanes).map(|_| KvCache::new(cfg)).collect(),
+            active: vec![false; max_lanes],
+            free: (0..max_lanes).rev().collect(),
+        }
+    }
+
+    /// Total number of lanes (the maximum batch size).
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Lanes currently owned by a sequence.
+    pub fn in_use(&self) -> usize {
+        self.lanes.len() - self.free.len()
+    }
+
+    /// Lanes available for admission.
+    pub fn free_lanes(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Claim a scrubbed lane, or None when the batch is full.
+    pub fn alloc(&mut self) -> Option<usize> {
+        let id = self.free.pop()?;
+        debug_assert!(!self.active[id]);
+        self.active[id] = true;
+        Some(id)
+    }
+
+    /// Return a lane to the free list, scrubbing it first.
+    pub fn release(&mut self, id: usize) {
+        assert!(self.active[id], "releasing an unallocated lane {id}");
+        self.lanes[id].reset();
+        self.active[id] = false;
+        self.free.push(id);
+    }
+
+    pub fn lane(&self, id: usize) -> &KvCache {
+        assert!(self.active[id], "lane {id} is not allocated");
+        &self.lanes[id]
+    }
+
+    pub fn lane_mut(&mut self, id: usize) -> &mut KvCache {
+        assert!(self.active[id], "lane {id} is not allocated");
+        &mut self.lanes[id]
+    }
+
+    /// Bytes resident across all lanes.
+    pub fn bytes(&self) -> usize {
+        self.lanes.iter().map(KvCache::bytes).sum()
+    }
 }
 
 #[cfg(test)]
@@ -183,5 +271,60 @@ mod tests {
         for _ in 0..5 {
             c.commit_prefix(&k, &v, 8, 8);
         }
+    }
+
+    #[test]
+    fn batch_alloc_release_cycle() {
+        let cfg = ModelConfig::test_small();
+        let mut b = BatchKvCache::new(&cfg, 2);
+        assert_eq!(b.free_lanes(), 2);
+        let a = b.alloc().unwrap();
+        let c = b.alloc().unwrap();
+        assert_ne!(a, c);
+        assert!(b.alloc().is_none(), "only two lanes");
+        assert_eq!(b.in_use(), 2);
+        b.release(a);
+        assert_eq!(b.free_lanes(), 1);
+        let d = b.alloc().unwrap();
+        assert_eq!(d, a, "freed lane is recycled");
+    }
+
+    #[test]
+    fn batch_lanes_are_independent() {
+        let cfg = ModelConfig::test_small();
+        let mut b = BatchKvCache::new(&cfg, 2);
+        let (k0, v0) = fake_kv(&cfg, 4, 10);
+        let (k1, v1) = fake_kv(&cfg, 4, 11);
+        let a = b.alloc().unwrap();
+        let c = b.alloc().unwrap();
+        b.lane_mut(a).commit_prefix(&k0, &v0, 4, 4);
+        b.lane_mut(c).commit_prefix(&k1, &v1, 4, 2);
+        assert_eq!(b.lane(a).len(), 4);
+        assert_eq!(b.lane(c).len(), 2);
+        let hd = cfg.n_heads * cfg.head_dim;
+        assert_eq!(&b.lane(a).k_layer(0)[..hd], &k0[..hd]);
+        assert_eq!(&b.lane(c).k_layer(0)[..hd], &k1[..hd]);
+    }
+
+    #[test]
+    fn released_lane_is_scrubbed() {
+        let cfg = ModelConfig::test_small();
+        let mut b = BatchKvCache::new(&cfg, 1);
+        let (k, v) = fake_kv(&cfg, 4, 12);
+        let a = b.alloc().unwrap();
+        b.lane_mut(a).commit_prefix(&k, &v, 4, 4);
+        b.release(a);
+        let a2 = b.alloc().unwrap();
+        assert_eq!(b.lane(a2).len(), 0);
+        assert!(b.lane(a2).k_flat().iter().all(|&x| x == 0.0), "stale keys leaked");
+        assert!(b.lane(a2).v_flat().iter().all(|&x| x == 0.0), "stale values leaked");
+    }
+
+    #[test]
+    #[should_panic(expected = "not allocated")]
+    fn reading_free_lane_panics() {
+        let cfg = ModelConfig::test_small();
+        let b = BatchKvCache::new(&cfg, 1);
+        let _ = b.lane(0);
     }
 }

@@ -4,7 +4,10 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+#[cfg(feature = "pjrt")]
 use xla::FromRawBytes;
 
 use super::ModelConfig;
@@ -19,7 +22,9 @@ pub struct Weights {
 
 impl Weights {
     /// Load from the npz produced by the AOT pipeline and validate shapes
-    /// against the config.
+    /// against the config. Needs the `pjrt` feature (the npz reader lives in
+    /// the `xla` crate); without it an explanatory error is returned.
+    #[cfg(feature = "pjrt")]
     pub fn load_npz(path: &Path, cfg: &ModelConfig) -> Result<Self> {
         let entries = xla::Literal::read_npz(path, &())
             .with_context(|| format!("reading {}", path.display()))?;
@@ -33,6 +38,15 @@ impl Weights {
         let w = Self { map };
         w.validate(cfg)?;
         Ok(w)
+    }
+
+    /// Stub without the `pjrt` feature: the npz reader is unavailable.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load_npz(_path: &Path, _cfg: &ModelConfig) -> Result<Self> {
+        anyhow::bail!(
+            "weights.npz loading needs the `pjrt` feature (the npz reader \
+             lives in the xla crate); rebuild with `--features pjrt`"
+        )
     }
 
     /// Deterministic random weights (unit tests; does NOT match the npz).
@@ -61,6 +75,7 @@ impl Weights {
         self.map.keys()
     }
 
+    #[cfg(feature = "pjrt")]
     fn validate(&self, cfg: &ModelConfig) -> Result<()> {
         for name in cfg.param_names() {
             let expect = cfg.param_shape(&name);

@@ -13,6 +13,7 @@ use crate::model::forward::StepOutput;
 use crate::model::kv_cache::KvCache;
 use crate::model::ModelConfig;
 use crate::sparse::CooPattern;
+use crate::spec::batch::{BatchedStepExecutor, SeqStepInput};
 use crate::spec::controller::StepExecutor;
 use crate::tensor::Tensor;
 
@@ -290,5 +291,24 @@ impl StepExecutor for Runtime {
         cache: &KvCache,
     ) -> Result<StepOutput> {
         Runtime::decode_step(self, tokens, pos, pattern, cache)
+    }
+}
+
+impl BatchedStepExecutor for Runtime {
+    fn cfg(&self) -> &ModelConfig {
+        Runtime::cfg(self)
+    }
+
+    fn supports_width(&self, w: usize) -> bool {
+        self.decode.contains_key(&w)
+    }
+
+    /// The AOT executables are fixed-shape (no leading batch dimension), so
+    /// batched steps execute as a per-sequence loop; weights stay resident
+    /// on the device across the loop, which is most of the batching win.
+    fn decode_batch(&mut self, seqs: &[SeqStepInput<'_>]) -> Result<Vec<StepOutput>> {
+        seqs.iter()
+            .map(|s| Runtime::decode_step(self, s.tokens, s.pos, s.pattern, s.cache))
+            .collect()
     }
 }

@@ -1,0 +1,109 @@
+//! Stub `Runtime` compiled when the `pjrt` feature is disabled.
+//!
+//! Mirrors the public surface of `engine::Runtime` exactly so callers
+//! (`main.rs`, the examples, the scheduler) compile unchanged; every
+//! constructor returns an error explaining how to enable the real engine,
+//! so the stub can never actually be instantiated.
+
+use std::cell::Cell;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::forward::StepOutput;
+use crate::model::kv_cache::KvCache;
+use crate::model::ModelConfig;
+use crate::sparse::CooPattern;
+use crate::spec::batch::{BatchedStepExecutor, SeqStepInput};
+use crate::spec::controller::StepExecutor;
+use crate::tensor::Tensor;
+
+const DISABLED: &str = "ghidorah was built without the `pjrt` feature; the AOT/PJRT engine is \
+     unavailable. Add the `xla` dependency and rebuild with `--features pjrt` \
+     (see rust/Cargo.toml), or use the pure-Rust engine.";
+
+pub struct Runtime {
+    cfg: ModelConfig,
+    /// Cumulative PJRT execute time (perf accounting) — always zero here.
+    pub exec_nanos: Cell<u64>,
+}
+
+impl Runtime {
+    pub fn load(_dir: &Path) -> Result<Self> {
+        bail!(DISABLED)
+    }
+
+    pub fn load_widths(_dir: &Path, _widths: &[usize]) -> Result<Self> {
+        bail!(DISABLED)
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn widths(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    pub fn decode_step(
+        &self,
+        _tokens: &[u32],
+        _pos: &[usize],
+        _pattern: &CooPattern,
+        _cache: &KvCache,
+    ) -> Result<StepOutput> {
+        bail!(DISABLED)
+    }
+
+    pub fn mlp_via_shards(&mut self, _x: &Tensor) -> Result<Tensor> {
+        bail!(DISABLED)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_via_shards(
+        &mut self,
+        _q: &Tensor,
+        _k_cache: &Tensor,
+        _v_cache: &Tensor,
+        _cache_len: usize,
+        _k_new: &Tensor,
+        _v_new: &Tensor,
+        _mask: &[f32],
+    ) -> Result<Tensor> {
+        bail!(DISABLED)
+    }
+}
+
+impl StepExecutor for Runtime {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn supports_width(&self, _w: usize) -> bool {
+        false
+    }
+
+    fn decode(
+        &mut self,
+        _tokens: &[u32],
+        _pos: &[usize],
+        _pattern: &CooPattern,
+        _cache: &KvCache,
+    ) -> Result<StepOutput> {
+        bail!(DISABLED)
+    }
+}
+
+impl BatchedStepExecutor for Runtime {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn supports_width(&self, _w: usize) -> bool {
+        false
+    }
+
+    fn decode_batch(&mut self, _seqs: &[SeqStepInput<'_>]) -> Result<Vec<StepOutput>> {
+        bail!(DISABLED)
+    }
+}

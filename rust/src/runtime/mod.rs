@@ -5,9 +5,21 @@
 //! Weights are uploaded to device buffers exactly once; per-step inputs
 //! (tokens, positions, tree mask, KV cache, cache length) are transferred
 //! per call. HLO **text** is the interchange format — see DESIGN.md §6.
+//!
+//! The engine needs the `xla` crate (PJRT bindings), which cannot be built
+//! offline; without the `pjrt` feature a stub `Runtime` with the same API
+//! is compiled instead, whose constructors return an explanatory error.
+//! Artifact discovery (`Artifacts`) has no PJRT dependency and is always
+//! available.
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod engine;
+#[cfg(not(feature = "pjrt"))]
+mod engine_stub;
 
 pub use artifacts::Artifacts;
+#[cfg(feature = "pjrt")]
 pub use engine::Runtime;
+#[cfg(not(feature = "pjrt"))]
+pub use engine_stub::Runtime;

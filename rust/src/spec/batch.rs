@@ -1,0 +1,552 @@
+//! Batched multi-sequence speculative decoding.
+//!
+//! [`BatchedStepExecutor`] generalizes [`StepExecutor`](crate::spec::controller::StepExecutor)
+//! from one sequence to B: a single call decodes the concatenated draft
+//! trees of every active sequence. The pure-Rust model implements it
+//! natively (one forward over all rows — the linear layers, which dominate
+//! the memory-bandwidth-bound decode step, stream the weights once for the
+//! whole batch), while the PJRT runtime falls back to a per-sequence loop
+//! over its fixed-width executables.
+//!
+//! [`BatchedDecoder`] is the continuous-batching state machine on top:
+//!
+//! * **Join protocol** — a sequence is admitted at any *step boundary*
+//!   (between two batched forwards) into a free KV lane; it first streams
+//!   its prompt through prefill chunks (causal segments of the shared
+//!   step), then switches to draft-and-verify segments. Sequences at
+//!   different phases coexist in one batched step.
+//! * **Leave protocol** — a sequence leaves at the step boundary where it
+//!   hits EOS, its token quota, or lane-context exhaustion; its lane is
+//!   released (and scrubbed) immediately, so the next queued request can
+//!   join on the very next step.
+//! * **Losslessness** — per-sequence accept/rollback is exactly the
+//!   single-sequence controller's logic over the sequence's own lane, and
+//!   the batched forward is row/segment-local, so every sequence's output
+//!   is token-for-token identical to decoding it alone (golden-trace
+//!   parity tests in `tests/batch_parity.rs`).
+//!
+//! Interaction with HCMP: a batched step is still one verification step
+//! per sequence, so the ARCA tree/width choice is unchanged; only the GEMM
+//! row dimension grows from W to ΣW. The cost model's batch dimension
+//! (`hcmp::schedule::build_batched_step`) prices exactly this shape, which
+//! keeps partition ratios consistent between single- and multi-tenant
+//! serving.
+
+use crate::model::forward::{RustModel, StepOutput};
+use crate::model::kv_cache::BatchKvCache;
+use crate::model::tokenizer::EOS;
+use crate::model::ModelConfig;
+use crate::sparse::CooPattern;
+use crate::spec::controller::GenerateOutcome;
+use crate::spec::tree::VerificationTree;
+use crate::spec::verify::verify_greedy;
+use crate::util::mathx::{argmax, topk};
+use crate::util::stats::OnlineStats;
+
+/// One sequence's slice of a batched decode step — the same shape the
+/// batched forward consumes, re-exported so executors and the forward pass
+/// cannot drift apart.
+pub use crate::model::forward::SegmentInput as SeqStepInput;
+
+/// A decode engine that can run one step for a whole batch of sequences.
+pub trait BatchedStepExecutor {
+    fn cfg(&self) -> &ModelConfig;
+    /// Per-sequence widths this executor supports (AOT executables are
+    /// fixed-width; the pure-Rust model supports any width).
+    fn supports_width(&self, w: usize) -> bool;
+    /// Decode all sequences' segments in one step; returns one output per
+    /// input, in order.
+    fn decode_batch(&mut self, seqs: &[SeqStepInput<'_>]) -> anyhow::Result<Vec<StepOutput>>;
+}
+
+impl BatchedStepExecutor for RustModel {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn supports_width(&self, _w: usize) -> bool {
+        true
+    }
+
+    fn decode_batch(&mut self, seqs: &[SeqStepInput<'_>]) -> anyhow::Result<Vec<StepOutput>> {
+        Ok(self.decode_step_segments(seqs))
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Phase {
+    /// Streaming the prompt; `off` tokens committed so far.
+    Prefill { off: usize },
+    /// Draft-and-verify steady state.
+    Decode,
+}
+
+struct Seq {
+    id: u64,
+    lane: usize,
+    prompt: Vec<u32>,
+    tree: VerificationTree,
+    /// The tree's COO pattern, built once at admission.
+    pattern: CooPattern,
+    max_new: usize,
+    phase: Phase,
+    /// Root of the next verification tree (the model's committed greedy
+    /// prediction at the last accepted position).
+    root: u32,
+    /// Medusa head logit rows at the last accepted position.
+    medusa_rows: Vec<Vec<f32>>,
+    out: Vec<u32>,
+    steps: usize,
+    acceptance: OnlineStats,
+    hit_eos: bool,
+    done: bool,
+}
+
+/// A sequence that left the batch, with its lane (for the caller to
+/// release) and its finished outcome.
+pub struct FinishedSeq {
+    pub id: u64,
+    pub lane: usize,
+    pub outcome: GenerateOutcome,
+}
+
+fn finish(s: Seq) -> FinishedSeq {
+    FinishedSeq {
+        id: s.id,
+        lane: s.lane,
+        outcome: GenerateOutcome {
+            tokens: s.out,
+            steps: s.steps,
+            acceptance: s.acceptance,
+            hit_eos: s.hit_eos,
+        },
+    }
+}
+
+fn causal_pattern(w: usize) -> CooPattern {
+    let parents: Vec<usize> = (0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect();
+    CooPattern::from_tree(&parents)
+}
+
+/// The continuous-batching decode state machine (see module docs for the
+/// join/leave protocol). Drives any [`BatchedStepExecutor`] over a
+/// [`BatchKvCache`], one shared step at a time.
+pub struct BatchedDecoder {
+    prefill_width: usize,
+    /// Causal pattern of one prefill chunk, built once (the width is fixed
+    /// for the decoder's lifetime).
+    prefill_pattern: CooPattern,
+    top_k: usize,
+    seqs: Vec<Seq>,
+    /// Sequences that finished but have not yet been returned to the
+    /// caller. Buffered on `self` (not a `step` local) so an executor error
+    /// mid-step cannot discard completed results: `step` returns them on
+    /// success, `take_finished` recovers them after a failure.
+    retired: Vec<FinishedSeq>,
+}
+
+impl BatchedDecoder {
+    pub fn new(prefill_width: usize, top_k: usize) -> Self {
+        assert!(prefill_width >= 1);
+        assert!(top_k >= 1);
+        Self {
+            prefill_width,
+            prefill_pattern: causal_pattern(prefill_width),
+            top_k,
+            seqs: Vec::new(),
+            retired: Vec::new(),
+        }
+    }
+
+    /// Number of sequences currently in the batch.
+    pub fn active(&self) -> usize {
+        self.seqs.len()
+    }
+
+    /// Admit a sequence into the running batch (it joins at the next step
+    /// boundary). `lane` must be an allocated lane of `caches`.
+    pub fn admit<E: BatchedStepExecutor>(
+        &mut self,
+        exec: &E,
+        id: u64,
+        prompt: Vec<u32>,
+        max_new: usize,
+        tree: VerificationTree,
+        lane: usize,
+        caches: &BatchKvCache,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt.len() <= caches.lane(lane).remaining(),
+            "prompt ({} tokens) exceeds lane context ({})",
+            prompt.len(),
+            caches.lane(lane).remaining()
+        );
+        anyhow::ensure!(
+            exec.supports_width(self.prefill_width),
+            "no executable for prefill width {}",
+            self.prefill_width
+        );
+        anyhow::ensure!(
+            exec.supports_width(tree.width()),
+            "no executable for verification width {}",
+            tree.width()
+        );
+        let pattern = tree.pattern();
+        self.seqs.push(Seq {
+            id,
+            lane,
+            prompt,
+            tree,
+            pattern,
+            max_new,
+            phase: Phase::Prefill { off: 0 },
+            root: 0,
+            medusa_rows: Vec::new(),
+            out: Vec::new(),
+            steps: 0,
+            acceptance: OnlineStats::new(),
+            hit_eos: false,
+            done: false,
+        });
+        Ok(())
+    }
+
+    /// Sequences that already finished successfully (e.g. retired in the
+    /// same step whose executor call then failed). Call after a `step`
+    /// error, before `abort`, so completed results are still delivered and
+    /// their lanes released.
+    pub fn take_finished(&mut self) -> Vec<FinishedSeq> {
+        std::mem::take(&mut self.retired)
+    }
+
+    /// Abandon every in-flight sequence (engine failure): returns their
+    /// (id, lane) pairs so the caller can release the lanes.
+    pub fn abort(&mut self) -> Vec<(u64, usize)> {
+        self.seqs.drain(..).map(|s| (s.id, s.lane)).collect()
+    }
+
+    /// Run one shared batched step for every active sequence. Sequences
+    /// that finish (EOS / quota / context exhaustion) leave the batch and
+    /// are returned; the caller releases their lanes.
+    pub fn step<E: BatchedStepExecutor>(
+        &mut self,
+        exec: &mut E,
+        caches: &mut BatchKvCache,
+    ) -> anyhow::Result<Vec<FinishedSeq>> {
+        // leave protocol, part 1: retire sequences that cannot take another
+        // step (token quota reached, or the lane cannot fit a tree block).
+        let mut i = 0;
+        while i < self.seqs.len() {
+            let s = &self.seqs[i];
+            let retire = match s.phase {
+                Phase::Decode => {
+                    s.out.len() >= s.max_new
+                        || caches.lane(s.lane).remaining() < s.tree.width()
+                }
+                Phase::Prefill { .. } => false,
+            };
+            if retire {
+                let f = finish(self.seqs.swap_remove(i));
+                self.retired.push(f);
+            } else {
+                i += 1;
+            }
+        }
+        if self.seqs.is_empty() {
+            return Ok(std::mem::take(&mut self.retired));
+        }
+
+        // build each sequence's segment: a (padded) causal prefill chunk or
+        // a drafted verification tree. Patterns are never built per step:
+        // prefill chunks share self.prefill_pattern, decode steps borrow
+        // the pattern cached on the sequence at admission.
+        let mut owned: Vec<(Vec<u32>, Vec<usize>, bool)> = Vec::with_capacity(self.seqs.len());
+        for s in &self.seqs {
+            let lane_len = caches.lane(s.lane).len();
+            match s.phase {
+                Phase::Prefill { off } => {
+                    let w = self.prefill_width;
+                    let n = w.min(s.prompt.len() - off);
+                    // pad the chunk to the executable width with repeats of
+                    // the last token; padded positions are never committed.
+                    let mut toks: Vec<u32> = s.prompt[off..off + n].to_vec();
+                    toks.resize(w, *toks.last().expect("non-empty chunk"));
+                    let pos: Vec<usize> = (0..w).map(|i| lane_len + i).collect();
+                    owned.push((toks, pos, true));
+                }
+                Phase::Decode => {
+                    let head_topk: Vec<Vec<u32>> = s
+                        .medusa_rows
+                        .iter()
+                        .map(|row| topk(row, self.top_k).into_iter().map(|i| i as u32).collect())
+                        .collect();
+                    let draft = s.tree.fill_tokens(s.root, &head_topk);
+                    let pos = s.tree.positions(lane_len);
+                    owned.push((draft, pos, false));
+                }
+            }
+        }
+
+        let prefill_pattern = &self.prefill_pattern;
+        let inputs: Vec<SeqStepInput<'_>> = self
+            .seqs
+            .iter()
+            .zip(&owned)
+            .map(|(s, (toks, pos, is_prefill))| SeqStepInput {
+                tokens: toks,
+                pos,
+                pattern: if *is_prefill { prefill_pattern } else { &s.pattern },
+                cache: caches.lane(s.lane),
+            })
+            .collect();
+        // on error, part-1 retirees stay buffered in self.retired for the
+        // caller to recover via take_finished()
+        let outs = exec.decode_batch(&inputs)?;
+        drop(inputs);
+        anyhow::ensure!(
+            outs.len() == self.seqs.len(),
+            "executor returned {} outputs for {} sequences",
+            outs.len(),
+            self.seqs.len()
+        );
+
+        // per-sequence commit + verify (exactly the single-sequence
+        // controller's logic over the sequence's own lane).
+        for ((s, (toks, _pos, _is_prefill)), out) in
+            self.seqs.iter_mut().zip(owned.iter()).zip(outs.into_iter())
+        {
+            match s.phase {
+                Phase::Prefill { off } => {
+                    let w = self.prefill_width;
+                    let n = w.min(s.prompt.len() - off);
+                    caches.lane_mut(s.lane).commit_prefix(&out.k_new, &out.v_new, w, n);
+                    if off + n == s.prompt.len() {
+                        s.root = argmax(out.logits.row(n - 1)) as u32;
+                        s.medusa_rows =
+                            out.medusa_logits.iter().map(|t| t.row(n - 1).to_vec()).collect();
+                        s.phase = Phase::Decode;
+                    } else {
+                        s.phase = Phase::Prefill { off: off + n };
+                    }
+                }
+                Phase::Decode => {
+                    s.steps += 1;
+                    let verdict = verify_greedy(&s.tree, toks, &out.logits);
+                    s.acceptance.push(verdict.accepted_nodes.len() as f64);
+                    caches.lane_mut(s.lane).commit_selected(
+                        &out.k_new,
+                        &out.v_new,
+                        s.tree.width(),
+                        &verdict.accepted_nodes,
+                    );
+                    for &t in &verdict.accepted_tokens {
+                        s.out.push(t);
+                        if t == EOS || s.out.len() >= s.max_new {
+                            s.hit_eos = t == EOS;
+                            s.done = true;
+                            break;
+                        }
+                    }
+                    if !s.done {
+                        s.root = verdict.next_token;
+                        s.medusa_rows = out
+                            .medusa_logits
+                            .iter()
+                            .map(|t| t.row(verdict.last_node).to_vec())
+                            .collect();
+                    }
+                }
+            }
+        }
+
+        // leave protocol, part 2: sequences that finished inside this step.
+        let mut i = 0;
+        while i < self.seqs.len() {
+            if self.seqs[i].done {
+                let f = finish(self.seqs.swap_remove(i));
+                self.retired.push(f);
+            } else {
+                i += 1;
+            }
+        }
+        Ok(std::mem::take(&mut self.retired))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::kv_cache::KvCache;
+    use crate::model::weights::Weights;
+    use crate::spec::controller::{DecodeMode, SpeculativeController};
+
+    fn setup() -> RustModel {
+        let cfg = ModelConfig::test_small();
+        RustModel::new(cfg.clone(), Weights::random(&cfg, 42))
+    }
+
+    fn run_single(
+        model: &mut RustModel,
+        prompt: &[u32],
+        max_new: usize,
+        tree: &VerificationTree,
+    ) -> Vec<u32> {
+        let cfg = model.cfg.clone();
+        let mut cache = KvCache::new(&cfg);
+        let mode = if tree.width() == 1 {
+            DecodeMode::Sequential
+        } else {
+            DecodeMode::Speculative(tree.clone())
+        };
+        let mut ctl = SpeculativeController::new(model, 8, 4);
+        ctl.generate(prompt, max_new, &mode, &mut cache).unwrap().tokens
+    }
+
+    fn run_batched(
+        model: &mut RustModel,
+        prompts: &[&[u32]],
+        max_new: usize,
+        tree: &VerificationTree,
+    ) -> Vec<Vec<u32>> {
+        let cfg = model.cfg.clone();
+        let mut caches = BatchKvCache::new(&cfg, prompts.len());
+        let mut dec = BatchedDecoder::new(8, 4);
+        for (i, p) in prompts.iter().enumerate() {
+            let lane = caches.alloc().unwrap();
+            dec.admit(model, i as u64, p.to_vec(), max_new, tree.clone(), lane, &caches).unwrap();
+        }
+        let mut results: Vec<Option<Vec<u32>>> = vec![None; prompts.len()];
+        while dec.active() > 0 {
+            for f in dec.step(model, &mut caches).unwrap() {
+                caches.release(f.lane);
+                results[f.id as usize] = Some(f.outcome.tokens);
+            }
+        }
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    #[test]
+    fn batch_of_one_matches_single_controller() {
+        let mut model = setup();
+        let tree = VerificationTree::chain(3);
+        let prompt: Vec<u32> = vec![1, 2, 3];
+        let single = run_single(&mut model, &prompt, 8, &tree);
+        let batched = run_batched(&mut model, &[prompt.as_slice()], 8, &tree);
+        assert_eq!(batched[0], single);
+    }
+
+    #[test]
+    fn sequences_join_and_leave_at_step_boundaries() {
+        let mut model = setup();
+        let cfg = model.cfg.clone();
+        let tree = VerificationTree::root_only();
+        let early: Vec<u32> = vec![1, 2, 3];
+        let late: Vec<u32> = vec![5, 9];
+        let singles: Vec<Vec<u32>> = [early.as_slice(), late.as_slice()]
+            .iter()
+            .map(|p| run_single(&mut model, p, 6, &tree))
+            .collect();
+
+        let mut caches = BatchKvCache::new(&cfg, 2);
+        let mut dec = BatchedDecoder::new(8, 4);
+        let lane0 = caches.alloc().unwrap();
+        dec.admit(&model, 0, vec![1, 2, 3], 6, tree.clone(), lane0, &caches).unwrap();
+        // run two steps alone, then a second sequence joins mid-flight
+        let mut results: Vec<Option<Vec<u32>>> = vec![None, None];
+        for _ in 0..2 {
+            for f in dec.step(&mut model, &mut caches).unwrap() {
+                caches.release(f.lane);
+                results[f.id as usize] = Some(f.outcome.tokens);
+            }
+        }
+        let lane1 = caches.alloc().unwrap();
+        dec.admit(&model, 1, vec![5, 9], 6, tree.clone(), lane1, &caches).unwrap();
+        while dec.active() > 0 {
+            for f in dec.step(&mut model, &mut caches).unwrap() {
+                caches.release(f.lane);
+                results[f.id as usize] = Some(f.outcome.tokens);
+            }
+        }
+        assert_eq!(results[0].as_ref().unwrap(), &singles[0], "mid-flight join perturbed seq 0");
+        assert_eq!(results[1].as_ref().unwrap(), &singles[1], "late joiner diverged");
+        assert_eq!(caches.free_lanes(), 2, "all lanes released");
+    }
+
+    #[test]
+    fn speculative_batch_is_lossless() {
+        let mut model = setup();
+        let tree = VerificationTree::new(vec![usize::MAX, 0, 0, 1, 1, 2], vec![0, 0, 1, 0, 1, 0]);
+        tree.validate().unwrap();
+        let prompts: [&[u32]; 3] = [&[1, 5, 7, 2], &[3, 1], &[9, 8, 7, 6, 5]];
+        let singles: Vec<Vec<u32>> =
+            prompts.iter().map(|p| run_single(&mut model, p, 10, &tree)).collect();
+        let batched = run_batched(&mut model, &prompts[..], 10, &tree);
+        for (i, (b, s)) in batched.iter().zip(&singles).enumerate() {
+            assert_eq!(b, s, "prompt {i} diverged under batching");
+        }
+    }
+
+    /// Executor wrapper that can be told to fail its next batched step.
+    struct FlakyExec {
+        inner: RustModel,
+        fail_next: bool,
+    }
+
+    impl BatchedStepExecutor for FlakyExec {
+        fn cfg(&self) -> &ModelConfig {
+            &self.inner.cfg
+        }
+
+        fn supports_width(&self, _w: usize) -> bool {
+            true
+        }
+
+        fn decode_batch(&mut self, seqs: &[SeqStepInput<'_>]) -> anyhow::Result<Vec<StepOutput>> {
+            if self.fail_next {
+                self.fail_next = false;
+                anyhow::bail!("injected engine failure");
+            }
+            self.inner.decode_batch(seqs)
+        }
+    }
+
+    #[test]
+    fn executor_failure_preserves_already_retired_results() {
+        // a sequence retired at the step boundary must survive an executor
+        // error in that same step (recoverable via take_finished), while
+        // still-running sequences are reported by abort().
+        let model = setup();
+        let mut exec = FlakyExec { inner: model, fail_next: false };
+        let cfg = exec.inner.cfg.clone();
+        let mut caches = BatchKvCache::new(&cfg, 2);
+        let mut dec = BatchedDecoder::new(8, 4);
+        let lane_a = caches.alloc().unwrap();
+        dec.admit(&exec, 0, vec![1, 2], 0, VerificationTree::root_only(), lane_a, &caches)
+            .unwrap();
+        let lane_b = caches.alloc().unwrap();
+        dec.admit(&exec, 1, vec![3, 4], 5, VerificationTree::root_only(), lane_b, &caches)
+            .unwrap();
+        // step 1: both sequences prefill
+        assert!(dec.step(&mut exec, &mut caches).unwrap().is_empty());
+        // step 2: seq 0 retires (quota 0) before the forward, which fails
+        exec.fail_next = true;
+        assert!(dec.step(&mut exec, &mut caches).is_err());
+        let finished = dec.take_finished();
+        assert_eq!(finished.len(), 1, "retired result lost on executor error");
+        assert_eq!(finished[0].id, 0);
+        assert_eq!(finished[0].lane, lane_a);
+        assert!(finished[0].outcome.tokens.is_empty());
+        let aborted = dec.abort();
+        assert_eq!(aborted, vec![(1, lane_b)]);
+    }
+
+    #[test]
+    fn context_exhaustion_retires_sequence() {
+        let mut model = setup(); // max_ctx = 32
+        let tree = VerificationTree::root_only();
+        let prompt: Vec<u32> = (1..=10).collect();
+        let batched = run_batched(&mut model, &[prompt.as_slice()], 1000, &tree);
+        assert!(batched[0].len() <= model.cfg.max_ctx - prompt.len());
+    }
+}

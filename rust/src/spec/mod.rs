@@ -7,12 +7,16 @@
 //! * [`verify`] — greedy tree verification (longest accepted path).
 //! * [`controller`] — the draft-then-verify decode loop over any step
 //!   executor (pure-Rust model or PJRT runtime).
+//! * [`batch`] — the batched generalization: one shared decode step over
+//!   B sequences with continuous join/leave at step boundaries.
 
+pub mod batch;
 pub mod controller;
 pub mod drafter;
 pub mod tree;
 pub mod verify;
 
+pub use batch::{BatchedDecoder, BatchedStepExecutor, FinishedSeq, SeqStepInput};
 pub use controller::{DecodeMode, GenerateOutcome, SpeculativeController, StepExecutor};
 pub use drafter::AccuracyProfile;
 pub use tree::VerificationTree;

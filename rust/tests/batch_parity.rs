@@ -1,0 +1,131 @@
+//! Golden-trace parity: for a fixed RNG seed, batched speculative decoding
+//! of B=4 prompts must produce token-for-token identical output to running
+//! each prompt alone through the single-sequence controller — for both the
+//! Sequential and the Ghidorah (tree-speculative) engines, and regardless
+//! of when sequences join the batch.
+
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::kv_cache::{BatchKvCache, KvCache};
+use ghidorah::model::weights::Weights;
+use ghidorah::model::ModelConfig;
+use ghidorah::spec::batch::BatchedDecoder;
+use ghidorah::spec::controller::{DecodeMode, SpeculativeController};
+use ghidorah::spec::tree::VerificationTree;
+
+const SEED: u64 = 0xC0FFEE;
+const PREFILL_W: usize = 8;
+const TOP_K: usize = 4;
+const MAX_NEW: usize = 10;
+
+fn model() -> RustModel {
+    let cfg = ModelConfig::test_small();
+    RustModel::new(cfg.clone(), Weights::random(&cfg, SEED))
+}
+
+fn prompts() -> Vec<Vec<u32>> {
+    vec![vec![1, 2, 3], vec![5, 9, 11, 2], vec![7], vec![3, 1, 4, 1, 5, 9]]
+}
+
+/// The two engines under test: Sequential == root-only verification tree.
+fn engines() -> Vec<(&'static str, VerificationTree)> {
+    let ghidorah = VerificationTree::new(vec![usize::MAX, 0, 0, 1, 1, 2], vec![0, 0, 1, 0, 1, 0]);
+    ghidorah.validate().unwrap();
+    vec![("sequential", VerificationTree::root_only()), ("ghidorah", ghidorah)]
+}
+
+fn golden(model: &mut RustModel, prompt: &[u32], tree: &VerificationTree) -> Vec<u32> {
+    let cfg = model.cfg.clone();
+    let mut cache = KvCache::new(&cfg);
+    let mode = if tree.width() == 1 {
+        DecodeMode::Sequential
+    } else {
+        DecodeMode::Speculative(tree.clone())
+    };
+    let mut ctl = SpeculativeController::new(model, PREFILL_W, TOP_K);
+    ctl.generate(prompt, MAX_NEW, &mode, &mut cache).unwrap().tokens
+}
+
+#[test]
+fn batched_b4_matches_single_sequence_goldens() {
+    let mut model = model();
+    let cfg = model.cfg.clone();
+    let prompts = prompts();
+    for (label, tree) in engines() {
+        let goldens: Vec<Vec<u32>> =
+            prompts.iter().map(|p| golden(&mut model, p, &tree)).collect();
+
+        let mut caches = BatchKvCache::new(&cfg, prompts.len());
+        let mut dec = BatchedDecoder::new(PREFILL_W, TOP_K);
+        for (i, p) in prompts.iter().enumerate() {
+            let lane = caches.alloc().unwrap();
+            dec.admit(&model, i as u64, p.clone(), MAX_NEW, tree.clone(), lane, &caches).unwrap();
+        }
+        let mut results: Vec<Option<Vec<u32>>> = vec![None; prompts.len()];
+        let mut guard = 0;
+        while dec.active() > 0 {
+            guard += 1;
+            assert!(guard < 1000, "{label}: batch failed to drain");
+            for f in dec.step(&mut model, &mut caches).unwrap() {
+                caches.release(f.lane);
+                results[f.id as usize] = Some(f.outcome.tokens);
+            }
+        }
+        for (i, (got, want)) in results.iter().zip(&goldens).enumerate() {
+            assert_eq!(
+                got.as_ref().unwrap(),
+                want,
+                "{label}: prompt {i} diverged from its single-sequence golden trace"
+            );
+        }
+    }
+}
+
+#[test]
+fn staggered_joins_preserve_goldens() {
+    // sequences joining mid-flight (continuous batching) must not perturb
+    // sequences already decoding, nor their own traces.
+    let mut model = model();
+    let cfg = model.cfg.clone();
+    let prompts = prompts();
+    for (label, tree) in engines() {
+        let goldens: Vec<Vec<u32>> =
+            prompts.iter().map(|p| golden(&mut model, p, &tree)).collect();
+
+        let mut caches = BatchKvCache::new(&cfg, prompts.len());
+        let mut dec = BatchedDecoder::new(PREFILL_W, TOP_K);
+        let mut results: Vec<Option<Vec<u32>>> = vec![None; prompts.len()];
+        let mut next = 0usize;
+        let mut guard = 0;
+        // admit one more sequence every other step until all have joined
+        while dec.active() > 0 || next < prompts.len() {
+            guard += 1;
+            assert!(guard < 1000, "{label}: batch failed to drain");
+            if next < prompts.len() && guard % 2 == 1 {
+                let lane = caches.alloc().unwrap();
+                dec.admit(
+                    &model,
+                    next as u64,
+                    prompts[next].clone(),
+                    MAX_NEW,
+                    tree.clone(),
+                    lane,
+                    &caches,
+                )
+                .unwrap();
+                next += 1;
+            }
+            for f in dec.step(&mut model, &mut caches).unwrap() {
+                caches.release(f.lane);
+                results[f.id as usize] = Some(f.outcome.tokens);
+            }
+        }
+        for (i, (got, want)) in results.iter().zip(&goldens).enumerate() {
+            assert_eq!(
+                got.as_ref().unwrap(),
+                want,
+                "{label}: staggered prompt {i} diverged from its golden trace"
+            );
+        }
+        assert_eq!(caches.free_lanes(), prompts.len(), "all lanes must be released");
+    }
+}

@@ -1,6 +1,9 @@
 //! Property-style parity: the PJRT (AOT) engine and the pure-Rust forward
 //! must agree on random tree steps and random cache states. Skipped when
-//! artifacts are missing.
+//! artifacts are missing; compiled only with the `pjrt` feature (the engine
+//! is stubbed out without it).
+
+#![cfg(feature = "pjrt")]
 
 use ghidorah::model::forward::RustModel;
 use ghidorah::model::kv_cache::KvCache;

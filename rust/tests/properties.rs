@@ -2,7 +2,7 @@
 //! not vendorable offline). Each property runs over deterministic generated
 //! cases with seed-reporting on failure.
 
-use ghidorah::model::kv_cache::KvCache;
+use ghidorah::model::kv_cache::{BatchKvCache, KvCache};
 use ghidorah::model::ModelConfig;
 use ghidorah::sparse::{
     attention_dense_masked, attention_sparse_opt, merge_partials, CooPattern,
@@ -249,6 +249,140 @@ fn prop_kv_cache_commit_rollback() {
         }
         Ok(())
     });
+}
+
+/// Batched KV lanes are isolated: any interleaving of commits/rollbacks on
+/// other lanes never perturbs a lane's visible state.
+#[test]
+fn prop_batch_kv_lane_isolation() {
+    check(
+        "batch-kv-lane-isolation",
+        40,
+        |r| (r.range(2, 5), r.range(1, 9), r.next_u64()),
+        |&(n_lanes, w, seed)| {
+            let cfg = ModelConfig::test_small();
+            let mut rng = Rng::new(seed);
+            let mut batch = BatchKvCache::new(&cfg, n_lanes);
+            let ids: Vec<usize> = (0..n_lanes).map(|_| batch.alloc().unwrap()).collect();
+            let n = cfg.n_layers * w * cfg.n_heads * cfg.head_dim;
+            let blob = |rng: &mut Rng| -> (Vec<f32>, Vec<f32>) {
+                ((0..n).map(|_| rng.f32()).collect(), (0..n).map(|_| rng.f32()).collect())
+            };
+            // distinct initial contents per lane
+            for &id in &ids {
+                let (k, v) = blob(&mut rng);
+                batch.lane_mut(id).commit_prefix(&k, &v, w, w);
+            }
+            let watched = ids[0];
+            let snap_len = batch.lane(watched).len();
+            let snap_k = batch.lane(watched).k_flat().to_vec();
+            let snap_v = batch.lane(watched).v_flat().to_vec();
+            // hammer every other lane with commits and rollbacks
+            for &id in &ids[1..] {
+                let (k, v) = blob(&mut rng);
+                let before = batch.lane(id).len();
+                let room = w.min(batch.lane(id).remaining());
+                batch.lane_mut(id).commit_prefix(&k, &v, w, room);
+                if rng.chance(0.5) {
+                    batch.lane_mut(id).truncate(before);
+                }
+            }
+            if batch.lane(watched).len() != snap_len {
+                return Err("watched lane length changed".into());
+            }
+            if batch.lane(watched).k_flat() != snap_k.as_slice()
+                || batch.lane(watched).v_flat() != snap_v.as_slice()
+            {
+                return Err("watched lane contents changed".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Rollback after a rejected draft restores the lane's exact visible state
+/// (length and every committed position, every layer).
+#[test]
+fn prop_batch_kv_rollback_restores_predraft_state() {
+    check(
+        "batch-kv-rollback",
+        40,
+        |r| (r.range(1, 9), r.range(1, 9), r.next_u64()),
+        |&(base, w, seed)| {
+            let cfg = ModelConfig::test_small();
+            let mut rng = Rng::new(seed);
+            let mut batch = BatchKvCache::new(&cfg, 2);
+            let lane = batch.alloc().unwrap();
+            let hd = cfg.n_heads * cfg.head_dim;
+            let n = cfg.n_layers * base * hd;
+            let k: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let v: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            batch.lane_mut(lane).commit_prefix(&k, &v, base, base);
+            let len = batch.lane(lane).len();
+            let visible = |b: &BatchKvCache| -> Vec<Vec<f32>> {
+                (0..cfg.n_layers)
+                    .map(|l| b.lane(lane).k_layer(l)[..len * hd].to_vec())
+                    .collect()
+            };
+            let before = visible(&batch);
+            // speculative draft block: commit a random accepted subset...
+            let m = cfg.n_layers * w * hd;
+            let dk: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let dv: Vec<f32> = (0..m).map(|_| rng.f32()).collect();
+            let mut sel: Vec<usize> = (0..w).collect();
+            rng.shuffle(&mut sel);
+            sel.truncate(rng.range(1, w + 1));
+            batch.lane_mut(lane).commit_selected(&dk, &dv, w, &sel);
+            // ...then the verifier rejects: roll back
+            batch.lane_mut(lane).truncate(len);
+            if batch.lane(lane).len() != len {
+                return Err("rollback length mismatch".into());
+            }
+            if visible(&batch) != before {
+                return Err("rollback did not restore pre-draft contents".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Lane recycling after a sequence leaves (EOS) hands out a scrubbed lane:
+/// no stale keys or values from the previous tenant are observable.
+#[test]
+fn prop_batch_kv_lane_recycling_never_leaks() {
+    check(
+        "batch-kv-lane-recycling",
+        40,
+        |r| (r.range(1, 4), r.range(1, 9), r.next_u64()),
+        |&(n_lanes, w, seed)| {
+            let cfg = ModelConfig::test_small();
+            let mut rng = Rng::new(seed);
+            let mut batch = BatchKvCache::new(&cfg, n_lanes);
+            let ids: Vec<usize> = (0..n_lanes).map(|_| batch.alloc().unwrap()).collect();
+            let n = cfg.n_layers * w * cfg.n_heads * cfg.head_dim;
+            for &id in &ids {
+                let k: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let v: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                batch.lane_mut(id).commit_prefix(&k, &v, w, w);
+            }
+            // one sequence hits EOS and leaves; a new one joins
+            let leaver = ids[rng.below(n_lanes)];
+            batch.release(leaver);
+            let joiner = batch.alloc().ok_or("lane not recycled")?;
+            if joiner != leaver {
+                return Err(format!("expected recycled lane {leaver}, got {joiner}"));
+            }
+            if batch.lane(joiner).len() != 0 {
+                return Err("recycled lane has nonzero committed length".into());
+            }
+            if !batch.lane(joiner).k_flat().iter().all(|&x| x == 0.0)
+                || !batch.lane(joiner).v_flat().iter().all(|&x| x == 0.0)
+            {
+                return Err("recycled lane leaked the previous tenant's KV".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 /// JSON roundtrip: dump(parse(x)) is a fixpoint for arbitrary values built

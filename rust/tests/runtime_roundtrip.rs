@@ -2,6 +2,10 @@
 //!
 //! These tests require `make artifacts` to have run; they skip (with a
 //! message) otherwise so `cargo test` stays green on a fresh checkout.
+//! The whole file is compiled only with the `pjrt` feature (the engine is
+//! stubbed out without it).
+
+#![cfg(feature = "pjrt")]
 
 use ghidorah::model::forward::RustModel;
 use ghidorah::model::kv_cache::KvCache;

@@ -1,0 +1,115 @@
+//! Server-level continuous-batching integration: 8 concurrent JSON-lines
+//! clients with mixed sequential/ghidorah engines must each receive exactly
+//! the answer a lone client would get, and the `stats` command must show
+//! that their decodes actually shared batched steps (occupancy > 1) and
+//! report queue-delay percentiles.
+
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc, Barrier};
+
+use ghidorah::coordinator::server::Client;
+use ghidorah::coordinator::{EngineChoice, Request, Scheduler, Server};
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::weights::Weights;
+use ghidorah::model::ModelConfig;
+use ghidorah::spec::tree::VerificationTree;
+use ghidorah::util::json::Json;
+
+const N_CLIENTS: usize = 8;
+const MAX_NEW: usize = 32;
+const SEED: u64 = 42;
+
+fn scheduler() -> Scheduler {
+    let cfg = ModelConfig::tiny(); // byte tokenizer needs the 512 vocab
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, SEED));
+    Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4)
+}
+
+fn workload() -> Vec<(String, &'static str)> {
+    let prompts =
+        ["alpha", "bravo charlie", "delta", "echo foxtrot", "golf", "hotel india", "jul", "kilo x"];
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| (p.to_string(), if i % 2 == 0 { "sequential" } else { "ghidorah" }))
+        .collect()
+}
+
+#[test]
+fn concurrent_clients_get_single_client_answers_and_share_steps() {
+    // single-client references, one request at a time through a fresh engine
+    let reference: Vec<String> = {
+        let sched = scheduler();
+        workload()
+            .into_iter()
+            .enumerate()
+            .map(|(i, (prompt, engine))| {
+                sched
+                    .submit(Request {
+                        id: i as u64,
+                        prompt,
+                        max_new: MAX_NEW,
+                        engine: EngineChoice::parse(engine).unwrap(),
+                    })
+                    .unwrap()
+                    .text
+            })
+            .collect()
+    };
+
+    // live server over an identical engine
+    let server = Arc::new(Server::new(scheduler(), N_CLIENTS + 2));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server2 = Arc::clone(&server);
+    let handle = std::thread::spawn(move || {
+        server2.serve("127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap();
+    });
+    let addr = addr_rx.recv().unwrap();
+
+    // 8 clients fire simultaneously
+    let barrier = Arc::new(Barrier::new(N_CLIENTS));
+    let mut clients = Vec::new();
+    for (i, (prompt, engine)) in workload().into_iter().enumerate() {
+        let barrier = Arc::clone(&barrier);
+        clients.push(std::thread::spawn(move || -> anyhow::Result<(usize, String)> {
+            let mut c = Client::connect(addr)?;
+            barrier.wait();
+            let resp = c.request(i as u64, &prompt, MAX_NEW, engine)?;
+            anyhow::ensure!(resp.get("error").is_none(), "server error: {}", resp.dump());
+            anyhow::ensure!(
+                resp.get("id").and_then(Json::as_usize) == Some(i),
+                "response routed to the wrong client"
+            );
+            anyhow::ensure!(
+                resp.get("queue_delay_ms").and_then(Json::as_f64).is_some(),
+                "response missing queue_delay_ms"
+            );
+            let text = resp.get("text").and_then(Json::as_str).unwrap_or_default().to_string();
+            Ok((i, text))
+        }));
+    }
+    for c in clients {
+        let (i, text) = c.join().unwrap().unwrap();
+        assert_eq!(
+            text, reference[i],
+            "client {i}: batched response differs from its single-client reference"
+        );
+    }
+
+    // the batch must actually have been shared at some point
+    let mut c = Client::connect(addr).unwrap();
+    let stats = c.roundtrip(&Json::obj(vec![("cmd", Json::str("stats"))])).unwrap();
+    assert_eq!(stats.get("requests").unwrap().as_usize(), Some(N_CLIENTS));
+    let occ_max = stats.get("batch_occupancy_max").unwrap().as_f64().unwrap();
+    assert!(
+        occ_max > 1.0,
+        "8 simultaneous clients never shared a batched step (occupancy max {occ_max})"
+    );
+    assert!(stats.get("queue_delay_ms_p95").is_some(), "stats missing queue-delay percentiles");
+    assert!(stats.get("batch_occupancy_mean").is_some());
+
+    // shutdown
+    let _ = c.roundtrip(&Json::obj(vec![("cmd", Json::str("shutdown"))]));
+    let _ = TcpStream::connect(addr);
+    handle.join().unwrap();
+}
