@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     let mut t = TablePrinter::new(&["head", "top1", "top2", "top3", "top4"]);
     for (d, h) in fit.profile.heads.iter().take(4).enumerate() {
         t.row(vec![
-            format!("{d}"),
+            d.to_string(),
             format!("{:.3}", h[0]),
             format!("{:.3}", h[1]),
             format!("{:.3}", h[2]),
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
     let mut t = TablePrinter::new(&["width", "E[acc]", "step (ms)", "tok/s", "gpu col ratio"]);
     for r in &out.rows {
         t.row(vec![
-            format!("{}", r.width),
+            r.width.to_string(),
             format!("{:.2}", r.expected_acceptance),
             format!("{:.1}", r.step_time * 1e3),
             format!("{:.2}", r.throughput),

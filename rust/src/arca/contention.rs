@@ -41,9 +41,7 @@ pub fn isolated_ratio(sim: &Simulator, cfg: &ModelConfig, width: usize, ctx: usi
 }
 
 fn chain_pattern(w: usize) -> CooPattern {
-    CooPattern::from_tree(
-        &(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>(),
-    )
+    CooPattern::causal(w)
 }
 
 /// Gradually adjust the linear ratio (and optionally the attention context

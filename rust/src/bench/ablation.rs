@@ -41,7 +41,7 @@ pub fn ablation() -> AblationOutcome {
         let greedy_e = greedy.expected_acceptance(heads);
         let refined = refine_tree(&greedy, &fit.profile, 6000, 4, 17).measured_acceptance;
         t1.row(vec![
-            format!("{w}"),
+            w.to_string(),
             format!("{chain_e:.3}"),
             format!("{greedy_e:.3}"),
             format!("{refined:.3}"),

@@ -1,6 +1,8 @@
 //! Serving metrics: request latency, decode throughput, acceptance lengths,
-//! and the continuous-batching signals (per-step batch occupancy, per-request
-//! queueing delay before a lane frees up).
+//! the continuous-batching signals (per-step batch occupancy, per-request
+//! queueing delay percentiles — p50/p95/p99, not just the mean), and the
+//! hetero-core execution signals (per-unit busy-time counters + measured
+//! balance when the engine runs on instrumented worker pools).
 
 use std::sync::Mutex;
 
@@ -17,9 +19,18 @@ struct Inner {
     decode_time_s: f64,
     /// Time each request spent queued before joining the batch.
     queue_delay_ms: Samples,
+    /// Wall time of recent batched decode steps — a bounded ring, because
+    /// steps are the highest-frequency event in the server (an unbounded
+    /// `Samples` would grow forever and re-sort under the mutex).
+    step_ms: Vec<f64>,
+    step_ms_next: usize,
     /// Active sequences per batched step.
     occupancy: OnlineStats,
     occupancy_max: u64,
+    /// Busy occupancy-seconds of the wide-unit (GPU-analogue) pool.
+    wide_busy_s: f64,
+    /// Busy occupancy-seconds of the narrow-unit (CPU-analogue) pool.
+    narrow_busy_s: f64,
 }
 
 /// Thread-safe metrics sink shared by the scheduler and the server.
@@ -57,11 +68,36 @@ impl Metrics {
     /// (once per shared step) rather than per request, so
     /// `decode_tokens_per_s` reports *aggregate* throughput — summing the
     /// overlapped per-request times would undercount batching by ~B×.
+    /// Window of recent step times kept for the percentile surface.
+    const STEP_WINDOW: usize = 4096;
+
     pub fn record_step(&self, occupancy: usize, step_time_s: f64) {
         let mut m = self.inner.lock().unwrap();
         m.occupancy.push(occupancy as f64);
         m.occupancy_max = m.occupancy_max.max(occupancy as u64);
         m.decode_time_s += step_time_s;
+        let ms = step_time_s * 1e3;
+        if m.step_ms.len() < Self::STEP_WINDOW {
+            m.step_ms.push(ms);
+        } else {
+            let i = m.step_ms_next;
+            m.step_ms[i] = ms;
+        }
+        m.step_ms_next = (m.step_ms_next + 1) % Self::STEP_WINDOW;
+    }
+
+    /// Accumulate per-unit busy time measured on the engine's worker pools
+    /// (a *delta* since the previous call, in occupancy-seconds per unit).
+    pub fn record_unit_busy(&self, wide_s: f64, narrow_s: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.wide_busy_s += wide_s.max(0.0);
+        m.narrow_busy_s += narrow_s.max(0.0);
+    }
+
+    /// Cumulative per-unit busy occupancy-seconds (wide, narrow).
+    pub fn unit_busy(&self) -> (f64, f64) {
+        let m = self.inner.lock().unwrap();
+        (m.wide_busy_s, m.narrow_busy_s)
     }
 
     pub fn requests(&self) -> u64 {
@@ -78,9 +114,18 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         let thr = if m.decode_time_s > 0.0 { m.tokens_out as f64 / m.decode_time_s } else { 0.0 };
         let (p50, p95) = (m.latency_ms.p50(), m.latency_ms.p95());
-        let (q50, q95) = (m.queue_delay_ms.p50(), m.queue_delay_ms.p95());
+        let (q50, q95, q99) =
+            (m.queue_delay_ms.p50(), m.queue_delay_ms.p95(), m.queue_delay_ms.p99());
+        let mut step = Samples::new();
+        for &x in &m.step_ms {
+            step.push(x);
+        }
+        let (s50, s95) = (step.p50(), step.p95());
         let (occ_mean, occ_max, occ_steps) =
             (m.occupancy.mean(), m.occupancy_max, m.occupancy.count());
+        let busy_hi = m.wide_busy_s.max(m.narrow_busy_s);
+        let unit_balance =
+            if busy_hi > 0.0 { m.wide_busy_s.min(m.narrow_busy_s) / busy_hi } else { 1.0 };
         Json::obj(vec![
             ("requests", Json::num(m.requests as f64)),
             ("tokens_out", Json::num(m.tokens_out as f64)),
@@ -91,9 +136,15 @@ impl Metrics {
             ("latency_ms_p95", Json::num(p95)),
             ("queue_delay_ms_p50", Json::num(q50)),
             ("queue_delay_ms_p95", Json::num(q95)),
+            ("queue_delay_ms_p99", Json::num(q99)),
+            ("step_ms_p50", Json::num(s50)),
+            ("step_ms_p95", Json::num(s95)),
             ("batch_steps", Json::num(occ_steps as f64)),
             ("batch_occupancy_mean", Json::num(occ_mean)),
             ("batch_occupancy_max", Json::num(occ_max as f64)),
+            ("unit_wide_busy_s", Json::num(m.wide_busy_s)),
+            ("unit_narrow_busy_s", Json::num(m.narrow_busy_s)),
+            ("unit_balance", Json::num(unit_balance)),
         ])
     }
 }
@@ -131,6 +182,47 @@ mod tests {
         let mean = j.get("batch_occupancy_mean").unwrap().as_f64().unwrap();
         assert!((mean - 2.4).abs() < 1e-9);
         assert_eq!(j.get("batch_occupancy_max").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn unit_busy_counters_and_balance() {
+        let m = Metrics::new();
+        // no instrumented engine: balance reports neutral 1.0
+        assert_eq!(m.snapshot().get("unit_balance").unwrap().as_f64(), Some(1.0));
+        m.record_unit_busy(0.6, 0.2);
+        m.record_unit_busy(0.2, 0.2);
+        let (w, n) = m.unit_busy();
+        assert!((w - 0.8).abs() < 1e-12 && (n - 0.4).abs() < 1e-12);
+        let j = m.snapshot();
+        assert!((j.get("unit_wide_busy_s").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-12);
+        assert!((j.get("unit_narrow_busy_s").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-12);
+        assert!((j.get("unit_balance").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_time_percentiles_surface() {
+        let m = Metrics::new();
+        for i in 1..=10 {
+            m.record_step(1, i as f64 * 0.001);
+        }
+        let j = m.snapshot();
+        let p50 = j.get("step_ms_p50").unwrap().as_f64().unwrap();
+        assert!((p50 - 5.5).abs() < 1e-9, "step p50 {p50}");
+        let q99 = j.get("queue_delay_ms_p99").unwrap();
+        assert!(q99.as_f64().is_some());
+    }
+
+    #[test]
+    fn step_window_is_bounded_and_rolls() {
+        let m = Metrics::new();
+        for i in 0..5000 {
+            m.record_step(1, i as f64 * 1e-3); // i milliseconds
+        }
+        let j = m.snapshot();
+        let p50 = j.get("step_ms_p50").unwrap().as_f64().unwrap();
+        // only the newest STEP_WINDOW samples (904..=4999 ms) remain
+        assert!(p50 > 903.0, "old samples not evicted: p50 {p50}");
+        assert!((p50 - 2951.5).abs() < 1.0, "unexpected windowed p50 {p50}");
     }
 
     #[test]

@@ -147,6 +147,8 @@ impl Scheduler {
                 let mut inflight: HashMap<u64, InFlight> = HashMap::new();
                 let mut next_seq: u64 = 0;
                 let mut closed = false;
+                // last cumulative per-unit busy reading (delta-fed to metrics)
+                let mut unit_prev = (0.0f64, 0.0f64);
 
                 loop {
                     // block for work when fully idle; otherwise only drain
@@ -208,6 +210,10 @@ impl Scheduler {
                     let step_started = Instant::now();
                     let step_result = dec.step(&mut engine, &mut caches);
                     metrics_w.record_step(occupancy, step_started.elapsed().as_secs_f64());
+                    if let Some((wide, narrow)) = engine.unit_busy() {
+                        metrics_w.record_unit_busy(wide - unit_prev.0, narrow - unit_prev.1);
+                        unit_prev = (wide, narrow);
+                    }
                     let deliver = |f: crate::spec::batch::FinishedSeq,
                                    caches: &mut BatchKvCache,
                                    inflight: &mut HashMap<u64, InFlight>| {
@@ -403,6 +409,36 @@ mod tests {
             let (i, got) = h.join().unwrap();
             assert_eq!(got.text, want[i], "prompt {i} diverged under concurrent batching");
         }
+    }
+
+    #[test]
+    fn parallel_engine_matches_and_reports_unit_busy() {
+        use crate::exec::ExecEngine;
+        use crate::hcmp::PartitionPlan;
+
+        let want = sched()
+            .submit(Request { id: 0, prompt: "hi".into(), max_new: 6, engine: EngineChoice::Ghidorah })
+            .unwrap()
+            .text;
+
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let s = Scheduler::spawn(
+            move || ExecEngine::parallel(model, &PartitionPlan::hcmp(0.5), 2, 2),
+            VerificationTree::chain(3),
+            8,
+            4,
+        );
+        let got = s
+            .submit(Request { id: 1, prompt: "hi".into(), max_new: 6, engine: EngineChoice::Ghidorah })
+            .unwrap();
+        assert_eq!(got.text, want, "parallel engine diverged from serial engine");
+        let (wide, narrow) = s.metrics.unit_busy();
+        assert!(wide > 0.0, "wide-unit busy time not recorded");
+        assert!(narrow > 0.0, "narrow-unit busy time not recorded");
+        let stats = s.metrics.snapshot();
+        let bal = stats.get("unit_balance").unwrap().as_f64().unwrap();
+        assert!(bal > 0.0 && bal <= 1.0, "balance out of range: {bal}");
     }
 
     #[test]

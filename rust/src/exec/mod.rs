@@ -1,0 +1,155 @@
+//! Execution engines: the staged forward pipeline and the step executors
+//! that drive it — serially, or HCMP-parallel across hetero-core worker
+//! pools. See `pipeline` for the op staging, `parallel` for the real
+//! concurrent engine, and [`ExecEngine`] for the serving-facing wrapper
+//! that plugs either executor into the batched decode path.
+
+pub mod parallel;
+pub(crate) mod pipeline;
+pub mod sequential;
+
+pub use parallel::HcmpParallelExecutor;
+pub use pipeline::ForwardOps;
+pub use sequential::SequentialExecutor;
+
+use crate::hcmp::{PartitionPlan, SimReport};
+use crate::model::forward::{RustModel, SegmentInput, StepOutput};
+use crate::model::ModelConfig;
+use crate::spec::batch::BatchedStepExecutor;
+
+/// A forward engine for one decode step over B segments. Unlike the
+/// op-level [`ForwardOps`] backend, this is the whole-step surface the
+/// serving and bench layers select between.
+pub trait StepExecutor: Send {
+    fn name(&self) -> &'static str;
+    /// Run one decode step; must be bitwise identical across executors.
+    fn forward(&mut self, model: &RustModel, segs: &[SegmentInput<'_>]) -> Vec<StepOutput>;
+    /// Cumulative measured timings since construction.
+    fn timings(&self) -> ExecTimings;
+    /// Cumulative (wide, narrow) busy occupancy-seconds — `Some` only for
+    /// executors that actually run on two units; single-unit executors
+    /// return `None` so metrics report the neutral balance, not 0.0.
+    fn unit_busy(&self) -> Option<(f64, f64)> {
+        None
+    }
+}
+
+/// Measured execution-side timings, the wall-clock counterpart of the
+/// simulator's virtual-time [`SimReport`]. Busy times are *occupancy
+/// seconds* per unit: busy core-seconds aggregated over a pool's threads,
+/// divided by the pool size — directly comparable to the simulator's
+/// per-unit busy times once divided by `steps`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecTimings {
+    pub steps: u64,
+    /// Wall-clock seconds across all forwards.
+    pub total_s: f64,
+    /// Occupancy-seconds of the wide-unit pool (GPU analogue).
+    pub wide_busy_s: f64,
+    /// Occupancy-seconds of the narrow-unit pool (CPU analogue).
+    pub narrow_busy_s: f64,
+}
+
+impl ExecTimings {
+    /// Measured load-balance quality: idler / busier unit occupancy
+    /// (1.0 = perfectly balanced; same definition as `SimReport::balance`).
+    pub fn balance(&self) -> f64 {
+        let hi = self.wide_busy_s.max(self.narrow_busy_s);
+        if hi <= 0.0 {
+            return 1.0;
+        }
+        self.wide_busy_s.min(self.narrow_busy_s) / hi
+    }
+
+    /// Average per-step report in the simulator's shape, so measured and
+    /// simulated partitions can be compared side by side (`bench measured`).
+    pub fn to_sim_report(&self) -> SimReport {
+        if self.steps == 0 {
+            return SimReport::default();
+        }
+        let n = self.steps as f64;
+        SimReport {
+            total: self.total_s / n,
+            gpu_busy: self.wide_busy_s / n,
+            cpu_busy: self.narrow_busy_s / n,
+            sync: 0.0,
+            phases: 0,
+        }
+    }
+}
+
+/// A pure-Rust decode engine — model weights plus a pluggable step
+/// executor — usable anywhere a [`BatchedStepExecutor`] is (the
+/// continuous-batching scheduler, the batched decoder, benches).
+pub struct ExecEngine {
+    model: RustModel,
+    exec: Box<dyn StepExecutor + Send>,
+}
+
+impl ExecEngine {
+    /// Single-unit engine (the sequential hot path).
+    pub fn sequential(model: RustModel) -> Self {
+        Self { model, exec: Box::new(SequentialExecutor::new()) }
+    }
+
+    /// HCMP-parallel engine executing `plan` on two worker pools.
+    pub fn parallel(
+        model: RustModel,
+        plan: &PartitionPlan,
+        wide_threads: usize,
+        narrow_threads: usize,
+    ) -> anyhow::Result<Self> {
+        let exec = HcmpParallelExecutor::new(plan, wide_threads, narrow_threads)?;
+        Ok(Self { model, exec: Box::new(exec) })
+    }
+
+    pub fn executor_name(&self) -> &'static str {
+        self.exec.name()
+    }
+
+    pub fn timings(&self) -> ExecTimings {
+        self.exec.timings()
+    }
+
+    pub fn model(&self) -> &RustModel {
+        &self.model
+    }
+}
+
+impl BatchedStepExecutor for ExecEngine {
+    fn cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    fn supports_width(&self, _w: usize) -> bool {
+        true
+    }
+
+    fn decode_batch(
+        &mut self,
+        seqs: &[SegmentInput<'_>],
+    ) -> anyhow::Result<Vec<StepOutput>> {
+        Ok(self.exec.forward(&self.model, seqs))
+    }
+
+    fn unit_busy(&self) -> Option<(f64, f64)> {
+        self.exec.unit_busy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_and_sim_report_shape() {
+        let t = ExecTimings { steps: 4, total_s: 2.0, wide_busy_s: 1.6, narrow_busy_s: 0.8 };
+        assert!((t.balance() - 0.5).abs() < 1e-12);
+        let r = t.to_sim_report();
+        assert!((r.total - 0.5).abs() < 1e-12);
+        assert!((r.gpu_busy - 0.4).abs() < 1e-12);
+        assert!((r.cpu_busy - 0.2).abs() < 1e-12);
+        assert_eq!(ExecTimings::default().balance(), 1.0);
+        assert_eq!(ExecTimings::default().to_sim_report().total, 0.0);
+    }
+}

@@ -1,0 +1,445 @@
+//! The HCMP parallel forward engine: a `PartitionPlan` executed for real.
+//!
+//! Two persistent worker pools stand in for the paper's heterogeneous
+//! units: a **wide-unit pool** (the GPU analogue — takes the dense,
+//! regular work) and a **narrow-unit pool** (the CPU analogue — takes the
+//! sparse, irregular work). One fork/join barrier per partitioned op
+//! mirrors the simulator's phase semantics.
+//!
+//! * Every linear is a **column-sharded GEMM**: each unit (and each thread
+//!   within it) computes a disjoint output-column range of the *same*
+//!   activation buffer via [`gemm_into_cols`] + [`split_cols_mut`] — zero
+//!   extra allocation, no all-reduce (§III-B.1).
+//! * Attention executes the **affinity split** (§III-B.2): the dense span
+//!   runs on the wide pool, the sparse COO span on the narrow pool via
+//!   row-range-parallel [`attention_sparse_opt_rows`], merged with the
+//!   existing online-softmax [`merge_partials`].
+//!
+//! Both splits only partition output columns / query rows, so the engine
+//! output is **bitwise identical** to [`SequentialExecutor`]
+//! (`tests/exec_parity.rs` holds the golden-trace guarantee).
+//!
+//! [`SequentialExecutor`]: crate::exec::SequentialExecutor
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::exec::pipeline::{dense_span, forward_segments, head_cols, ForwardOps};
+use crate::exec::{ExecTimings, StepExecutor};
+use crate::hcmp::{ExecPlan, PartitionPlan};
+use crate::model::forward::{RustModel, SegmentInput, StepOutput};
+use crate::model::ModelConfig;
+use crate::sparse::{attention_sparse_opt_rows, merge_partials, Partials};
+use crate::tensor::{gemm_into_cols, split_cols_mut, Tensor};
+use crate::util::threadpool::{scoped_run_on, ScopedJob, ThreadPool};
+
+/// Split `[lo, hi)` into at most `parts` near-equal non-empty chunks —
+/// the per-thread work partitioning used for both column shards and
+/// attention row ranges. Public so the kernel property tests exercise the
+/// exact partitioning the engine executes.
+pub fn chunk_bounds(lo: usize, hi: usize, parts: usize) -> Vec<(usize, usize)> {
+    let w = hi - lo;
+    if w == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, w);
+    let (q, r) = (w / parts, w % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut s = lo;
+    for i in 0..parts {
+        let len = q + usize::from(i < r);
+        out.push((s, s + len));
+        s += len;
+    }
+    out
+}
+
+/// Column-shard layout of one `n`-column linear: the wide unit's
+/// `[0, n_wide)` shard split across its threads, then the narrow unit's
+/// remainder split across its threads; also returns how many leading
+/// chunks belong to the wide unit. Shared by [`HcmpParallelExecutor`] and
+/// the sharded-GEMM property tests so the two can never drift.
+pub fn shard_bounds(
+    n: usize,
+    n_wide: usize,
+    wide_parts: usize,
+    narrow_parts: usize,
+) -> (Vec<(usize, usize)>, usize) {
+    let wide = chunk_bounds(0, n_wide, wide_parts);
+    let n_wide_chunks = wide.len();
+    let all: Vec<(usize, usize)> =
+        wide.into_iter().chain(chunk_bounds(n_wide, n, narrow_parts)).collect();
+    (all, n_wide_chunks)
+}
+
+pub struct HcmpParallelExecutor {
+    plan: ExecPlan,
+    wide: ThreadPool,
+    narrow: ThreadPool,
+    /// Busy core-nanoseconds aggregated across each pool's threads.
+    wide_busy_ns: AtomicU64,
+    narrow_busy_ns: AtomicU64,
+    steps: u64,
+    total_s: f64,
+}
+
+impl HcmpParallelExecutor {
+    /// Build the engine for a partition plan with explicit pool sizes.
+    /// Fails for plans that are not executable (Megatron-style needs an
+    /// all-reduce this engine deliberately does not implement).
+    pub fn new(
+        plan: &PartitionPlan,
+        wide_threads: usize,
+        narrow_threads: usize,
+    ) -> anyhow::Result<Self> {
+        let plan = crate::hcmp::plan_to_exec(plan, wide_threads, narrow_threads)?;
+        Ok(Self {
+            wide: ThreadPool::new(plan.wide_threads),
+            narrow: ThreadPool::new(plan.narrow_threads),
+            plan,
+            wide_busy_ns: AtomicU64::new(0),
+            narrow_busy_ns: AtomicU64::new(0),
+            steps: 0,
+            total_s: 0.0,
+        })
+    }
+
+    /// Build with pool sizes derived from the host's core count.
+    pub fn auto(plan: &PartitionPlan) -> anyhow::Result<Self> {
+        let (w, n) = crate::hcmp::auto_pool_sizes();
+        Self::new(plan, w, n)
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+}
+
+impl StepExecutor for HcmpParallelExecutor {
+    fn name(&self) -> &'static str {
+        "hcmp-parallel"
+    }
+
+    fn forward(&mut self, model: &RustModel, segs: &[SegmentInput<'_>]) -> Vec<StepOutput> {
+        let t0 = Instant::now();
+        let out = {
+            let mut ops = ParallelOps {
+                plan: &self.plan,
+                wide: &self.wide,
+                narrow: &self.narrow,
+                wide_busy: &self.wide_busy_ns,
+                narrow_busy: &self.narrow_busy_ns,
+            };
+            forward_segments(model, segs, &mut ops)
+        };
+        self.steps += 1;
+        self.total_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn timings(&self) -> ExecTimings {
+        ExecTimings {
+            steps: self.steps,
+            total_s: self.total_s,
+            wide_busy_s: self.wide_busy_ns.load(Ordering::Relaxed) as f64
+                * 1e-9
+                / self.plan.wide_threads as f64,
+            narrow_busy_s: self.narrow_busy_ns.load(Ordering::Relaxed) as f64
+                * 1e-9
+                / self.plan.narrow_threads as f64,
+        }
+    }
+
+    fn unit_busy(&self) -> Option<(f64, f64)> {
+        let t = self.timings();
+        Some((t.wide_busy_s, t.narrow_busy_s))
+    }
+}
+
+struct ParallelOps<'e> {
+    plan: &'e ExecPlan,
+    wide: &'e ThreadPool,
+    narrow: &'e ThreadPool,
+    wide_busy: &'e AtomicU64,
+    narrow_busy: &'e AtomicU64,
+}
+
+impl ForwardOps for ParallelOps<'_> {
+    /// Column-sharded GEMM: the wide unit takes output columns
+    /// `[0, ratio*n)`, the narrow unit the rest; each unit further splits
+    /// its shard across its threads. All shards write disjoint column
+    /// ranges of one preallocated output — zero-copy composition.
+    fn linear(&mut self, x: &Tensor, w: &Tensor) -> Tensor {
+        let (m, kdim) = (x.shape()[0], x.shape()[1]);
+        let n = w.shape()[1];
+        let mut c = Tensor::zeros(&[m, n]);
+        let n_wide = self.plan.wide_cols(n);
+        let (all, n_wide_chunks) =
+            shard_bounds(n, n_wide, self.plan.wide_threads, self.plan.narrow_threads);
+        let mut bounds: Vec<usize> = all.iter().map(|c| c.0).collect();
+        bounds.push(n);
+        {
+            let (xd, wd) = (x.data(), w.data());
+            let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+            let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(n_wide_chunks);
+            let mut narrow_jobs: Vec<ScopedJob<'_>> =
+                Vec::with_capacity(all.len() - n_wide_chunks);
+            for (idx, (mut rows, (lo, hi))) in shards.into_iter().zip(all).enumerate() {
+                let busy = if idx < n_wide_chunks { self.wide_busy } else { self.narrow_busy };
+                let job: ScopedJob<'_> = Box::new(move || {
+                    let t = Instant::now();
+                    gemm_into_cols(xd, wd, &mut rows, kdim, n, lo, hi);
+                    busy.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                });
+                if idx < n_wide_chunks {
+                    wide_jobs.push(job);
+                } else {
+                    narrow_jobs.push(job);
+                }
+            }
+            scoped_run_on(vec![(self.wide, wide_jobs), (self.narrow, narrow_jobs)]);
+        }
+        c
+    }
+
+    /// Affinity-split attention: for every (segment, head) the dense span
+    /// runs row-range-parallel on the wide pool and the sparse span
+    /// row-range-parallel on the narrow pool, concurrently; the caller then
+    /// merges each pair with the same online-softmax merge the sequential
+    /// path uses. Both spans stay whole per unit (fractional context
+    /// re-balancing is a cost-model refinement — executing it would split
+    /// the dense softmax and break the bitwise guarantee).
+    fn attention(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        layer: usize,
+        segs: &[SegmentInput<'_>],
+        offsets: &[usize],
+        widths: &[usize],
+        cfg: &ModelConfig,
+    ) -> Tensor {
+        let (hn, dh) = (cfg.n_heads, cfg.head_dim);
+        let scale = (dh as f32).powf(-0.5);
+        let wt = q.shape()[0];
+        let mut o = Tensor::zeros(&[wt, hn * dh]);
+
+        // per-(head, segment) query/key/value blocks, extracted up front so
+        // the borrowed jobs can reference them
+        struct Task {
+            si: usize,
+            head: usize,
+            qs: Tensor,
+            ks: Tensor,
+            vs: Tensor,
+            w: usize,
+        }
+        let mut tasks: Vec<Task> = Vec::with_capacity(hn * segs.len());
+        for head in 0..hn {
+            let qh = head_cols(q, head, dh);
+            let kh = head_cols(k, head, dh);
+            let vh = head_cols(v, head, dh);
+            for (si, _seg) in segs.iter().enumerate() {
+                let (off, w) = (offsets[si], widths[si]);
+                tasks.push(Task {
+                    si,
+                    head,
+                    qs: qh.rows(off, off + w),
+                    ks: kh.rows(off, off + w),
+                    vs: vh.rows(off, off + w),
+                    w,
+                });
+            }
+        }
+
+        // row-chunked partial slots per task: dense chunks on the wide
+        // pool, sparse chunks on the narrow pool
+        let mut dense_parts: Vec<Vec<Option<Partials>>> = tasks
+            .iter()
+            .map(|t| {
+                let chunks = if segs[t.si].cache.is_empty() {
+                    0
+                } else {
+                    chunk_bounds(0, t.w, self.plan.wide_threads).len()
+                };
+                vec![None; chunks]
+            })
+            .collect();
+        let mut sparse_parts: Vec<Vec<Option<Partials>>> = tasks
+            .iter()
+            .map(|t| vec![None; chunk_bounds(0, t.w, self.plan.narrow_threads).len()])
+            .collect();
+
+        {
+            let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            let mut narrow_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for ((task, dslots), sslots) in
+                tasks.iter().zip(dense_parts.iter_mut()).zip(sparse_parts.iter_mut())
+            {
+                let seg = &segs[task.si];
+                let cache_len = seg.cache.len();
+                if cache_len > 0 {
+                    let kc = seg.cache.k_layer(layer);
+                    let vc = seg.cache.v_layer(layer);
+                    let ranges = chunk_bounds(0, task.w, self.plan.wide_threads);
+                    for (slot, (lo, hi)) in dslots.iter_mut().zip(ranges) {
+                        let qs = &task.qs;
+                        let head = task.head;
+                        let busy = self.wide_busy;
+                        wide_jobs.push(Box::new(move || {
+                            let t0 = Instant::now();
+                            *slot = Some(dense_span(
+                                qs, kc, vc, cache_len, head, hn, dh, scale, lo, hi,
+                            ));
+                            busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                        }));
+                    }
+                }
+                let ranges = chunk_bounds(0, task.w, self.plan.narrow_threads);
+                for (slot, (lo, hi)) in sslots.iter_mut().zip(ranges) {
+                    let (qs, ks, vs) = (&task.qs, &task.ks, &task.vs);
+                    let pattern = seg.pattern;
+                    let busy = self.narrow_busy;
+                    narrow_jobs.push(Box::new(move || {
+                        let t0 = Instant::now();
+                        *slot = Some(attention_sparse_opt_rows(qs, ks, vs, pattern, scale, lo, hi));
+                        busy.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }));
+                }
+            }
+            scoped_run_on(vec![(self.wide, wide_jobs), (self.narrow, narrow_jobs)]);
+        }
+
+        // stitch the row chunks back together and merge spans exactly as
+        // the sequential backend does
+        for ((task, dslots), sslots) in
+            tasks.iter().zip(dense_parts.iter()).zip(sparse_parts.iter())
+        {
+            let (off, head) = (offsets[task.si], task.head);
+            let sparse = stitch(sslots, task.w, dh);
+            let merged = if segs[task.si].cache.is_empty() {
+                sparse.o
+            } else {
+                let dense = stitch(dslots, task.w, dh);
+                merge_partials(&dense, &sparse)
+            };
+            for i in 0..task.w {
+                o.row_mut(off + i)[head * dh..(head + 1) * dh].copy_from_slice(merged.row(i));
+            }
+        }
+        o
+    }
+}
+
+/// Concatenate row-chunk partials back into a full-span `Partials` (exact
+/// row copies — stitching cannot perturb the bitwise guarantee).
+fn stitch(parts: &[Option<Partials>], w: usize, dh: usize) -> Partials {
+    let mut o = Tensor::zeros(&[w, dh]);
+    let mut m = Vec::with_capacity(w);
+    let mut l = Vec::with_capacity(w);
+    let mut row = 0usize;
+    for p in parts {
+        let p = p.as_ref().expect("chunk computed by the barrier");
+        for i in 0..p.m.len() {
+            o.row_mut(row + i).copy_from_slice(p.o.row(i));
+        }
+        m.extend_from_slice(&p.m);
+        l.extend_from_slice(&p.l);
+        row += p.m.len();
+    }
+    assert_eq!(row, w, "row chunks must tile the span");
+    Partials { o, m, l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::SequentialExecutor;
+    use crate::model::kv_cache::KvCache;
+    use crate::model::weights::Weights;
+    use crate::sparse::CooPattern;
+
+    fn setup() -> (RustModel, KvCache) {
+        let cfg = ModelConfig::test_small();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let cache = KvCache::new(&cfg);
+        (model, cache)
+    }
+
+    fn causal(w: usize) -> CooPattern {
+        CooPattern::causal(w)
+    }
+
+    #[test]
+    fn chunk_bounds_tile_without_empties() {
+        assert_eq!(chunk_bounds(0, 0, 4), vec![]);
+        assert_eq!(chunk_bounds(0, 3, 8), vec![(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(chunk_bounds(2, 10, 3), vec![(2, 5), (5, 8), (8, 10)]);
+        for (lo, hi, parts) in [(0usize, 17usize, 4usize), (3, 64, 5), (0, 1, 1)] {
+            let chunks = chunk_bounds(lo, hi, parts);
+            assert_eq!(chunks[0].0, lo);
+            assert_eq!(chunks.last().unwrap().1, hi);
+            assert!(chunks.windows(2).all(|w| w[0].1 == w[1].0));
+            assert!(chunks.iter().all(|c| c.0 < c.1));
+        }
+    }
+
+    #[test]
+    fn parallel_step_is_bitwise_identical_across_plans_and_pools() {
+        let (model, mut cache) = setup();
+        // commit a few tokens so the dense span is non-empty
+        let o = model.decode_step(&[3, 7, 1], &[0, 1, 2], &causal(3), &cache);
+        cache.commit_prefix(&o.k_new, &o.v_new, 3, 3);
+
+        let parents = [usize::MAX, 0, 0, 1, 1];
+        let pattern = CooPattern::from_tree(&parents);
+        let tokens: [u32; 5] = [9, 4, 2, 8, 6];
+        let pos = [3usize, 4, 4, 5, 5];
+        let seg = SegmentInput { tokens: &tokens, pos: &pos, pattern: &pattern, cache: &cache };
+
+        let mut seq = SequentialExecutor::new();
+        let want = seq.forward(&model, std::slice::from_ref(&seg));
+
+        for ratio in [0.0, 0.35, 0.5, 1.0] {
+            for (wt, nt) in [(1usize, 1usize), (3, 2), (2, 4)] {
+                let mut par =
+                    HcmpParallelExecutor::new(&PartitionPlan::hcmp(ratio), wt, nt).unwrap();
+                let got = par.forward(&model, std::slice::from_ref(&seg));
+                assert_eq!(got.len(), want.len());
+                assert_eq!(
+                    got[0].logits.data(),
+                    want[0].logits.data(),
+                    "logits diverged (ratio {ratio}, pools {wt}/{nt})"
+                );
+                assert_eq!(got[0].k_new, want[0].k_new, "k_new diverged (ratio {ratio})");
+                assert_eq!(got[0].v_new, want[0].v_new, "v_new diverged (ratio {ratio})");
+                for (a, b) in got[0].medusa_logits.iter().zip(&want[0].medusa_logits) {
+                    assert_eq!(a.data(), b.data(), "medusa diverged (ratio {ratio})");
+                }
+                let t = par.timings();
+                assert_eq!(t.steps, 1);
+                assert!(t.total_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_cache_prefill_step_matches() {
+        let (model, cache) = setup();
+        let pattern = causal(4);
+        let tokens: [u32; 4] = [1, 2, 3, 4];
+        let pos = [0usize, 1, 2, 3];
+        let seg = SegmentInput { tokens: &tokens, pos: &pos, pattern: &pattern, cache: &cache };
+        let mut seq = SequentialExecutor::new();
+        let want = seq.forward(&model, std::slice::from_ref(&seg));
+        let mut par = HcmpParallelExecutor::new(&PartitionPlan::hcmp(0.5), 2, 2).unwrap();
+        let got = par.forward(&model, std::slice::from_ref(&seg));
+        assert_eq!(got[0].logits.data(), want[0].logits.data());
+    }
+
+    #[test]
+    fn megatron_plan_is_rejected() {
+        assert!(HcmpParallelExecutor::new(&PartitionPlan::megatron(0.5), 2, 2).is_err());
+    }
+}

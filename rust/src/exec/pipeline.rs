@@ -1,0 +1,257 @@
+//! The staged op pipeline of one decode step — the forward pass extracted
+//! from `model/forward.rs` into engine-agnostic form.
+//!
+//! [`forward_segments`] owns the *structure* of the step (embedding, norms,
+//! RoPE, residuals, Medusa heads, per-segment output split) and delegates
+//! the two partitionable op classes to a [`ForwardOps`] backend:
+//!
+//! * `linear` — every linear layer (QKV, attn-out, MLP, LM head, Medusa).
+//!   HCMP splits these by output columns (§III-B.1).
+//! * `attention` — the per-layer attention over all segments. HCMP splits
+//!   this by computation affinity (§III-B.2): dense span vs. sparse span.
+//!
+//! Everything outside the backend hooks runs identically for every
+//! executor, so engine parity reduces to the parity of the two hooks — the
+//! property each backend guarantees bitwise.
+
+use crate::model::forward::{rmsnorm, rope_inplace, RustModel, SegmentInput, StepOutput};
+use crate::model::ModelConfig;
+use crate::sparse::{attention_sparse_opt, merge_partials, Partials};
+use crate::tensor::{gemm, Tensor};
+use crate::util::mathx::silu;
+
+/// The op-level backend a step executor plugs into the pipeline.
+pub trait ForwardOps {
+    /// `out = x @ w` — must equal [`gemm`] bitwise.
+    fn linear(&mut self, x: &Tensor, w: &Tensor) -> Tensor;
+
+    /// Per-layer attention over all segments: returns the merged per-head
+    /// outputs `[wt, H*Dh]`. Must equal the sequential reference bitwise.
+    #[allow(clippy::too_many_arguments)]
+    fn attention(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        layer: usize,
+        segs: &[SegmentInput<'_>],
+        offsets: &[usize],
+        widths: &[usize],
+        cfg: &ModelConfig,
+    ) -> Tensor;
+}
+
+/// One decode step over B concatenated segments, staged through `ops`.
+/// This is the op-for-op body of the former
+/// `RustModel::decode_step_segments` (which now delegates here with the
+/// sequential backend).
+pub(crate) fn forward_segments(
+    model: &RustModel,
+    segs: &[SegmentInput<'_>],
+    ops: &mut dyn ForwardOps,
+) -> Vec<StepOutput> {
+    assert!(!segs.is_empty(), "need at least one segment");
+    let cfg = &model.cfg;
+    let (d, hn, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim);
+    let hd = hn * dh;
+
+    let widths: Vec<usize> = segs.iter().map(|s| s.tokens.len()).collect();
+    let mut offsets = Vec::with_capacity(segs.len());
+    let mut wt = 0usize;
+    for (seg, &w) in segs.iter().zip(&widths) {
+        assert_eq!(seg.pos.len(), w);
+        assert_eq!(seg.pattern.n, w);
+        offsets.push(wt);
+        wt += w;
+    }
+
+    // token embedding over the concatenated rows
+    let emb = model.weights.get("tok_emb");
+    let mut x = Tensor::zeros(&[wt, d]);
+    let mut row = 0usize;
+    for seg in segs {
+        for &t in seg.tokens {
+            x.row_mut(row).copy_from_slice(emb.row(t as usize));
+            row += 1;
+        }
+    }
+    let pos_all: Vec<usize> = segs.iter().flat_map(|s| s.pos.iter().copied()).collect();
+
+    let mut k_new = Vec::with_capacity(cfg.n_layers * wt * hd);
+    let mut v_new = Vec::with_capacity(cfg.n_layers * wt * hd);
+
+    for layer in 0..cfg.n_layers {
+        let h = rmsnorm(&x, model.weights.get(&format!("l{layer}_attn_norm")).data());
+        let mut q = ops.linear(&h, model.weights.get(&format!("l{layer}_wq")));
+        let mut k = ops.linear(&h, model.weights.get(&format!("l{layer}_wk")));
+        let v = ops.linear(&h, model.weights.get(&format!("l{layer}_wv")));
+        rope_inplace(&mut q, &pos_all, hn, dh, cfg.rope_base);
+        rope_inplace(&mut k, &pos_all, hn, dh, cfg.rope_base);
+        k_new.extend_from_slice(k.data());
+        v_new.extend_from_slice(v.data());
+
+        let o = ops.attention(&q, &k, &v, layer, segs, &offsets, &widths, cfg);
+        let attn_out = ops.linear(&o, model.weights.get(&format!("l{layer}_wo")));
+        x.add_assign(&attn_out);
+
+        // MLP (SiLU-gated)
+        let h2 = rmsnorm(&x, model.weights.get(&format!("l{layer}_mlp_norm")).data());
+        let mut gate = ops.linear(&h2, model.weights.get(&format!("l{layer}_w_gate")));
+        let up = ops.linear(&h2, model.weights.get(&format!("l{layer}_w_up")));
+        for (g, u) in gate.data_mut().iter_mut().zip(up.data()) {
+            *g = silu(*g) * u;
+        }
+        let down = ops.linear(&gate, model.weights.get(&format!("l{layer}_w_down")));
+        x.add_assign(&down);
+    }
+
+    let xf = rmsnorm(&x, model.weights.get("final_norm").data());
+    let w_lm = model.weights.get("w_lm");
+    let logits = ops.linear(&xf, w_lm);
+    let mut medusa_logits = Vec::with_capacity(cfg.n_medusa);
+    for head in 0..cfg.n_medusa {
+        let wm = model.weights.get(&format!("medusa{head}_w"));
+        let mut res = ops.linear(&xf, wm);
+        for (r, &base) in res.data_mut().iter_mut().zip(xf.data()) {
+            *r = base + silu(*r);
+        }
+        medusa_logits.push(ops.linear(&res, w_lm));
+    }
+
+    // split the concatenated outputs back into per-segment StepOutputs
+    segs.iter()
+        .enumerate()
+        .map(|(si, _)| {
+            let (off, w) = (offsets[si], widths[si]);
+            let seg_logits = logits.rows(off, off + w);
+            let seg_medusa: Vec<Tensor> =
+                medusa_logits.iter().map(|t| t.rows(off, off + w)).collect();
+            let mut sk = Vec::with_capacity(cfg.n_layers * w * hd);
+            let mut sv = Vec::with_capacity(cfg.n_layers * w * hd);
+            for layer in 0..cfg.n_layers {
+                let base = layer * wt * hd + off * hd;
+                sk.extend_from_slice(&k_new[base..base + w * hd]);
+                sv.extend_from_slice(&v_new[base..base + w * hd]);
+            }
+            StepOutput { logits: seg_logits, medusa_logits: seg_medusa, k_new: sk, v_new: sv }
+        })
+        .collect()
+}
+
+/// The single-unit backend: full GEMMs, attention exactly as the original
+/// serial forward computed it.
+pub(crate) struct SequentialOps;
+
+impl ForwardOps for SequentialOps {
+    fn linear(&mut self, x: &Tensor, w: &Tensor) -> Tensor {
+        gemm(x, w)
+    }
+
+    fn attention(
+        &mut self,
+        q: &Tensor,
+        k: &Tensor,
+        v: &Tensor,
+        layer: usize,
+        segs: &[SegmentInput<'_>],
+        offsets: &[usize],
+        widths: &[usize],
+        cfg: &ModelConfig,
+    ) -> Tensor {
+        let (hn, dh) = (cfg.n_heads, cfg.head_dim);
+        let scale = (dh as f32).powf(-0.5);
+        let wt = q.shape()[0];
+        let mut o = Tensor::zeros(&[wt, hn * dh]);
+        // per-head, per-segment attention:
+        // dense span (the segment's KV lane) ⊕ sparse span (its draft)
+        for head in 0..hn {
+            let qh = head_cols(q, head, dh);
+            let kh = head_cols(k, head, dh);
+            let vh = head_cols(v, head, dh);
+            for (si, seg) in segs.iter().enumerate() {
+                let (off, w) = (offsets[si], widths[si]);
+                let qs = qh.rows(off, off + w);
+                let ks = kh.rows(off, off + w);
+                let vs = vh.rows(off, off + w);
+                let kc = seg.cache.k_layer(layer);
+                let vc = seg.cache.v_layer(layer);
+                let dense = dense_span(&qs, kc, vc, seg.cache.len(), head, hn, dh, scale, 0, w);
+                let sparse = attention_sparse_opt(&qs, &ks, &vs, seg.pattern, scale);
+                let merged = if seg.cache.is_empty() {
+                    sparse.o.clone()
+                } else {
+                    merge_partials(&dense, &sparse)
+                };
+                for i in 0..w {
+                    o.row_mut(off + i)[head * dh..(head + 1) * dh]
+                        .copy_from_slice(merged.row(i));
+                }
+            }
+        }
+        o
+    }
+}
+
+/// Extract head columns [W, Dh] from a [W, H*Dh] projection.
+pub(crate) fn head_cols(x: &Tensor, head: usize, dh: usize) -> Tensor {
+    x.cols(head * dh, (head + 1) * dh)
+}
+
+/// Dense-span partials of one head against the committed cache, for query
+/// rows `[lo, hi)` of `q` (pass `0, q.shape()[0]` for the whole block).
+/// kc/vc are flat [C, H, Dh]; only the first `len` positions are valid.
+/// Row-local: every output row depends only on its own query row, so a
+/// row-range call is bitwise identical to the same rows of the full call —
+/// the wide pool shards the span across threads with no per-chunk copies.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dense_span(
+    q: &Tensor,
+    kc: &[f32],
+    vc: &[f32],
+    len: usize,
+    head: usize,
+    hn: usize,
+    dh: usize,
+    scale: f32,
+    lo: usize,
+    hi: usize,
+) -> Partials {
+    assert!(lo <= hi && hi <= q.shape()[0]);
+    let w = hi - lo;
+    let stride = hn * dh;
+    let mut o = Tensor::zeros(&[w, dh]);
+    let mut ms = vec![f32::NEG_INFINITY; w];
+    let mut ls = vec![0.0f32; w];
+    if len == 0 {
+        return Partials { o, m: ms, l: ls };
+    }
+    let mut scores = vec![0.0f32; len];
+    for i in lo..hi {
+        let qrow = q.row(i);
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &kc[j * stride + head * dh..j * stride + (head + 1) * dh];
+            let mut acc = 0.0f32;
+            for d in 0..dh {
+                acc += qrow[d] * krow[d];
+            }
+            *s = acc * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = o.row_mut(i - lo);
+        for (j, p) in scores.iter().enumerate() {
+            let vrow = &vc[j * stride + head * dh..j * stride + (head + 1) * dh];
+            let pw = p / l;
+            for d in 0..dh {
+                orow[d] += pw * vrow[d];
+            }
+        }
+        ms[i - lo] = m;
+        ls[i - lo] = l;
+    }
+    Partials { o, m: ms, l: ls }
+}

@@ -1,0 +1,45 @@
+//! The single-unit executor: the original serial forward pass, re-homed
+//! behind the [`StepExecutor`] trait so it shares the staged pipeline (and
+//! the timing surface) with the HCMP parallel engine.
+
+use std::time::Instant;
+
+use crate::exec::pipeline::{forward_segments, SequentialOps};
+use crate::exec::{ExecTimings, StepExecutor};
+use crate::model::forward::{RustModel, SegmentInput, StepOutput};
+
+#[derive(Default)]
+pub struct SequentialExecutor {
+    steps: u64,
+    total_s: f64,
+}
+
+impl SequentialExecutor {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StepExecutor for SequentialExecutor {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn forward(&mut self, model: &RustModel, segs: &[SegmentInput<'_>]) -> Vec<StepOutput> {
+        let t0 = Instant::now();
+        let out = forward_segments(model, segs, &mut SequentialOps);
+        self.steps += 1;
+        self.total_s += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    fn timings(&self) -> ExecTimings {
+        // single unit: all busy time is the wide unit's
+        ExecTimings {
+            steps: self.steps,
+            total_s: self.total_s,
+            wide_busy_s: self.total_s,
+            narrow_busy_s: 0.0,
+        }
+    }
+}

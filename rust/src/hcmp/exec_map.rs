@@ -1,0 +1,105 @@
+//! Mapping from a cost-model [`PartitionPlan`] to an *executable* shard
+//! plan for the real parallel engine (`exec::HcmpParallelExecutor`).
+//!
+//! The cost model prices fractional splits of everything; the executor
+//! realizes the subset that preserves the bitwise-parity guarantee:
+//!
+//! * `linear_ratio` maps exactly — output columns `[0, ratio*n)` of every
+//!   linear go to the wide-unit pool, the rest to the narrow-unit pool
+//!   (column partitioning never reorders any element's accumulation).
+//! * The attention split maps to pure **affinity**: the whole dense span
+//!   on the wide unit, the whole sparse span on the narrow unit.
+//!   Fractional `dense_gpu_frac` / `sparse_cpu_frac` refinements stay
+//!   simulator-only — executing them would split a span's softmax into a
+//!   different online-softmax merge order and perturb the f32 result.
+//! * Megatron-style plans are **rejected**: they need an all-reduce
+//!   between partial sums, which both changes the math (summation order)
+//!   and is the overhead HCMP exists to avoid; they remain cost-model
+//!   baselines only.
+
+use super::partition::PartitionPlan;
+
+/// Concrete executable realization of a `PartitionPlan`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExecPlan {
+    /// Fraction of every linear's output columns computed by the wide pool.
+    pub linear_ratio: f64,
+    /// Threads in the wide-unit pool (GPU analogue).
+    pub wide_threads: usize,
+    /// Threads in the narrow-unit pool (CPU analogue).
+    pub narrow_threads: usize,
+}
+
+impl ExecPlan {
+    /// Number of output columns (of `n`) the wide unit computes.
+    pub fn wide_cols(&self, n: usize) -> usize {
+        (((n as f64) * self.linear_ratio).round() as usize).min(n)
+    }
+}
+
+/// Map a partition plan onto pools of the given sizes. Errors for plans
+/// this engine cannot execute losslessly (see module docs).
+pub fn plan_to_exec(
+    plan: &PartitionPlan,
+    wide_threads: usize,
+    narrow_threads: usize,
+) -> anyhow::Result<ExecPlan> {
+    anyhow::ensure!(
+        !plan.megatron_style,
+        "Megatron-style plans need an all-reduce and are simulator-only; \
+         use an HCMP column-split plan for real execution"
+    );
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&plan.linear_ratio),
+        "linear_ratio {} outside [0, 1]",
+        plan.linear_ratio
+    );
+    Ok(ExecPlan {
+        linear_ratio: plan.linear_ratio,
+        wide_threads: wide_threads.max(1),
+        narrow_threads: narrow_threads.max(1),
+    })
+}
+
+/// Default pool sizes for this host: roughly two thirds of the cores to
+/// the wide unit, the rest to the narrow unit, one core left for the
+/// driving thread (mirrors the paper's 384-core GPU vs 6-core CPU skew in
+/// spirit, bounded by what a laptop/CI host actually has).
+pub fn auto_pool_sizes() -> (usize, usize) {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let workers = cores.saturating_sub(1).max(2);
+    let wide = (workers * 2 / 3).max(1);
+    let narrow = workers.saturating_sub(wide).max(1);
+    (wide, narrow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hcmp_plan_maps_ratio_exactly() {
+        let p = plan_to_exec(&PartitionPlan::hcmp(0.6), 4, 2).unwrap();
+        assert_eq!(p.linear_ratio, 0.6);
+        assert_eq!((p.wide_threads, p.narrow_threads), (4, 2));
+        assert_eq!(p.wide_cols(100), 60);
+        assert_eq!(p.wide_cols(0), 0);
+    }
+
+    #[test]
+    fn boundary_ratios_cover_all_or_nothing() {
+        let all = plan_to_exec(&PartitionPlan::hcmp(1.0), 1, 1).unwrap();
+        assert_eq!(all.wide_cols(37), 37);
+        let none = plan_to_exec(&PartitionPlan::hcmp(0.0), 1, 1).unwrap();
+        assert_eq!(none.wide_cols(37), 0);
+    }
+
+    #[test]
+    fn megatron_rejected_pools_clamped() {
+        assert!(plan_to_exec(&PartitionPlan::megatron(0.5), 2, 2).is_err());
+        let p = plan_to_exec(&PartitionPlan::hcmp(0.5), 0, 0).unwrap();
+        assert_eq!((p.wide_threads, p.narrow_threads), (1, 1));
+        let (w, n) = auto_pool_sizes();
+        assert!(w >= 1 && n >= 1);
+    }
+}

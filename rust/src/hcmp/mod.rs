@@ -7,14 +7,22 @@
 //! The math behind the schedules runs for real elsewhere (`model::forward`,
 //! `runtime::Runtime`); the simulator prices paper-scale (Vicuna-7B)
 //! configurations that cannot be materialized on this host.
+//!
+//! A `PartitionPlan` is additionally *executable*: `exec_map` maps it onto
+//! the real hetero-core parallel engine (`exec::HcmpParallelExecutor`),
+//! whose measured per-unit busy times (`exec::ExecTimings`) are directly
+//! comparable to the simulator's `SimReport` — `bench measured` prints the
+//! two side by side.
 
 pub mod cost;
+pub mod exec_map;
 pub mod partition;
 pub mod schedule;
 pub mod simulator;
 pub mod unit;
 
 pub use cost::Op;
+pub use exec_map::{auto_pool_sizes, plan_to_exec, ExecPlan};
 pub use partition::{AttentionSplit, PartitionPlan};
 pub use schedule::{build_batched_step, build_step, EngineKind, StepSchedule};
 pub use simulator::{SimReport, Simulator};

@@ -17,6 +17,7 @@
 pub mod arca;
 pub mod bench;
 pub mod coordinator;
+pub mod exec;
 pub mod hcmp;
 pub mod model;
 pub mod runtime;

@@ -1,10 +1,10 @@
 //! Ghidorah CLI — the Layer-3 leader entrypoint.
 //!
 //! Subcommands:
-//!   serve   [--addr HOST:PORT] [--width W]        start the TCP server
+//!   serve   [--addr HOST:PORT] [--width W] [--parallel hcmp[:R]|seq]  start the TCP server
 //!   generate --prompt TEXT [--max-new N] [--engine seq|ghidorah]
 //!   arca    [--dataset NAME] [--ctx N]            run the ARCA preprocessing pass
-//!   bench   table1|fig9|fig10a|fig10b             regenerate a paper artifact
+//!   bench   table1|fig9|fig10a|fig10b|measured    regenerate a paper artifact
 //!   info                                          artifact + model summary
 
 use std::collections::BTreeMap;
@@ -14,7 +14,11 @@ use ghidorah::arca::profiler::profile;
 use ghidorah::arca::tree_builder::build_tree;
 use ghidorah::bench;
 use ghidorah::coordinator::{EngineChoice, Request, Scheduler, Server};
+use ghidorah::exec::ExecEngine;
 use ghidorah::hcmp::simulator::Simulator;
+use ghidorah::hcmp::{auto_pool_sizes, PartitionPlan};
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::weights::Weights;
 use ghidorah::model::ModelConfig;
 use ghidorah::runtime::{Artifacts, Runtime};
 use ghidorah::spec::tree::VerificationTree;
@@ -46,10 +50,18 @@ fn usage() -> ! {
 
 USAGE:
   ghidorah serve    [--addr 127.0.0.1:7331] [--width 16] [--topk 4] [--batch 8]
+                    [--parallel hcmp[:RATIO]|seq] [--wide N] [--narrow M]
   ghidorah generate --prompt TEXT [--max-new 32] [--engine ghidorah|sequential] [--width 16]
+                    [--parallel hcmp[:RATIO]|seq] [--wide N] [--narrow M]
   ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256]
-  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|all
-  ghidorah info",
+  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|all
+  ghidorah info
+
+  --parallel selects the pure-Rust execution engine: `hcmp[:RATIO]` runs the
+  HCMP plan (wide-unit column ratio RATIO, default 0.5) concurrently on two
+  worker pools sized --wide/--narrow (default: derived from the core count);
+  `seq` runs the single-threaded engine. Without --parallel the PJRT/AOT
+  runtime serves (requires the `pjrt` feature + artifacts).",
         ghidorah::version()
     );
     std::process::exit(2);
@@ -89,6 +101,86 @@ fn load_cfg() -> anyhow::Result<ModelConfig> {
     Ok(Artifacts::load(&dir)?.cfg)
 }
 
+/// Config for the pure-Rust `--parallel` engines: artifact config when
+/// built, otherwise the tiny model (matching the seeded-random-weights
+/// fallback) so the parallel path is exercisable on a fresh checkout.
+fn load_cfg_or_tiny() -> ModelConfig {
+    match load_cfg() {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("ghidorah: {e:#}; using the tiny built-in model config");
+            ModelConfig::tiny()
+        }
+    }
+}
+
+/// Which pure-Rust executor `--parallel` selects (None = PJRT runtime).
+#[derive(Clone, Copy, Debug)]
+enum ParallelMode {
+    Seq,
+    Hcmp(PartitionPlan),
+}
+
+fn parse_parallel(flags: &BTreeMap<String, String>) -> anyhow::Result<Option<ParallelMode>> {
+    let Some(s) = flags.get("parallel") else { return Ok(None) };
+    match s.as_str() {
+        "seq" | "sequential" => Ok(Some(ParallelMode::Seq)),
+        "hcmp" | "true" => Ok(Some(ParallelMode::Hcmp(PartitionPlan::hcmp(0.5)))),
+        other => {
+            let ratio = other
+                .strip_prefix("hcmp:")
+                .and_then(|r| r.parse::<f64>().ok())
+                .filter(|r| (0.0..=1.0).contains(r))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("bad --parallel '{other}' (want hcmp, hcmp:RATIO, or seq)")
+                })?;
+            Ok(Some(ParallelMode::Hcmp(PartitionPlan::hcmp(ratio))))
+        }
+    }
+}
+
+/// Pool sizes from --wide/--narrow, defaulting to the host-derived split.
+fn pool_sizes(flags: &BTreeMap<String, String>) -> anyhow::Result<(usize, usize)> {
+    let (auto_w, auto_n) = auto_pool_sizes();
+    let wide = flags.get("wide").map(|s| s.parse()).transpose()?.unwrap_or(auto_w);
+    let narrow = flags.get("narrow").map(|s| s.parse()).transpose()?.unwrap_or(auto_n);
+    Ok((wide.max(1), narrow.max(1)))
+}
+
+/// Build the factory for a pure-Rust engine: artifact weights when loadable
+/// (needs the `pjrt` feature's npz reader), otherwise deterministic seeded
+/// weights so the engine stays usable on an offline build.
+fn rust_engine_factory(
+    cfg: ModelConfig,
+    mode: ParallelMode,
+    wide: usize,
+    narrow: usize,
+) -> impl FnOnce() -> anyhow::Result<ExecEngine> + Send + 'static {
+    move || {
+        let weights_path = Artifacts::default_dir().join("weights.npz");
+        let weights = match Weights::load_npz(&weights_path, &cfg) {
+            Ok(w) => w,
+            Err(e) => {
+                eprintln!(
+                    "ghidorah: weights.npz unavailable ({e:#}); using seeded random weights"
+                );
+                Weights::random(&cfg, 42)
+            }
+        };
+        let model = RustModel::new(cfg, weights);
+        match mode {
+            ParallelMode::Seq => Ok(ExecEngine::sequential(model)),
+            ParallelMode::Hcmp(plan) => {
+                eprintln!(
+                    "ghidorah: HCMP parallel engine (ratio {:.2}, pools {wide}+{narrow})",
+                    plan.linear_ratio
+                );
+                ExecEngine::parallel(model, &plan, wide, narrow)
+            }
+        }
+    }
+}
+
 fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let addr = flags.get("addr").cloned().unwrap_or_else(|| "127.0.0.1:7331".into());
     let width: usize = flags.get("width").map(|s| s.parse()).transpose()?.unwrap_or(16);
@@ -99,7 +191,11 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(ghidorah::coordinator::DEFAULT_MAX_BATCH);
 
-    let cfg = load_cfg()?;
+    let parallel = parse_parallel(flags)?;
+    let cfg = match parallel {
+        Some(_) => load_cfg_or_tiny(),
+        None => load_cfg()?,
+    };
     let tree = serving_tree(&cfg, width);
     eprintln!(
         "ghidorah: model d={} L={} medusa={} | ARCA tree width {} depth {} | max batch {}",
@@ -110,14 +206,29 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         tree.max_depth(),
         max_batch
     );
-    let sched = Scheduler::spawn_with(
-        move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]),
-        tree,
-        64,
-        top_k,
-        max_batch,
-    );
-    let server = Server::new(sched, 8);
+    let sched = match parallel {
+        Some(mode) => {
+            let (wide, narrow) = pool_sizes(flags)?;
+            Scheduler::spawn_with(
+                rust_engine_factory(cfg, mode, wide, narrow),
+                tree,
+                64,
+                top_k,
+                max_batch,
+            )
+        }
+        None => Scheduler::spawn_with(
+            move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]),
+            tree,
+            64,
+            top_k,
+            max_batch,
+        ),
+    };
+    // connection handlers hold their thread while blocked in submit(), so
+    // the pool must cover the full batch or occupancy silently caps below
+    // --batch
+    let server = Server::new(sched, max_batch.max(8));
     server.serve(&addr, |a| eprintln!("ghidorah: listening on {a}"))?;
     eprintln!("ghidorah: shutdown");
     Ok(())
@@ -133,9 +244,24 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(EngineChoice::Ghidorah);
 
-    let cfg = load_cfg()?;
+    let parallel = parse_parallel(flags)?;
+    let cfg = match parallel {
+        Some(_) => load_cfg_or_tiny(),
+        None => load_cfg()?,
+    };
     let tree = serving_tree(&cfg, width);
-    let sched = Scheduler::spawn(move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]), tree, 64, 4);
+    let sched = match parallel {
+        Some(mode) => {
+            let (wide, narrow) = pool_sizes(flags)?;
+            Scheduler::spawn(rust_engine_factory(cfg, mode, wide, narrow), tree, 64, 4)
+        }
+        None => Scheduler::spawn(
+            move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]),
+            tree,
+            64,
+            4,
+        ),
+    };
     let resp = sched
         .submit(Request { id: 0, prompt, max_new, engine })
         .map_err(|e| anyhow::anyhow!(e))?;
@@ -172,7 +298,7 @@ fn cmd_arca(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let mut t = bench::TablePrinter::new(&["width", "E[acc]", "step (ms)", "tok/s", "gpu ratio"]);
     for r in &out.rows {
         t.row(vec![
-            format!("{}", r.width),
+            r.width.to_string(),
             format!("{:.2}", r.expected_acceptance),
             format!("{:.1}", r.step_time * 1e3),
             format!("{:.2}", r.throughput),
@@ -202,12 +328,17 @@ fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()
             println!("{}", bench::fig10b(reps).text);
         }
         "ablation" => println!("{}", bench::ablation().text),
+        "measured" => {
+            let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(20);
+            println!("{}", bench::measured(reps).text);
+        }
         "all" => {
             println!("{}", bench::table1(200_000, false).text);
             println!("{}", bench::fig9(256).text);
             println!("{}", bench::fig10a().text);
             println!("{}", bench::fig10b(200).text);
             println!("{}", bench::ablation().text);
+            println!("{}", bench::measured(20).text);
         }
         _ => usage(),
     }

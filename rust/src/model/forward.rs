@@ -18,13 +18,18 @@
 //! attention (which is segment-local), the batched outputs are **bitwise
 //! identical** to running each sequence alone; the golden-trace parity
 //! tests rely on this.
+//!
+//! The step *body* lives in `exec::pipeline` as a staged op pipeline;
+//! `RustModel` drives it with the single-unit backend, the HCMP parallel
+//! engine (`exec::HcmpParallelExecutor`) drives the same pipeline across
+//! two worker pools. Both paths are bitwise identical by construction.
 
 use super::kv_cache::KvCache;
 use super::weights::Weights;
 use super::ModelConfig;
-use crate::sparse::{attention_sparse_opt, merge_partials, CooPattern, Partials};
-use crate::tensor::{gemm, Tensor};
-use crate::util::mathx::silu;
+use crate::exec::pipeline::{forward_segments, SequentialOps};
+use crate::sparse::CooPattern;
+use crate::tensor::Tensor;
 
 /// Outputs of one decode step of width W.
 #[derive(Clone, Debug)]
@@ -77,120 +82,11 @@ impl RustModel {
     /// Linears run once over all rows; attention is per-segment against each
     /// segment's own KV lane and pattern. Returns one `StepOutput` per
     /// segment, bitwise identical to decoding each segment alone.
+    ///
+    /// Runs the staged pipeline with the single-unit backend; see
+    /// `exec::pipeline::forward_segments` for the step body.
     pub fn decode_step_segments(&self, segs: &[SegmentInput<'_>]) -> Vec<StepOutput> {
-        assert!(!segs.is_empty(), "need at least one segment");
-        let cfg = &self.cfg;
-        let (d, hn, dh) = (cfg.d_model, cfg.n_heads, cfg.head_dim);
-        let hd = hn * dh;
-        let scale = (dh as f32).powf(-0.5);
-
-        let widths: Vec<usize> = segs.iter().map(|s| s.tokens.len()).collect();
-        let mut offsets = Vec::with_capacity(segs.len());
-        let mut wt = 0usize;
-        for (seg, &w) in segs.iter().zip(&widths) {
-            assert_eq!(seg.pos.len(), w);
-            assert_eq!(seg.pattern.n, w);
-            offsets.push(wt);
-            wt += w;
-        }
-
-        // token embedding over the concatenated rows
-        let emb = self.weights.get("tok_emb");
-        let mut x = Tensor::zeros(&[wt, d]);
-        let mut row = 0usize;
-        for seg in segs {
-            for &t in seg.tokens {
-                x.row_mut(row).copy_from_slice(emb.row(t as usize));
-                row += 1;
-            }
-        }
-        let pos_all: Vec<usize> = segs.iter().flat_map(|s| s.pos.iter().copied()).collect();
-
-        let mut k_new = Vec::with_capacity(cfg.n_layers * wt * hd);
-        let mut v_new = Vec::with_capacity(cfg.n_layers * wt * hd);
-
-        for layer in 0..cfg.n_layers {
-            let h = rmsnorm(&x, self.weights.get(&format!("l{layer}_attn_norm")).data());
-            let mut q = gemm(&h, self.weights.get(&format!("l{layer}_wq")));
-            let mut k = gemm(&h, self.weights.get(&format!("l{layer}_wk")));
-            let v = gemm(&h, self.weights.get(&format!("l{layer}_wv")));
-            rope_inplace(&mut q, &pos_all, hn, dh, cfg.rope_base);
-            rope_inplace(&mut k, &pos_all, hn, dh, cfg.rope_base);
-            k_new.extend_from_slice(k.data());
-            v_new.extend_from_slice(v.data());
-
-            // per-head, per-segment attention:
-            // dense span (the segment's KV lane) ⊕ sparse span (its draft)
-            let mut o = Tensor::zeros(&[wt, hd]);
-            for head in 0..hn {
-                let qh = head_cols(&q, head, dh);
-                let kh = head_cols(&k, head, dh);
-                let vh = head_cols(&v, head, dh);
-                for (si, seg) in segs.iter().enumerate() {
-                    let (off, w) = (offsets[si], widths[si]);
-                    let qs = qh.rows(off, off + w);
-                    let ks = kh.rows(off, off + w);
-                    let vs = vh.rows(off, off + w);
-                    let kc = seg.cache.k_layer(layer);
-                    let vc = seg.cache.v_layer(layer);
-                    let dense = dense_span(&qs, kc, vc, seg.cache.len(), head, hn, dh, scale);
-                    let sparse = attention_sparse_opt(&qs, &ks, &vs, seg.pattern, scale);
-                    let merged = if seg.cache.len() == 0 {
-                        sparse.o.clone()
-                    } else {
-                        merge_partials(&dense, &sparse)
-                    };
-                    for i in 0..w {
-                        o.row_mut(off + i)[head * dh..(head + 1) * dh]
-                            .copy_from_slice(merged.row(i));
-                    }
-                }
-            }
-            let attn_out = gemm(&o, self.weights.get(&format!("l{layer}_wo")));
-            x.add_assign(&attn_out);
-
-            // MLP (SiLU-gated)
-            let h2 = rmsnorm(&x, self.weights.get(&format!("l{layer}_mlp_norm")).data());
-            let mut gate = gemm(&h2, self.weights.get(&format!("l{layer}_w_gate")));
-            let up = gemm(&h2, self.weights.get(&format!("l{layer}_w_up")));
-            for (g, u) in gate.data_mut().iter_mut().zip(up.data()) {
-                *g = silu(*g) * u;
-            }
-            let down = gemm(&gate, self.weights.get(&format!("l{layer}_w_down")));
-            x.add_assign(&down);
-        }
-
-        let xf = rmsnorm(&x, self.weights.get("final_norm").data());
-        let w_lm = self.weights.get("w_lm");
-        let logits = gemm(&xf, w_lm);
-        let mut medusa_logits = Vec::with_capacity(cfg.n_medusa);
-        for head in 0..cfg.n_medusa {
-            let wm = self.weights.get(&format!("medusa{head}_w"));
-            let mut res = gemm(&xf, wm);
-            for (r, &base) in res.data_mut().iter_mut().zip(xf.data()) {
-                *r = base + silu(*r);
-            }
-            medusa_logits.push(gemm(&res, w_lm));
-        }
-
-        // split the concatenated outputs back into per-segment StepOutputs
-        segs.iter()
-            .enumerate()
-            .map(|(si, _)| {
-                let (off, w) = (offsets[si], widths[si]);
-                let seg_logits = logits.rows(off, off + w);
-                let seg_medusa: Vec<Tensor> =
-                    medusa_logits.iter().map(|t| t.rows(off, off + w)).collect();
-                let mut sk = Vec::with_capacity(cfg.n_layers * w * hd);
-                let mut sv = Vec::with_capacity(cfg.n_layers * w * hd);
-                for layer in 0..cfg.n_layers {
-                    let base = layer * wt * hd + off * hd;
-                    sk.extend_from_slice(&k_new[base..base + w * hd]);
-                    sv.extend_from_slice(&v_new[base..base + w * hd]);
-                }
-                StepOutput { logits: seg_logits, medusa_logits: seg_medusa, k_new: sk, v_new: sv }
-            })
-            .collect()
+        forward_segments(self, segs, &mut SequentialOps)
     }
 }
 
@@ -231,72 +127,13 @@ pub fn rope_inplace(x: &mut Tensor, pos: &[usize], hn: usize, dh: usize, base: f
     }
 }
 
-/// Extract head columns [W, Dh] from a [W, H*Dh] projection.
-fn head_cols(x: &Tensor, head: usize, dh: usize) -> Tensor {
-    x.cols(head * dh, (head + 1) * dh)
-}
-
-/// Dense-span partials of one head against the committed cache.
-/// kc/vc are flat [C, H, Dh]; only the first `len` positions are valid.
-#[allow(clippy::too_many_arguments)]
-fn dense_span(
-    q: &Tensor,
-    kc: &[f32],
-    vc: &[f32],
-    len: usize,
-    head: usize,
-    hn: usize,
-    dh: usize,
-    scale: f32,
-) -> Partials {
-    let w = q.shape()[0];
-    let stride = hn * dh;
-    let mut o = Tensor::zeros(&[w, dh]);
-    let mut ms = vec![f32::NEG_INFINITY; w];
-    let mut ls = vec![0.0f32; w];
-    if len == 0 {
-        return Partials { o, m: ms, l: ls };
-    }
-    let mut scores = vec![0.0f32; len];
-    for i in 0..w {
-        let qrow = q.row(i);
-        for (j, s) in scores.iter_mut().enumerate() {
-            let krow = &kc[j * stride + head * dh..j * stride + (head + 1) * dh];
-            let mut acc = 0.0f32;
-            for d in 0..dh {
-                acc += qrow[d] * krow[d];
-            }
-            *s = acc * scale;
-        }
-        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut l = 0.0f32;
-        for s in scores.iter_mut() {
-            *s = (*s - m).exp();
-            l += *s;
-        }
-        let orow = o.row_mut(i);
-        for (j, p) in scores.iter().enumerate() {
-            let vrow = &vc[j * stride + head * dh..j * stride + (head + 1) * dh];
-            let pw = p / l;
-            for d in 0..dh {
-                orow[d] += pw * vrow[d];
-            }
-        }
-        ms[i] = m;
-        ls[i] = l;
-    }
-    Partials { o, m: ms, l: ls }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::mathx::allclose;
 
     fn causal_pattern(w: usize) -> CooPattern {
-        let parents: Vec<usize> =
-            (0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect();
-        CooPattern::from_tree(&parents)
+        CooPattern::causal(w)
     }
 
     fn setup() -> (ModelConfig, RustModel, KvCache) {

@@ -43,6 +43,15 @@ impl CooPattern {
         Self { rows, cols, n, row_ptr }
     }
 
+    /// The causal (lower-triangular) pattern of a width-`n` chain — what a
+    /// prefill chunk uses. One constructor instead of five hand-rolled
+    /// chain-parent vectors scattered across callers.
+    pub fn causal(n: usize) -> Self {
+        let parents: Vec<usize> =
+            (0..n).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect();
+        Self::from_tree(&parents)
+    }
+
     /// Build from an explicit boolean mask [n, n] (row-major).
     pub fn from_mask(mask: &[bool], n: usize) -> Self {
         assert_eq!(mask.len(), n * n);

@@ -22,7 +22,7 @@ mod spmm_opt;
 pub use coo::CooPattern;
 pub use dense_ref::{attention_dense_masked, qkt_dense_masked, softmax_masked_rows, av_dense};
 pub use spmm_naive::{qkt_coo_naive, av_coo_naive};
-pub use spmm_opt::{qkt_coo_opt, av_coo_opt, attention_sparse_opt};
+pub use spmm_opt::{qkt_coo_opt, av_coo_opt, attention_sparse_opt, attention_sparse_opt_rows};
 
 use crate::tensor::Tensor;
 

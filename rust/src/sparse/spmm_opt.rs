@@ -129,6 +129,98 @@ pub fn attention_sparse_opt(
     Partials { o, m: ms, l: ls }
 }
 
+/// Sparse-span attention partials for query rows `[lo, hi)` only — the
+/// row-range-parallel form of [`attention_sparse_opt`]. Every computation
+/// (entry dot products, per-row softmax, per-row blocked AV accumulation)
+/// is row-local and uses the exact same kernels/op order as the full pass,
+/// so the returned rows are **bitwise identical** to rows `lo..hi` of
+/// `attention_sparse_opt`. The HCMP narrow-unit pool shards the draft span
+/// across its worker threads with this.
+pub fn attention_sparse_opt_rows(
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    pattern: &CooPattern,
+    scale: f32,
+    lo: usize,
+    hi: usize,
+) -> Partials {
+    assert!(lo <= hi && hi <= pattern.n, "bad row range [{lo}, {hi}) of {}", pattern.n);
+    let dh = q.shape()[1];
+    assert_eq!(k.shape()[1], dh);
+    assert_eq!(v.shape()[1], dh);
+    let w = hi - lo;
+    let e0 = pattern.row_ptr[lo] as usize;
+    let e1 = pattern.row_ptr[hi] as usize;
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+
+    // sparse QKᵀ over the range's entries (same dot4 kernel as the full pass)
+    let mut s = vec![0.0f32; e1 - e0];
+    for i in lo..hi {
+        let qrow = &qd[i * dh..(i + 1) * dh];
+        let (rlo, rhi) = (pattern.row_ptr[i] as usize, pattern.row_ptr[i + 1] as usize);
+        for e in rlo..rhi {
+            let j = pattern.cols[e] as usize;
+            s[e - e0] = dot4(qrow, &kd[j * dh..(j + 1) * dh]) * scale;
+        }
+    }
+
+    // per-row masked softmax, same op order as the full pass
+    let mut ms = vec![0.0f32; w];
+    let mut ls = vec![0.0f32; w];
+    for i in lo..hi {
+        let (rlo, rhi) =
+            (pattern.row_ptr[i] as usize - e0, pattern.row_ptr[i + 1] as usize - e0);
+        let row = &mut s[rlo..rhi];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            l += *x;
+        }
+        let inv = 1.0 / l;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+        ms[i - lo] = m;
+        ls[i - lo] = l;
+    }
+
+    // AV with the same blocked, 4-unrolled accumulation as `av_coo_opt`
+    let mut o = Tensor::zeros(&[w, dh]);
+    let od = o.data_mut();
+    let mut d0 = 0;
+    while d0 < dh {
+        let blk = BLK.min(dh - d0);
+        for i in lo..hi {
+            let (rlo, rhi) = (pattern.row_ptr[i] as usize, pattern.row_ptr[i + 1] as usize);
+            let mut acc = [0.0f32; BLK];
+            for e in rlo..rhi {
+                let j = pattern.cols[e] as usize;
+                let a = s[e - e0];
+                let vrow = &vd[j * dh + d0..j * dh + d0 + blk];
+                let mut d = 0;
+                let b4 = blk / 4 * 4;
+                while d < b4 {
+                    acc[d] += a * vrow[d];
+                    acc[d + 1] += a * vrow[d + 1];
+                    acc[d + 2] += a * vrow[d + 2];
+                    acc[d + 3] += a * vrow[d + 3];
+                    d += 4;
+                }
+                while d < blk {
+                    acc[d] += a * vrow[d];
+                    d += 1;
+                }
+            }
+            let out_row = (i - lo) * dh + d0;
+            od[out_row..out_row + blk].copy_from_slice(&acc[..blk]);
+        }
+        d0 += blk;
+    }
+    Partials { o, m: ms, l: ls }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,6 +276,30 @@ mod tests {
             assert!((sp.m[i] - de.m[i]).abs() < 1e-4);
             // dense l includes ~0 contributions from masked lanes
             assert!((sp.l[i] - de.l[i]).abs() / de.l[i] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn row_ranges_are_bitwise_identical_to_full_pass() {
+        let mut rng = Rng::new(34);
+        let parents = [usize::MAX, 0, 0, 1, 2, 2, 3, 6, 4, 8];
+        let pat = CooPattern::from_tree(&parents);
+        let w = parents.len();
+        for dh in [8usize, 33, 70] {
+            let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+            let k = Tensor::randn(&[w, dh], 1.0, &mut rng);
+            let v = Tensor::randn(&[w, dh], 1.0, &mut rng);
+            let scale = (dh as f32).powf(-0.5);
+            let full = attention_sparse_opt(&q, &k, &v, &pat, scale);
+            for bounds in [vec![0usize, w], vec![0, 3, w], vec![0, 1, 2, 5, 9, w]] {
+                for r in bounds.windows(2) {
+                    let part = attention_sparse_opt_rows(&q, &k, &v, &pat, scale, r[0], r[1]);
+                    for (i, row) in (r[0]..r[1]).enumerate() {
+                        assert_eq!(part.o.row(i), full.o.row(row), "o row {row} (dh {dh})");
+                        assert!(part.m[i] == full.m[row] && part.l[i] == full.l[row]);
+                    }
+                }
+            }
         }
     }
 

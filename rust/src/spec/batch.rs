@@ -57,6 +57,13 @@ pub trait BatchedStepExecutor {
     /// Decode all sequences' segments in one step; returns one output per
     /// input, in order.
     fn decode_batch(&mut self, seqs: &[SeqStepInput<'_>]) -> anyhow::Result<Vec<StepOutput>>;
+    /// Cumulative measured per-unit busy time `(wide, narrow)` in
+    /// occupancy-seconds, for engines instrumented with hetero-core worker
+    /// pools (`exec::ExecEngine`); `None` for uninstrumented engines. The
+    /// scheduler turns deltas of this into the `stats` per-unit counters.
+    fn unit_busy(&self) -> Option<(f64, f64)> {
+        None
+    }
 }
 
 impl BatchedStepExecutor for RustModel {
@@ -124,8 +131,7 @@ fn finish(s: Seq) -> FinishedSeq {
 }
 
 fn causal_pattern(w: usize) -> CooPattern {
-    let parents: Vec<usize> = (0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect();
-    CooPattern::from_tree(&parents)
+    CooPattern::causal(w)
 }
 
 /// The continuous-batching decode state machine (see module docs for the

@@ -105,9 +105,7 @@ impl<'a, E: StepExecutor> SpeculativeController<'a, E> {
             let mut toks: Vec<u32> = prompt[off..off + n].to_vec();
             toks.resize(w, *toks.last().unwrap());
             let pos: Vec<usize> = (0..w).map(|i| cache.len() + i).collect();
-            let pattern = CooPattern::from_tree(
-                &(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>(),
-            );
+            let pattern = CooPattern::causal(w);
             let out = self.exec.decode(&toks, &pos, &pattern, cache)?;
             cache.commit_prefix(&out.k_new, &out.v_new, w, n);
             let row = out.logits.row(n - 1).to_vec();

@@ -138,11 +138,15 @@ pub(crate) fn axpy(av: f32, brow: &[f32], crow: &mut [f32]) {
     }
 }
 
+/// k-blocking used by every GEMM variant. The sharded kernels must share
+/// this value with `gemm_into`: identical per-element accumulation order is
+/// what makes column shards bitwise-identical to the full GEMM.
+const KB: usize = 64;
+
 /// Row-major blocked GEMM into a preallocated C (zero-initialized by caller).
 pub(crate) fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     // i-k-j loop order: B and C rows are walked contiguously; the axpy inner
     // loop vectorizes. Block over k to keep B panel in cache for larger mats.
-    const KB: usize = 64;
     for k0 in (0..k).step_by(KB) {
         let k1 = (k0 + KB).min(k);
         for i in 0..m {
@@ -152,6 +156,68 @@ pub(crate) fn gemm_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize,
                 let av = arow[p];
                 if av != 0.0 {
                     axpy(av, &b[p * n..(p + 1) * n], crow);
+                }
+            }
+        }
+    }
+}
+
+/// Split a row-major `[m, n]` buffer into per-row column shards at
+/// `bounds` (ascending, `bounds[0] == 0`, last == `n`): `result[s][i]` is
+/// row `i`'s `[bounds[s], bounds[s+1])` slice. This is the zero-copy HCMP
+/// output view — every unit writes its own disjoint column region of the
+/// *same* activation buffer, no merge pass and no extra allocation.
+pub fn split_cols_mut<'a>(
+    c: &'a mut [f32],
+    m: usize,
+    n: usize,
+    bounds: &[usize],
+) -> Vec<Vec<&'a mut [f32]>> {
+    assert_eq!(c.len(), m * n, "buffer/shape mismatch");
+    assert!(bounds.len() >= 2, "need at least one shard");
+    assert_eq!(bounds[0], 0);
+    assert_eq!(*bounds.last().unwrap(), n);
+    assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must be strictly ascending");
+    let shards = bounds.len() - 1;
+    let mut out: Vec<Vec<&'a mut [f32]>> = (0..shards).map(|_| Vec::with_capacity(m)).collect();
+    for row in c.chunks_exact_mut(n) {
+        let mut rest = row;
+        for (shard, w) in out.iter_mut().zip(bounds.windows(2)) {
+            let (head, tail) = rest.split_at_mut(w[1] - w[0]);
+            shard.push(head);
+            rest = tail;
+        }
+    }
+    out
+}
+
+/// Compute the output-column shard `C[:, lo..hi)` of `C = A @ B` into
+/// per-row destination slices (`rows[i]` is row `i`'s `[lo, hi)` slice,
+/// e.g. from [`split_cols_mut`]). Per-element accumulation order matches
+/// [`gemm`] exactly (same k-blocking, ascending k, same zero-skip), so a
+/// column-partitioned result is **bitwise identical** to the unsharded
+/// GEMM — the §III-B.1 column split executed for real, with no all-reduce.
+pub fn gemm_into_cols(
+    a: &[f32],
+    b: &[f32],
+    rows: &mut [&mut [f32]],
+    k: usize,
+    n_full: usize,
+    lo: usize,
+    hi: usize,
+) {
+    assert!(lo < hi && hi <= n_full, "bad column shard [{lo}, {hi}) of {n_full}");
+    let m = rows.len();
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n_full, "B shape mismatch");
+    for k0 in (0..k).step_by(KB) {
+        let k1 = (k0 + KB).min(k);
+        for (i, crow) in rows.iter_mut().enumerate() {
+            debug_assert_eq!(crow.len(), hi - lo);
+            let arow = &a[i * k..(i + 1) * k];
+            for (p, &av) in arow.iter().enumerate().take(k1).skip(k0) {
+                if av != 0.0 {
+                    axpy(av, &b[p * n_full + lo..p * n_full + hi], crow);
                 }
             }
         }
@@ -218,6 +284,46 @@ mod tests {
         let joined = Tensor::concat_cols(&[&left, &right]);
         for (x, y) in joined.data().iter().zip(full.data()) {
             assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn sharded_gemm_is_bitwise_identical() {
+        let mut rng = Rng::new(21);
+        for (m, k, n, bounds) in [
+            (4usize, 130usize, 20usize, vec![0usize, 7, 20]),
+            (1, 3, 5, vec![0, 5]),
+            (9, 64, 33, vec![0, 1, 2, 16, 33]),
+            (3, 65, 8, vec![0, 4, 8]),
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let full = gemm(&a, &b);
+            let mut c = Tensor::zeros(&[m, n]);
+            let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+            for (mut rows, w) in shards.into_iter().zip(bounds.windows(2)) {
+                gemm_into_cols(a.data(), b.data(), &mut rows, k, n, w[0], w[1]);
+            }
+            assert_eq!(c.data(), full.data(), "({m},{k},{n}) shards {bounds:?} not bitwise");
+        }
+    }
+
+    #[test]
+    fn split_cols_mut_views_are_disjoint_and_complete() {
+        let mut buf = vec![0.0f32; 3 * 6];
+        let shards = split_cols_mut(&mut buf, 3, 6, &[0, 2, 6]);
+        assert_eq!(shards.len(), 2);
+        for (s, rows) in shards.into_iter().enumerate() {
+            assert_eq!(rows.len(), 3);
+            for row in rows {
+                for x in row.iter_mut() {
+                    *x = s as f32 + 1.0;
+                }
+            }
+        }
+        let want = [1.0f32, 1.0, 2.0, 2.0, 2.0, 2.0];
+        for r in 0..3 {
+            assert_eq!(&buf[r * 6..(r + 1) * 6], &want);
         }
     }
 

@@ -8,7 +8,7 @@
 
 mod gemm;
 
-pub use gemm::{gemm, gemm_bias, gemm_nt, matmul_cols};
+pub use gemm::{gemm, gemm_bias, gemm_into_cols, gemm_nt, matmul_cols, split_cols_mut};
 
 use crate::util::rng::Rng;
 

@@ -130,9 +130,9 @@ impl Json {
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 1e15 {
-                    out.push_str(&format!("{}", *x as i64));
+                    out.push_str(&(*x as i64).to_string());
                 } else {
-                    out.push_str(&format!("{x}"));
+                    out.push_str(&x.to_string());
                 }
             }
             Json::Str(s) => {

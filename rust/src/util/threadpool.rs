@@ -1,12 +1,17 @@
 //! Fixed-size thread pool (offline build: no tokio/rayon). Used by the
-//! serving front-end for connection handling and by benches for workload
-//! generation.
+//! serving front-end for connection handling, by benches for workload
+//! generation, and — via [`scoped_run_on`] — by the HCMP parallel forward
+//! engine as its persistent "wide"/"narrow" hetero-core worker pools.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A job that may borrow from the caller's stack frame; only runnable
+/// through [`scoped_run_on`], which blocks until every job has finished.
+pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
 
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
@@ -40,6 +45,11 @@ impl ThreadPool {
         Self { workers, tx: Some(tx) }
     }
 
+    /// Number of worker threads in the pool.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
     /// Submit a job. Panics if the pool is shut down.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx.as_ref().expect("pool shut down").send(Box::new(f)).expect("workers alive");
@@ -59,6 +69,65 @@ impl ThreadPool {
         for _ in 0..n {
             done_rx.recv().expect("job completed");
         }
+    }
+}
+
+/// Run batches of *borrowed* jobs on several pools concurrently and wait
+/// for all of them — the hetero-core fork/join primitive: one barrier spans
+/// the wide-unit and narrow-unit pools so a phase ends when the slower unit
+/// finishes (the simulator's phase semantics, executed for real).
+///
+/// Soundness of the lifetime extension: this function blocks until every
+/// job has signalled completion, so no borrow inside a job can outlive the
+/// caller's frame. Worker-side panics are caught (the completion signal is
+/// always sent) and re-raised here after the barrier, and submission
+/// itself never panics (a dead pool degrades to running the job inline on
+/// the caller), so unwinding can never leave a borrowed job still running.
+pub fn scoped_run_on(batches: Vec<(&ThreadPool, Vec<ScopedJob<'_>>)>) {
+    let (done_tx, done_rx) = mpsc::channel::<std::thread::Result<()>>();
+    let mut total = 0usize;
+    for (pool, jobs) in batches {
+        for job in jobs {
+            total += 1;
+            // SAFETY: see above — the barrier below outlives every job.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            let done = done_tx.clone();
+            let wrapped: Job = Box::new(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || job()));
+                let _ = done.send(r);
+            });
+            // submit without any panic path: if the pool's queue is gone
+            // (all workers died), run the wrapped job inline — still within
+            // the barrier frame, so the borrows stay sound.
+            match pool.tx.as_ref() {
+                Some(tx) => {
+                    if let Err(mpsc::SendError(job)) = tx.send(wrapped) {
+                        job();
+                    }
+                }
+                None => wrapped(),
+            }
+        }
+    }
+    drop(done_tx);
+    let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+    for received in 0..total {
+        match done_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(p)) => panic = Some(p),
+            // Disconnect before `total` results means a pool died and some
+            // queued jobs were destroyed unrun (every pending job owns a
+            // sender, so by now none is still executing). Returning quietly
+            // would leave the callers' outputs silently incomplete (e.g.
+            // zeroed GEMM shards) — fail loudly instead.
+            Err(_) => panic!(
+                "worker pool died mid-barrier: {} of {total} scoped jobs dropped unrun",
+                total - received
+            ),
+        }
+    }
+    if let Some(p) = panic {
+        std::panic::resume_unwind(p);
     }
 }
 
@@ -90,6 +159,83 @@ mod tests {
             .collect();
         pool.scoped_run(jobs);
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn scoped_jobs_may_borrow_and_mutate_disjoint_slices() {
+        let wide = ThreadPool::new(3);
+        let narrow = ThreadPool::new(2);
+        let mut data = vec![0u64; 10];
+        {
+            let chunks: Vec<&mut [u64]> = data.chunks_mut(2).collect();
+            let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            let mut narrow_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for (i, chunk) in chunks.into_iter().enumerate() {
+                let job: ScopedJob<'_> = Box::new(move || {
+                    for x in chunk.iter_mut() {
+                        *x = i as u64 + 1;
+                    }
+                });
+                if i % 2 == 0 {
+                    wide_jobs.push(job);
+                } else {
+                    narrow_jobs.push(job);
+                }
+            }
+            scoped_run_on(vec![(&wide, wide_jobs), (&narrow, narrow_jobs)]);
+        }
+        assert_eq!(data, vec![1, 1, 2, 2, 3, 3, 4, 4, 5, 5]);
+    }
+
+    #[test]
+    fn scoped_barrier_survives_empty_batches() {
+        let pool = ThreadPool::new(1);
+        scoped_run_on(vec![(&pool, Vec::new())]);
+        let hit = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> =
+            vec![Box::new(|| {
+                hit.fetch_add(1, Ordering::SeqCst);
+            })];
+        scoped_run_on(vec![(&pool, jobs)]);
+        assert_eq!(hit.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn scoped_panic_propagates_after_barrier() {
+        let pool = ThreadPool::new(2);
+        let ok = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let jobs: Vec<ScopedJob<'_>> = vec![
+                Box::new(|| panic!("injected")),
+                Box::new(|| {
+                    ok.fetch_add(1, Ordering::SeqCst);
+                }),
+            ];
+            scoped_run_on(vec![(&pool, jobs)]);
+        }));
+        assert!(result.is_err(), "worker panic must re-raise on the caller");
+        assert_eq!(ok.load(Ordering::SeqCst), 1, "sibling job still ran to completion");
+        // the pool must remain usable after a panicked batch
+        let jobs: Vec<ScopedJob<'_>> = vec![Box::new(|| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        })];
+        scoped_run_on(vec![(&pool, jobs)]);
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn scoped_run_on_degrades_to_inline_on_dead_pool() {
+        // kill the pool's only worker via a plain (uncaught) job panic;
+        // scoped jobs must then run inline instead of panicking/hanging.
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("kill worker"));
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        let hit = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob<'_>> = vec![Box::new(|| {
+            hit.fetch_add(1, Ordering::SeqCst);
+        })];
+        scoped_run_on(vec![(&pool, jobs)]);
+        assert_eq!(hit.load(Ordering::SeqCst), 1, "job lost on dead pool");
     }
 
     #[test]

@@ -2,18 +2,21 @@
 //! not vendorable offline). Each property runs over deterministic generated
 //! cases with seed-reporting on failure.
 
+use ghidorah::exec::parallel::{chunk_bounds, shard_bounds};
 use ghidorah::model::kv_cache::{BatchKvCache, KvCache};
 use ghidorah::model::ModelConfig;
 use ghidorah::sparse::{
-    attention_dense_masked, attention_sparse_opt, merge_partials, CooPattern,
+    attention_dense_masked, attention_sparse_opt, attention_sparse_opt_rows, merge_partials,
+    CooPattern,
 };
 use ghidorah::spec::drafter::AccuracyProfile;
 use ghidorah::spec::tree::VerificationTree;
 use ghidorah::spec::verify::verify_greedy;
-use ghidorah::tensor::{gemm, gemm_nt, matmul_cols, Tensor};
+use ghidorah::tensor::{gemm, gemm_into_cols, gemm_nt, matmul_cols, split_cols_mut, Tensor};
 use ghidorah::util::json::Json;
 use ghidorah::util::prop::{check, gens};
 use ghidorah::util::rng::Rng;
+use ghidorah::util::threadpool::{scoped_run_on, ScopedJob, ThreadPool};
 
 /// COO pattern from any tree: diagonal present, row-major sorted, ancestry
 /// closed (parent's ancestry ⊆ child's).
@@ -372,7 +375,7 @@ fn prop_batch_kv_lane_recycling_never_leaks() {
             if joiner != leaver {
                 return Err(format!("expected recycled lane {leaver}, got {joiner}"));
             }
-            if batch.lane(joiner).len() != 0 {
+            if !batch.lane(joiner).is_empty() {
                 return Err("recycled lane has nonzero committed length".into());
             }
             if !batch.lane(joiner).k_flat().iter().all(|&x| x == 0.0)
@@ -414,6 +417,93 @@ fn prop_json_roundtrip() {
         let parsed = Json::parse(&s).map_err(|e| format!("parse failed: {e} for {s}"))?;
         if &parsed != j {
             return Err(format!("roundtrip mismatch: {s}"));
+        }
+        Ok(())
+    });
+}
+
+/// Column-sharded GEMM executed concurrently on two real worker pools is
+/// bitwise identical to the unsharded GEMM — for randomized shapes, GPU
+/// ratios (including the 0.0 and 1.0 boundaries), and thread counts. Uses
+/// the engine's own `shard_bounds` partitioning so the property tests the
+/// exact layout `HcmpParallelExecutor` executes. This is the HCMP §III-B.1
+/// losslessness guarantee at kernel level.
+#[test]
+fn prop_sharded_gemm_bitwise_under_real_pools() {
+    check("sharded-gemm-bitwise", 30, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let m = rng.range(1, 13);
+        let k = rng.range(1, 150);
+        let n = rng.range(1, 90);
+        let ratio = [0.0, 1.0, rng.f32() as f64, 0.5][rng.below(4)];
+        let (wide_t, narrow_t) = (rng.range(1, 5), rng.range(1, 5));
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let want = gemm(&a, &b);
+
+        let n_wide = (((n as f64) * ratio).round() as usize).min(n);
+        let (all, n_wide_chunks) = shard_bounds(n, n_wide, wide_t, narrow_t);
+        let mut bounds: Vec<usize> = all.iter().map(|c| c.0).collect();
+        bounds.push(n);
+
+        let wide = ThreadPool::new(wide_t);
+        let narrow = ThreadPool::new(narrow_t);
+        let mut c = Tensor::zeros(&[m, n]);
+        {
+            let (ad, bd) = (a.data(), b.data());
+            let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+            let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            let mut narrow_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for (idx, (mut rows, (lo, hi))) in shards.into_iter().zip(all).enumerate() {
+                let job: ScopedJob<'_> = Box::new(move || {
+                    gemm_into_cols(ad, bd, &mut rows, k, n, lo, hi);
+                });
+                if idx < n_wide_chunks {
+                    wide_jobs.push(job);
+                } else {
+                    narrow_jobs.push(job);
+                }
+            }
+            scoped_run_on(vec![(&wide, wide_jobs), (&narrow, narrow_jobs)]);
+        }
+        if c.data() != want.data() {
+            return Err(format!(
+                "not bitwise: m={m} k={k} n={n} ratio={ratio} pools={wide_t}/{narrow_t}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Row-range-parallel sparse attention is bitwise identical to the full
+/// kernel for randomized trees, head dims, and row partitions (including
+/// the single-chunk boundary) — the narrow-unit §III-B.3 guarantee.
+#[test]
+fn prop_row_range_sparse_attention_bitwise() {
+    check("row-range-sparse-bitwise", 40, |r| {
+        let n = r.range(1, 40);
+        (gens::tree_parents(r, n), r.next_u64())
+    }, |(parents, seed)| {
+        let pat = CooPattern::from_tree(parents);
+        let w = parents.len();
+        let mut rng = Rng::new(*seed);
+        let dh = [4usize, 8, 31, 64][rng.below(4)];
+        let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let k = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let v = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let scale = (dh as f32).powf(-0.5);
+        let full = attention_sparse_opt(&q, &k, &v, &pat, scale);
+        let parts = rng.range(1, 7);
+        for (lo, hi) in chunk_bounds(0, w, parts) {
+            let part = attention_sparse_opt_rows(&q, &k, &v, &pat, scale, lo, hi);
+            for (i, row) in (lo..hi).enumerate() {
+                if part.o.row(i) != full.o.row(row) {
+                    return Err(format!("o row {row} not bitwise (w={w}, dh={dh}, parts={parts})"));
+                }
+                if part.m[i] != full.m[row] || part.l[i] != full.l[row] {
+                    return Err(format!("m/l row {row} not bitwise (w={w}, dh={dh})"));
+                }
+            }
         }
         Ok(())
     });

@@ -28,7 +28,7 @@ fn artifacts_or_skip() -> Option<std::path::PathBuf> {
 }
 
 fn chain_pattern(w: usize) -> CooPattern {
-    CooPattern::from_tree(&(0..w).map(|i| if i == 0 { usize::MAX } else { i - 1 }).collect::<Vec<_>>())
+    CooPattern::causal(w)
 }
 
 /// PJRT-executed decode step must match the pure-Rust forward op-for-op.
