@@ -1,0 +1,1015 @@
+//! Host calibration + online re-tuning: the feedback loop that makes ARCA's
+//! cost model track the machine it actually runs on.
+//!
+//! PR 2's `bench measured` table showed the Jetson-calibrated simulator
+//! predicts the *ordering* of parallel speedups on a development host but
+//! not their magnitude — its unit specs describe a 204 MHz Volta and a
+//! Carmel CPU, not this machine's worker pools. This module closes the loop
+//! in two stages:
+//!
+//! 1. **Offline calibration** ([`calibrate`]): short sharded-GEMM and
+//!    sparse-attention micro-benchmarks run on the *real* wide/narrow
+//!    thread pools (the exact kernels + fork/join barrier the HCMP engine
+//!    executes), and [`fit_unit`] least-squares-fits a [`UnitSpec`] per
+//!    pool — peak FLOP rate, efficiency tiers (sweet spot + per-doubling
+//!    decay over probe widths), achievable bandwidth, dispatch overhead,
+//!    and the sparse-gather efficiency. The result is a [`HostProfile`],
+//!    persistable as JSON, whose simulators price schedules in *this
+//!    host's* time: `SimReport` tracks measured wall-clock across widths
+//!    and batch sizes, and `arca::contention::tune_plan` run on the
+//!    calibrated simulator picks `linear_ratio` from measured rates — the
+//!    residual fed back into plan tuning.
+//!
+//! 2. **Online re-tuning** ([`OnlineRetuner`], [`WidthRetuner`]): while
+//!    serving, the scheduler feeds each step's measured
+//!    `ExecTimings.balance()` into a sliding window; at window boundaries
+//!    the re-tuner nudges the executable `linear_ratio` toward the idler
+//!    pool (and the width re-tuner swaps the draft tree for *future*
+//!    admissions when the measured acceptance rate says a different width
+//!    pays). Ratio swaps happen only between steps — column re-sharding
+//!    never reorders accumulation — so token streams stay bitwise
+//!    identical (`tests/retune_parity.rs`).
+
+use std::time::Instant;
+
+use crate::exec::parallel::chunk_bounds;
+use crate::hcmp::cost::Op;
+use crate::hcmp::schedule::{build_batched_step, EngineKind};
+use crate::hcmp::simulator::Simulator;
+use crate::hcmp::unit::{UnifiedMemory, UnitSpec};
+use crate::hcmp::PartitionPlan;
+use crate::model::ModelConfig;
+use crate::sparse::{attention_sparse_opt_rows, CooPattern};
+use crate::spec::tree::VerificationTree;
+use crate::tensor::{gemm_into_cols, split_cols_mut, Tensor};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::threadpool::{scoped_run_on, ScopedJob, ThreadPool};
+
+// ---------------------------------------------------------------------------
+// Probes
+// ---------------------------------------------------------------------------
+
+/// One timed micro-benchmark: an op of known FLOPs/bytes executed at a
+/// known token-row width, with its measured seconds per execution. FLOP and
+/// byte accounting uses [`Op`] so the fit and the simulator can never
+/// disagree about what a probe "cost".
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProbeSample {
+    /// Token-row dimension (the sweet-spot/efficiency-tier key).
+    pub width: usize,
+    pub flops: f64,
+    pub bytes: f64,
+    /// Measured wall-clock seconds per execution.
+    pub secs: f64,
+    /// True for sparse-attention probes (they fit `sparse_eff`, not the
+    /// GEMM tiers).
+    pub sparse: bool,
+}
+
+impl ProbeSample {
+    fn to_json(&self, unit: &str) -> Json {
+        Json::obj(vec![
+            ("unit", Json::str(unit)),
+            ("width", Json::num(self.width as f64)),
+            ("flops", Json::num(self.flops)),
+            ("bytes", Json::num(self.bytes)),
+            ("secs", Json::num(self.secs)),
+            ("sparse", Json::Bool(self.sparse)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<(String, ProbeSample)> {
+        Some((
+            j.get("unit")?.as_str()?.to_string(),
+            ProbeSample {
+                width: j.get("width")?.as_usize()?,
+                flops: j.get("flops")?.as_f64()?,
+                bytes: j.get("bytes")?.as_f64()?,
+                secs: j.get("secs")?.as_f64()?,
+                sparse: j.get("sparse").and_then(Json::as_bool).unwrap_or(false),
+            },
+        ))
+    }
+}
+
+/// Predicted seconds for a probe on a fitted unit — the same roofline the
+/// simulator prices with (launch + max(compute, memory)), with the GEMM
+/// efficiency tier keyed on the probe's width. Shared by the fit-quality
+/// metric and the synthetic-tier property tests.
+pub fn predict_probe_secs(unit: &UnitSpec, s: &ProbeSample) -> f64 {
+    // same rate policy as Op::rate_on (sparse probes are AttnSparse work,
+    // dense probes are width-keyed GEMM tiles)
+    let rate = if s.sparse { unit.sparse_flops() } else { unit.effective_flops(s.width) };
+    unit.launch_overhead + (s.flops / rate).max(s.bytes / unit.solo_bw)
+}
+
+// ---------------------------------------------------------------------------
+// Least-squares UnitSpec fit
+// ---------------------------------------------------------------------------
+
+/// Fit a [`UnitSpec`] to measured probes (least squares over probe widths).
+///
+/// * `peak_flops` — least-squares amplitude over the top-rate widths
+///   (minimizing Σ(t_i − f_i/p)² gives p = Σf_i² / Σf_i·t_i).
+/// * `sweet_spot` / `decay_per_doubling` — the efficiency tiers: the
+///   widest probe still within 85% of peak, then a log-space least-squares
+///   slope through the beyond-sweet-spot efficiencies.
+/// * `solo_bw` — from the width-1 probe (the memory-bound end of the
+///   roofline; decode at W=1 is exactly this shape).
+/// * `sparse_eff` — sustained sparse-gather rate over peak.
+///
+/// Host pools have no wave quantization (`wave = 1`).
+pub fn fit_unit(name: &str, probes: &[ProbeSample], launch_overhead: f64) -> UnitSpec {
+    let eps = 1e-12;
+    // Net compute time of a probe after the dispatch overhead. The floor is
+    // proportional to the measured time, not an absolute epsilon: on a fast
+    // host a tiny probe can land at or below the separately measured
+    // barrier time, and an epsilon floor would turn it into an
+    // astronomically inflated rate that poisons the whole fit.
+    let net = |p: &ProbeSample| (p.secs - launch_overhead).max(p.secs * 0.05).max(1e-9);
+    let gemm: Vec<&ProbeSample> = probes.iter().filter(|p| !p.sparse).collect();
+    assert!(!gemm.is_empty(), "need at least one dense probe to fit '{name}'");
+
+    // sustained FLOP rate per width (net of dispatch overhead)
+    let rates: Vec<(usize, f64, f64, f64)> = gemm
+        .iter()
+        .map(|p| {
+            let t = net(p);
+            (p.width, p.flops / t, p.flops, t)
+        })
+        .collect();
+    let best_rate = rates.iter().map(|r| r.1).fold(0.0f64, f64::max).max(eps);
+
+    // least-squares peak over the widths still near the best rate
+    let near: Vec<&(usize, f64, f64, f64)> =
+        rates.iter().filter(|r| r.1 >= 0.9 * best_rate).collect();
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for r in &near {
+        num += r.2 * r.2;
+        den += r.2 * r.3;
+    }
+    let peak_flops = if den > 0.0 { (num / den).max(eps) } else { best_rate };
+
+    // efficiency tiers: widest width within 85% of peak, then the decay
+    // slope (log-space least squares through the origin) beyond it
+    let sweet_spot = rates
+        .iter()
+        .filter(|r| r.1 >= 0.85 * peak_flops)
+        .map(|r| r.0)
+        .max()
+        .unwrap_or_else(|| rates.iter().map(|r| r.0).min().unwrap_or(1))
+        .max(1);
+    let (mut s_num, mut s_den) = (0.0f64, 0.0f64);
+    for r in &rates {
+        if r.0 > sweet_spot {
+            let d = (r.0 as f64 / sweet_spot as f64).log2();
+            let e = (r.1 / peak_flops).clamp(1e-6, 1.0).ln();
+            s_num += d * e;
+            s_den += d * d;
+        }
+    }
+    let decay_per_doubling =
+        if s_den > 0.0 { (s_num / s_den).exp().clamp(0.2, 1.0) } else { 0.95 };
+
+    // bandwidth: the width-1 probe is the memory-bound end of the roofline
+    let solo_bw = gemm
+        .iter()
+        .filter(|p| p.width == 1)
+        .map(|p| p.bytes / net(p))
+        .fold(0.0f64, f64::max)
+        .max(1e7);
+    // no width-1 probe: pick a bandwidth high enough never to bind
+    let solo_bw = if gemm.iter().any(|p| p.width == 1) { solo_bw } else { 1e12 };
+
+    // sparse-gather efficiency relative to the dense peak
+    let sparse: Vec<&ProbeSample> = probes.iter().filter(|p| p.sparse).collect();
+    let sparse_eff = if sparse.is_empty() {
+        1.0
+    } else {
+        let mean_rate =
+            sparse.iter().map(|p| p.flops / net(p)).sum::<f64>() / sparse.len() as f64;
+        (mean_rate / peak_flops).clamp(0.005, 1.0)
+    };
+
+    UnitSpec {
+        name: name.to_string(),
+        peak_flops,
+        solo_bw,
+        launch_overhead,
+        wave: 1,
+        sweet_spot,
+        decay_per_doubling,
+        sparse_eff,
+    }
+}
+
+/// RMS relative error of a fitted unit against its own probes.
+pub fn fit_rms_rel_err(unit: &UnitSpec, probes: &[ProbeSample]) -> f64 {
+    if probes.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    for p in probes {
+        let pred = predict_probe_secs(unit, p);
+        let e = (pred - p.secs) / p.secs.max(1e-12);
+        acc += e * e;
+    }
+    (acc / probes.len() as f64).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// Host profile
+// ---------------------------------------------------------------------------
+
+/// The fitted description of this host: a unit spec for the single-thread
+/// caller (the sequential engine), one per worker pool (the HCMP engine's
+/// wide/narrow units), and the shared-memory model — plus the raw probes
+/// the fit came from, for reproducibility.
+#[derive(Clone, Debug)]
+pub struct HostProfile {
+    pub solo: UnitSpec,
+    pub wide: UnitSpec,
+    pub narrow: UnitSpec,
+    pub mem: UnifiedMemory,
+    pub wide_threads: usize,
+    pub narrow_threads: usize,
+    /// RMS relative fit error across all probes (self-consistency check).
+    pub fit_rms_rel_err: f64,
+    /// (unit name, sample) pairs recorded during calibration.
+    pub probes: Vec<(String, ProbeSample)>,
+}
+
+impl HostProfile {
+    /// The calibrated hetero-core simulator: prices schedules on this
+    /// host's wide/narrow pools (simulator slot `gpu` = wide pool).
+    pub fn simulator(&self) -> Simulator {
+        Simulator::with_units(self.wide.clone(), self.narrow.clone(), self.mem.clone())
+    }
+
+    /// Simulator for the single-unit sequential baseline (the caller
+    /// thread): both slots hold the solo spec, but single-unit plans only
+    /// ever exercise the `gpu` slot.
+    pub fn solo_simulator(&self) -> Simulator {
+        Simulator::with_units(self.solo.clone(), self.solo.clone(), self.mem.clone())
+    }
+
+    /// Predicted sequential/HCMP parallel step-time ratio for a batched
+    /// decode step on this host — the calibrated counterpart of the
+    /// Jetson simulator's column in `bench measured`.
+    pub fn predict_parallel_ratio(
+        &self,
+        cfg: &ModelConfig,
+        batch: usize,
+        width: usize,
+        ctx: usize,
+        pattern: Option<&CooPattern>,
+        plan: &PartitionPlan,
+    ) -> f64 {
+        let t_seq = self
+            .solo_simulator()
+            .run(&build_batched_step(
+                cfg,
+                EngineKind::MedusaGpu,
+                batch,
+                width,
+                ctx,
+                pattern,
+                &PartitionPlan::gpu_only(),
+            ))
+            .total;
+        let t_par = self
+            .simulator()
+            .run(&build_batched_step(cfg, EngineKind::Ghidorah, batch, width, ctx, pattern, plan))
+            .total;
+        t_seq / t_par.max(1e-12)
+    }
+
+    /// Predicted wide/narrow load balance of a plan on this host (the
+    /// quantity the online re-tuner measures for real).
+    pub fn predict_balance(
+        &self,
+        cfg: &ModelConfig,
+        batch: usize,
+        width: usize,
+        ctx: usize,
+        pattern: Option<&CooPattern>,
+        plan: &PartitionPlan,
+    ) -> f64 {
+        self.simulator()
+            .run(&build_batched_step(cfg, EngineKind::Ghidorah, batch, width, ctx, pattern, plan))
+            .balance()
+    }
+
+    /// Tune the partition plan on the *calibrated* simulator — the
+    /// measured-residual feedback into `arca::contention::tune_plan`.
+    pub fn tune_plan(
+        &self,
+        cfg: &ModelConfig,
+        width: usize,
+        ctx: usize,
+        pattern: Option<&CooPattern>,
+    ) -> (PartitionPlan, f64) {
+        crate::arca::contention::tune_plan(&self.simulator(), cfg, width, ctx, pattern, false)
+    }
+
+    // ---- persistence (the host-profile JSON, see README) ------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("wide_threads", Json::num(self.wide_threads as f64)),
+            ("narrow_threads", Json::num(self.narrow_threads as f64)),
+            ("solo", self.solo.to_json()),
+            ("wide", self.wide.to_json()),
+            ("narrow", self.narrow.to_json()),
+            ("mem", self.mem.to_json()),
+            ("fit_rms_rel_err", Json::num(self.fit_rms_rel_err)),
+            (
+                "probes",
+                Json::arr(self.probes.iter().map(|(u, p)| p.to_json(u)).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let unit = |k: &str| -> anyhow::Result<UnitSpec> {
+            UnitSpec::from_json(
+                j.get(k).ok_or_else(|| anyhow::anyhow!("host profile missing '{k}'"))?,
+            )
+        };
+        let probes = j
+            .get("probes")
+            .and_then(Json::as_arr)
+            .map(|arr| arr.iter().filter_map(ProbeSample::from_json).collect())
+            .unwrap_or_default();
+        Ok(Self {
+            solo: unit("solo")?,
+            wide: unit("wide")?,
+            narrow: unit("narrow")?,
+            mem: UnifiedMemory::from_json(
+                j.get("mem").ok_or_else(|| anyhow::anyhow!("host profile missing 'mem'"))?,
+            )?,
+            wide_threads: j
+                .get("wide_threads")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("host profile missing 'wide_threads'"))?,
+            narrow_threads: j
+                .get("narrow_threads")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("host profile missing 'narrow_threads'"))?,
+            fit_rms_rel_err: j.get("fit_rms_rel_err").and_then(Json::as_f64).unwrap_or(0.0),
+            probes,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().dump())
+            .map_err(|e| anyhow::anyhow!("writing host profile {}: {e}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading host profile {}: {e}", path.display()))?;
+        Self::from_json(&Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Calibration (the micro-benchmark pass)
+// ---------------------------------------------------------------------------
+
+/// Probe shapes and repetition counts.
+#[derive(Clone, Debug)]
+pub struct CalibrationConfig {
+    /// GEMM inner/output dims (kept at the tiny model's scale so probes
+    /// exercise the cache footprint the engine actually sees).
+    pub gemm_k: usize,
+    pub gemm_n: usize,
+    /// Token-row widths probed (the efficiency-tier x-axis). Must include
+    /// 1 for the bandwidth fit.
+    pub widths: Vec<usize>,
+    /// Timed repetitions per probe (one extra warmup execution always
+    /// precedes timing).
+    pub reps: usize,
+    /// Sparse-attention probe shape: heads × head_dim over a causal block.
+    pub sparse_heads: usize,
+    pub sparse_dh: usize,
+    pub sparse_block: usize,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        Self {
+            gemm_k: 256,
+            gemm_n: 256,
+            widths: vec![1, 2, 4, 8, 16, 32, 64],
+            reps: 12,
+            sparse_heads: 8,
+            sparse_dh: 64,
+            sparse_block: 32,
+        }
+    }
+}
+
+impl CalibrationConfig {
+    /// A fast variant for CI smoke tests (~10x fewer timed executions).
+    pub fn quick() -> Self {
+        Self { widths: vec![1, 4, 16, 32], reps: 3, ..Self::default() }
+    }
+}
+
+/// Time `reps` executions of `run`, after one warmup. Seconds/execution.
+fn time_probe(reps: usize, mut run: impl FnMut()) -> f64 {
+    run(); // warmup
+    let t0 = Instant::now();
+    for _ in 0..reps.max(1) {
+        run();
+    }
+    t0.elapsed().as_secs_f64() / reps.max(1) as f64
+}
+
+/// Column-shard jobs of one `[m, k] x [k, n]` GEMM across `threads` —
+/// exactly the engine's shard layout, borrowed for one barrier.
+fn gemm_jobs<'a>(
+    ad: &'a [f32],
+    bd: &'a [f32],
+    c: &'a mut Tensor,
+    k: usize,
+    n: usize,
+    threads: usize,
+) -> Vec<ScopedJob<'a>> {
+    let m = c.shape()[0];
+    let chunks = chunk_bounds(0, n, threads);
+    let mut bounds: Vec<usize> = chunks.iter().map(|ch| ch.0).collect();
+    bounds.push(n);
+    split_cols_mut(c.data_mut(), m, n, &bounds)
+        .into_iter()
+        .zip(chunks)
+        .map(|(mut rows, (lo, hi))| {
+            let job: ScopedJob<'a> =
+                Box::new(move || gemm_into_cols(ad, bd, &mut rows, k, n, lo, hi));
+            job
+        })
+        .collect()
+}
+
+/// One sharded-GEMM execution across `pool` (all output columns on this
+/// pool, split over its threads) — the engine's column-shard kernel plus
+/// its fork/join barrier.
+fn pool_gemm(pool: &ThreadPool, a: &Tensor, b: &Tensor, c: &mut Tensor, k: usize, n: usize) {
+    let jobs = gemm_jobs(a.data(), b.data(), c, k, n, pool.threads());
+    scoped_run_on(vec![(pool, jobs)]);
+}
+
+/// GEMM probes for one pool (or `None` = the caller thread, i.e. the
+/// sequential engine's "unit").
+fn gemm_probes(
+    pool: Option<&ThreadPool>,
+    cal: &CalibrationConfig,
+    rng: &mut Rng,
+) -> Vec<ProbeSample> {
+    let (k, n) = (cal.gemm_k, cal.gemm_n);
+    let mut out = Vec::with_capacity(cal.widths.len());
+    for &m in &cal.widths {
+        let a = Tensor::randn(&[m, k], 1.0, rng);
+        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let mut c = Tensor::zeros(&[m, n]);
+        let secs = time_probe(cal.reps, || match pool {
+            Some(p) => pool_gemm(p, &a, &b, &mut c, k, n),
+            None => {
+                let bounds = [0, n];
+                let mut shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+                gemm_into_cols(a.data(), b.data(), &mut shards[0], k, n, 0, n);
+            }
+        });
+        let op = Op::Gemm { m, k, n };
+        out.push(ProbeSample {
+            width: m,
+            flops: op.flops(),
+            bytes: op.bytes(),
+            secs,
+            sparse: false,
+        });
+    }
+    out
+}
+
+/// Sparse-attention probe for one pool: the optimized COO kernel over a
+/// causal draft block, row-range-parallel across the pool's threads (the
+/// narrow unit's affinity-split workload).
+fn sparse_probe(pool: Option<&ThreadPool>, cal: &CalibrationConfig, rng: &mut Rng) -> ProbeSample {
+    let (heads, dh, w) = (cal.sparse_heads, cal.sparse_dh, cal.sparse_block);
+    let pattern = CooPattern::causal(w);
+    let scale = (dh as f32).powf(-0.5);
+    let qs: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(&[w, dh], 1.0, rng)).collect();
+    let ks: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(&[w, dh], 1.0, rng)).collect();
+    let vs: Vec<Tensor> = (0..heads).map(|_| Tensor::randn(&[w, dh], 1.0, rng)).collect();
+    let secs = time_probe(cal.reps, || match pool {
+        Some(p) => {
+            let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for h in 0..heads {
+                let (q, k, v) = (&qs[h], &ks[h], &vs[h]);
+                let pat = &pattern;
+                for (lo, hi) in chunk_bounds(0, w, p.threads()) {
+                    jobs.push(Box::new(move || {
+                        let part = attention_sparse_opt_rows(q, k, v, pat, scale, lo, hi);
+                        std::hint::black_box(part.o.data()[0]);
+                    }));
+                }
+            }
+            scoped_run_on(vec![(p, jobs)]);
+        }
+        None => {
+            for h in 0..heads {
+                let part = attention_sparse_opt_rows(&qs[h], &ks[h], &vs[h], &pattern, scale, 0, w);
+                std::hint::black_box(part.o.data()[0]);
+            }
+        }
+    });
+    let op = Op::AttnSparse { nnz: pattern.nnz(), heads, dh };
+    ProbeSample { width: w, flops: op.flops(), bytes: op.bytes(), secs, sparse: true }
+}
+
+/// Measured cost of the engine's fork/join barrier (empty jobs across both
+/// pools) — fitted as the pooled units' per-op dispatch overhead.
+fn barrier_overhead(wide: &ThreadPool, narrow: &ThreadPool, reps: usize) -> f64 {
+    time_probe(reps.max(8), || {
+        let wj: Vec<ScopedJob<'_>> =
+            (0..wide.threads()).map(|_| Box::new(|| {}) as ScopedJob<'_>).collect();
+        let nj: Vec<ScopedJob<'_>> =
+            (0..narrow.threads()).map(|_| Box::new(|| {}) as ScopedJob<'_>).collect();
+        scoped_run_on(vec![(wide, wj), (narrow, nj)]);
+    })
+}
+
+/// Run the calibration pass: build wide/narrow pools of the given sizes
+/// (the sizes the serving engine will use), probe all three "units", fit
+/// their specs, and measure cross-pool contention for the memory model.
+pub fn calibrate(
+    wide_threads: usize,
+    narrow_threads: usize,
+    cal: &CalibrationConfig,
+) -> HostProfile {
+    assert!(cal.widths.contains(&1), "calibration widths must include 1 (bandwidth fit)");
+    let wide_threads = wide_threads.max(1);
+    let narrow_threads = narrow_threads.max(1);
+    let wide_pool = ThreadPool::new(wide_threads);
+    let narrow_pool = ThreadPool::new(narrow_threads);
+    let mut rng = Rng::new(0xA07071);
+
+    let launch = barrier_overhead(&wide_pool, &narrow_pool, cal.reps * 4);
+
+    fn unit_probe_set(
+        pool: Option<&ThreadPool>,
+        cal: &CalibrationConfig,
+        rng: &mut Rng,
+    ) -> Vec<ProbeSample> {
+        let mut ps = gemm_probes(pool, cal, rng);
+        ps.push(sparse_probe(pool, cal, rng));
+        ps
+    }
+
+    let solo_ps = unit_probe_set(None, cal, &mut rng);
+    let wide_ps = unit_probe_set(Some(&wide_pool), cal, &mut rng);
+    let narrow_ps = unit_probe_set(Some(&narrow_pool), cal, &mut rng);
+    let mut probes: Vec<(String, ProbeSample)> = Vec::new();
+    for (name, ps) in [("solo", &solo_ps), ("wide", &wide_ps), ("narrow", &narrow_ps)] {
+        for p in ps {
+            probes.push((name.to_string(), p.clone()));
+        }
+    }
+
+    let solo = fit_unit("solo", &solo_ps, 0.0);
+    let wide = fit_unit("wide", &wide_ps, launch);
+    let narrow = fit_unit("narrow", &narrow_ps, launch);
+
+    // contention: the same mid-width GEMM on both pools at once vs alone —
+    // on a host whose pools share cores/caches, concurrency costs a slice
+    // of each unit's solo throughput, which the shared-memory model charges
+    // as a roof penalty.
+    let m = *cal.widths.iter().filter(|&&w| w >= 8).min().unwrap_or(&8);
+    let (k, n) = (cal.gemm_k, cal.gemm_n);
+    let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let t_wide = time_probe(cal.reps, || {
+        let mut c = Tensor::zeros(&[m, n]);
+        pool_gemm(&wide_pool, &a, &b, &mut c, k, n);
+    });
+    let t_narrow = time_probe(cal.reps, || {
+        let mut c = Tensor::zeros(&[m, n]);
+        pool_gemm(&narrow_pool, &a, &b, &mut c, k, n);
+    });
+    let t_conc = time_probe(cal.reps, || {
+        let mut cw = Tensor::zeros(&[m, n]);
+        let mut cn = Tensor::zeros(&[m, n]);
+        let wj = gemm_jobs(a.data(), b.data(), &mut cw, k, n, wide_threads);
+        let nj = gemm_jobs(a.data(), b.data(), &mut cn, k, n, narrow_threads);
+        scoped_run_on(vec![(&wide_pool, wj), (&narrow_pool, nj)]);
+    });
+    let alone = t_wide.max(t_narrow).max(1e-12);
+    let contention_penalty = (1.0 - alone / t_conc.max(alone)).clamp(0.0, 0.5);
+
+    let mem = UnifiedMemory {
+        dram_bw: wide.solo_bw + narrow.solo_bw,
+        contention_penalty,
+        // the engine has no cross-unit page sync; the barrier cost is
+        // already carried in launch_overhead
+        sync_latency: 0.0,
+    };
+
+    // fit self-consistency: each unit's probes against its own fit
+    let per = [
+        fit_rms_rel_err(&solo, &solo_ps),
+        fit_rms_rel_err(&wide, &wide_ps),
+        fit_rms_rel_err(&narrow, &narrow_ps),
+    ];
+    let fit_err = (per.iter().map(|e| e * e).sum::<f64>() / per.len() as f64).sqrt();
+
+    HostProfile {
+        solo,
+        wide,
+        narrow,
+        mem,
+        wide_threads,
+        narrow_threads,
+        fit_rms_rel_err: fit_err,
+        probes,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online re-tuning
+// ---------------------------------------------------------------------------
+
+/// Knobs of the online ratio re-tuner.
+#[derive(Clone, Copy, Debug)]
+pub struct RetuneConfig {
+    /// Batched steps per decision epoch.
+    pub window: usize,
+    /// Largest ratio nudge per decision (scaled by the imbalance).
+    pub max_step: f64,
+    /// Balance at or above `1 - deadband` is left alone (hysteresis —
+    /// measurement noise must not cause ratio churn).
+    pub deadband: f64,
+    pub min_ratio: f64,
+    pub max_ratio: f64,
+}
+
+impl Default for RetuneConfig {
+    fn default() -> Self {
+        Self { window: 24, max_step: 0.06, deadband: 0.08, min_ratio: 0.02, max_ratio: 0.98 }
+    }
+}
+
+/// Nudges the executable `linear_ratio` from measured per-step
+/// `ExecTimings.balance()` over a sliding window: at each epoch boundary,
+/// if one pool was measurably busier, columns move toward the idler pool,
+/// proportionally to the imbalance. Pure decision logic — the scheduler
+/// owns the clock and applies the returned ratio at a step boundary.
+#[derive(Clone, Debug)]
+pub struct OnlineRetuner {
+    pub cfg: RetuneConfig,
+    window: crate::exec::BalanceWindow,
+    ratio: f64,
+    /// Ratio swaps decided so far.
+    pub retunes: u64,
+}
+
+impl OnlineRetuner {
+    /// The initial ratio is kept verbatim (a user-pinned `hcmp:1.0` must
+    /// start at exactly 1.0); only *nudges* clamp to `[min, max]`.
+    pub fn new(initial_ratio: f64, cfg: RetuneConfig) -> Self {
+        Self {
+            window: crate::exec::BalanceWindow::new(cfg.window),
+            cfg,
+            ratio: initial_ratio,
+            retunes: 0,
+        }
+    }
+
+    /// The ratio the engine should currently be executing.
+    pub fn ratio(&self) -> f64 {
+        self.ratio
+    }
+
+    /// Windowed measured balance (1.0 until enough steps accumulate).
+    pub fn window_balance(&self) -> f64 {
+        self.window.balance()
+    }
+
+    /// Feed one step's measured (wide, narrow) busy-occupancy delta.
+    /// Returns `Some(new_ratio)` when this step closes an epoch whose
+    /// window says the split should move.
+    pub fn observe_step(&mut self, wide_s: f64, narrow_s: f64) -> Option<f64> {
+        self.window.push(wide_s, narrow_s);
+        if !self.window.epoch_full() {
+            return None;
+        }
+        self.window.reset_epoch();
+        let (w, n) = self.window.busy();
+        let hi = w.max(n);
+        if hi <= 0.0 {
+            return None;
+        }
+        let balance = w.min(n) / hi;
+        if balance >= 1.0 - self.cfg.deadband {
+            return None;
+        }
+        // shed columns from the busier pool, proportionally to how lopsided
+        // the window was
+        let delta = self.cfg.max_step * (1.0 - balance);
+        let next =
+            (if w > n { self.ratio - delta } else { self.ratio + delta })
+                .clamp(self.cfg.min_ratio, self.cfg.max_ratio);
+        if (next - self.ratio).abs() < 1e-4 {
+            return None;
+        }
+        self.ratio = next;
+        self.retunes += 1;
+        Some(next)
+    }
+}
+
+/// Re-picks the draft-tree width from the measured acceptance rate (the
+/// decoder's existing per-step acceptance tracker, aggregated over a
+/// window): when the drafter realizes nearly all of the current tree's
+/// expected acceptance, a wider tree pays; when it realizes well under it,
+/// verification work is being wasted and a narrower tree wins. The new
+/// tree applies to *future admissions only* — in-flight sequences keep
+/// theirs, and greedy speculative output is tree-independent, so parity is
+/// unaffected either way.
+#[derive(Clone, Debug)]
+pub struct WidthRetuner {
+    /// (width, tree, expected acceptance) in ascending width order.
+    candidates: Vec<(usize, VerificationTree, f64)>,
+    cur: usize,
+    window: usize,
+    acc_sum: f64,
+    acc_n: usize,
+    /// Upward threshold: realized/expected acceptance at or above this
+    /// steps the width up.
+    pub hi_frac: f64,
+    /// Downward threshold: realized/expected below this steps it down.
+    pub lo_frac: f64,
+    /// Width swaps decided so far.
+    pub retunes: u64,
+}
+
+impl WidthRetuner {
+    /// Build candidates from the drafter accuracy profile at the given
+    /// widths; `initial_width` selects the starting candidate (nearest
+    /// width wins if absent).
+    pub fn new(heads: &[Vec<f64>], widths: &[usize], initial_width: usize) -> Self {
+        assert!(!widths.is_empty(), "need at least one candidate width");
+        let mut ws: Vec<usize> = widths.to_vec();
+        ws.sort_unstable();
+        ws.dedup();
+        let candidates: Vec<(usize, VerificationTree, f64)> = ws
+            .iter()
+            .map(|&w| {
+                let tree = crate::arca::tree_builder::build_tree(heads, w);
+                let exp = tree.expected_acceptance(heads);
+                (tree.width(), tree, exp)
+            })
+            .collect();
+        let cur = candidates
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, (w, _, _))| w.abs_diff(initial_width))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        Self {
+            candidates,
+            cur,
+            window: 48,
+            acc_sum: 0.0,
+            acc_n: 0,
+            hi_frac: 0.92,
+            lo_frac: 0.55,
+            retunes: 0,
+        }
+    }
+
+    pub fn width(&self) -> usize {
+        self.candidates[self.cur].0
+    }
+
+    pub fn tree(&self) -> &VerificationTree {
+        &self.candidates[self.cur].1
+    }
+
+    /// Feed one verification step's accepted length. Returns the new tree
+    /// for future admissions when a window closes on a width change.
+    pub fn observe_acceptance(&mut self, accepted_len: f64) -> Option<&VerificationTree> {
+        self.acc_sum += accepted_len;
+        self.acc_n += 1;
+        if self.acc_n < self.window {
+            return None;
+        }
+        let mean = self.acc_sum / self.acc_n as f64;
+        self.acc_sum = 0.0;
+        self.acc_n = 0;
+        let expected = self.candidates[self.cur].2.max(1e-9);
+        let realized = mean / expected;
+        let next = if realized >= self.hi_frac && self.cur + 1 < self.candidates.len() {
+            self.cur + 1
+        } else if realized < self.lo_frac && self.cur > 0 {
+            self.cur - 1
+        } else {
+            return None;
+        };
+        self.cur = next;
+        self.retunes += 1;
+        Some(&self.candidates[self.cur].1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthesize probes from a known spec via the shared prediction
+    /// formula (the property tests in `tests/properties.rs` add noise; this
+    /// is the exact-recovery sanity check).
+    fn synth_probes(unit: &UnitSpec, widths: &[usize]) -> Vec<ProbeSample> {
+        widths
+            .iter()
+            .map(|&m| {
+                let op = Op::Gemm { m, k: 256, n: 256 };
+                let mut s = ProbeSample {
+                    width: m,
+                    flops: op.flops(),
+                    bytes: op.bytes(),
+                    secs: 0.0,
+                    sparse: false,
+                };
+                s.secs = predict_probe_secs(unit, &s);
+                s
+            })
+            .collect()
+    }
+
+    fn host_unit() -> UnitSpec {
+        UnitSpec {
+            name: "synthetic".into(),
+            peak_flops: 8.0e9,
+            solo_bw: 6.0e9,
+            launch_overhead: 20e-6,
+            wave: 1,
+            sweet_spot: 16,
+            decay_per_doubling: 0.7,
+            sparse_eff: 0.25,
+        }
+    }
+
+    #[test]
+    fn fit_recovers_noiseless_tiers_exactly_enough() {
+        let truth = host_unit();
+        let widths = [1usize, 2, 4, 8, 16, 32, 64];
+        let mut probes = synth_probes(&truth, &widths);
+        let sp = Op::AttnSparse { nnz: 528, heads: 8, dh: 64 };
+        let mut sparse = ProbeSample {
+            width: 32,
+            flops: sp.flops(),
+            bytes: sp.bytes(),
+            secs: 0.0,
+            sparse: true,
+        };
+        sparse.secs = predict_probe_secs(&truth, &sparse);
+        probes.push(sparse);
+
+        let fit = fit_unit("fit", &probes, truth.launch_overhead);
+        assert!(
+            (fit.peak_flops / truth.peak_flops - 1.0).abs() < 0.1,
+            "peak {} vs {}",
+            fit.peak_flops,
+            truth.peak_flops
+        );
+        assert_eq!(fit.sweet_spot, truth.sweet_spot, "sweet spot tier missed");
+        assert!(
+            (fit.decay_per_doubling - truth.decay_per_doubling).abs() < 0.1,
+            "decay {} vs {}",
+            fit.decay_per_doubling,
+            truth.decay_per_doubling
+        );
+        assert!(
+            (fit.sparse_eff / truth.sparse_eff - 1.0).abs() < 0.25,
+            "sparse_eff {} vs {}",
+            fit.sparse_eff,
+            truth.sparse_eff
+        );
+        assert!(fit_rms_rel_err(&fit, &probes) < 0.12, "self-consistency");
+    }
+
+    #[test]
+    fn host_profile_json_roundtrips() {
+        let p = HostProfile {
+            solo: host_unit(),
+            wide: UnitSpec { name: "wide".into(), ..host_unit() },
+            narrow: UnitSpec { name: "narrow".into(), peak_flops: 3.0e9, ..host_unit() },
+            mem: UnifiedMemory { dram_bw: 12.0e9, contention_penalty: 0.1, sync_latency: 0.0 },
+            wide_threads: 4,
+            narrow_threads: 2,
+            fit_rms_rel_err: 0.07,
+            probes: vec![(
+                "wide".into(),
+                ProbeSample { width: 16, flops: 1e6, bytes: 2e5, secs: 1e-4, sparse: false },
+            )],
+        };
+        let text = p.to_json().dump();
+        let back = HostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.wide, p.wide);
+        assert_eq!(back.narrow, p.narrow);
+        assert_eq!(back.solo, p.solo);
+        assert_eq!(back.mem, p.mem);
+        assert_eq!((back.wide_threads, back.narrow_threads), (4, 2));
+        assert_eq!(back.probes, p.probes);
+        assert!((back.fit_rms_rel_err - 0.07).abs() < 1e-12);
+    }
+
+    #[test]
+    fn calibrated_prediction_uses_host_units() {
+        // a profile whose pools are 10x apart must predict a lopsided plan
+        // slower than a matched one
+        let wide = UnitSpec { name: "wide".into(), peak_flops: 10.0e9, ..host_unit() };
+        let narrow = UnitSpec { name: "narrow".into(), peak_flops: 1.0e9, ..host_unit() };
+        let p = HostProfile {
+            solo: host_unit(),
+            wide,
+            narrow,
+            mem: UnifiedMemory { dram_bw: 50.0e9, contention_penalty: 0.0, sync_latency: 0.0 },
+            wide_threads: 4,
+            narrow_threads: 2,
+            fit_rms_rel_err: 0.0,
+            probes: vec![],
+        };
+        let cfg = ModelConfig::tiny();
+        let tree = VerificationTree::chain(8);
+        let pat = tree.pattern();
+        let good = p.predict_parallel_ratio(&cfg, 1, 8, 64, Some(&pat), &PartitionPlan::hcmp(0.9));
+        let bad = p.predict_parallel_ratio(&cfg, 1, 8, 64, Some(&pat), &PartitionPlan::hcmp(0.1));
+        assert!(
+            good > bad,
+            "columns on the 10x-faster pool must predict faster: {good} vs {bad}"
+        );
+        let (plan, _t) = p.tune_plan(&cfg, 8, 64, Some(&pat));
+        assert!(plan.linear_ratio > 0.5, "tuner should favor the faster pool: {plan:?}");
+        let bal = p.predict_balance(&cfg, 1, 8, 64, Some(&pat), &plan);
+        assert!(bal > 0.0 && bal <= 1.0);
+    }
+
+    #[test]
+    fn online_retuner_moves_toward_idle_pool_and_respects_deadband() {
+        let cfg = RetuneConfig { window: 4, ..Default::default() };
+        let mut r = OnlineRetuner::new(0.5, cfg);
+        // wide pool twice as busy: ratio must come down at the epoch edge
+        for _ in 0..3 {
+            assert_eq!(r.observe_step(2.0, 1.0), None);
+        }
+        let tuned = r.observe_step(2.0, 1.0).expect("epoch boundary must decide");
+        assert!(tuned < 0.5, "busier wide pool must shed columns: {tuned}");
+        assert_eq!(r.retunes, 1);
+        assert_eq!(r.ratio(), tuned);
+        // balanced window: deadband holds the ratio still
+        let mut r = OnlineRetuner::new(0.5, cfg);
+        for _ in 0..8 {
+            assert_eq!(r.observe_step(1.0, 0.97), None, "deadband must suppress churn");
+        }
+        assert_eq!(r.retunes, 0);
+        // narrow busier: ratio rises
+        let mut r = OnlineRetuner::new(0.5, cfg);
+        for _ in 0..3 {
+            r.observe_step(1.0, 3.0);
+        }
+        let up = r.observe_step(1.0, 3.0).unwrap();
+        assert!(up > 0.5);
+        // clamping
+        let mut r = OnlineRetuner::new(0.03, cfg);
+        for _ in 0..64 {
+            r.observe_step(10.0, 0.1);
+        }
+        assert!(r.ratio() >= cfg.min_ratio);
+    }
+
+    #[test]
+    fn width_retuner_steps_on_acceptance_evidence() {
+        let heads = vec![vec![0.6, 0.2, 0.1], vec![0.45, 0.15, 0.05], vec![0.3, 0.1, 0.04]];
+        let mut r = WidthRetuner::new(&heads, &[4, 8, 16], 8);
+        assert_eq!(r.width(), 8);
+        let expected = r.candidates[r.cur].2;
+        // drafter delivering the full expectation: width steps up
+        let mut stepped = None;
+        for _ in 0..r.window {
+            stepped = r.observe_acceptance(expected).map(|t| t.width());
+        }
+        assert_eq!(stepped, Some(16), "near-ceiling acceptance must widen the tree");
+        // drafter badly under-delivering: width steps back down
+        let mut stepped = None;
+        for _ in 0..r.window {
+            stepped = r.observe_acceptance(1.0).map(|t| t.width());
+        }
+        assert_eq!(stepped, Some(8), "wasted verification must narrow the tree");
+        assert_eq!(r.retunes, 2);
+    }
+}

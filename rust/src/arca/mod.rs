@@ -10,7 +10,13 @@
 //!    hetero-core simulator, initialized from isolated execution times),
 //!
 //! maximizing decode throughput = acceptance(width) / step_time(width).
+//!
+//! [`autotune`] closes the loop on real hardware: it calibrates the cost
+//! model's unit specs to *this* host with micro-benchmarks on the actual
+//! worker pools, and keeps re-tuning the executable partition (and the
+//! draft-tree width) online from measured step timings while serving.
 
+pub mod autotune;
 pub mod calibrate;
 pub mod contention;
 pub mod profiler;
@@ -18,8 +24,12 @@ pub mod search;
 pub mod strategy;
 pub mod tree_builder;
 
+pub use autotune::{
+    calibrate as calibrate_host, fit_unit, CalibrationConfig, HostProfile, OnlineRetuner,
+    ProbeSample, RetuneConfig, WidthRetuner,
+};
 pub use calibrate::{fit_profile, DatasetTarget, PAPER_TABLE1};
-pub use profiler::{profile, ProfileRow};
+pub use profiler::{profile, profile_host, ProfileRow};
 pub use strategy::{PartitionStrategy, SpeculativeStrategy};
 pub use tree_builder::build_tree;
 

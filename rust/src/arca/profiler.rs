@@ -80,6 +80,20 @@ pub fn profile(
     }
 }
 
+/// The ARCA profiling pass priced on a *host-calibrated* simulator instead
+/// of the Jetson model: width sweet spots and partition ratios then reflect
+/// this machine's measured pools, which is what the serving path deploys
+/// when `--autotune`/`--host-profile` is active.
+pub fn profile_host(
+    host: &crate::arca::autotune::HostProfile,
+    cfg: &ModelConfig,
+    drafter: &AccuracyProfile,
+    widths: &[usize],
+    ctx: usize,
+) -> ProfileOutcome {
+    profile(&host.simulator(), cfg, drafter, widths, ctx)
+}
+
 /// Simulated step time of a baseline engine (for Fig 9 comparisons).
 pub fn baseline_step_time(
     sim: &Simulator,

@@ -9,7 +9,7 @@ use crate::arca::search::refine_tree;
 use crate::arca::tree_builder::build_tree;
 use crate::exec::{HcmpParallelExecutor, SequentialExecutor, StepExecutor};
 use crate::hcmp::partition::{AttentionSplit, PartitionPlan};
-use crate::hcmp::schedule::{build_step, EngineKind};
+use crate::hcmp::schedule::{build_batched_step, build_step, EngineKind};
 use crate::hcmp::simulator::Simulator;
 use crate::model::forward::{RustModel, SegmentInput};
 use crate::model::kv_cache::KvCache;
@@ -388,26 +388,80 @@ pub fn fig10b(reps: usize) -> Fig10bOutcome {
 // alongside the simulator's predicted parallel ratio (ARCA validation)
 // ---------------------------------------------------------------------------
 
+/// One measured configuration: (batch, context, width) with wall-clock,
+/// the Jetson-calibrated prediction, and (when a host profile is supplied)
+/// the host-calibrated prediction.
+#[derive(Clone, Debug)]
+pub struct MeasuredRow {
+    pub batch: usize,
+    pub ctx: usize,
+    pub width: usize,
+    pub t_seq_ms: f64,
+    pub t_par_ms: f64,
+    /// Measured sequential/parallel step-time ratio.
+    pub measured_x: f64,
+    /// Uncalibrated (Jetson cost model) predicted ratio.
+    pub sim_x: f64,
+    /// Host-calibrated predicted ratio (None without a profile).
+    pub cal_x: Option<f64>,
+    /// Timed forwards per engine in this row — excludes warmup by
+    /// construction (asserted in a unit test).
+    pub timed_steps: u64,
+    /// Per-row warmup forwards per engine, run before the clock starts.
+    pub warmup_steps: u64,
+}
+
 pub struct MeasuredOutcome {
     pub text: String,
-    /// (width, t_seq_ms, t_par_ms, measured_speedup, simulated_speedup)
-    pub rows: Vec<(usize, f64, f64, f64, f64)>,
+    pub rows: Vec<MeasuredRow>,
     /// Measured wide/narrow load balance across the whole sweep.
     pub balance: f64,
+    /// Mean |predicted − measured| parallel ratio of the uncalibrated
+    /// (Jetson) cost model.
+    pub residual_uncal: f64,
+    /// Same residual for the host-calibrated model (None without one).
+    pub residual_cal: Option<f64>,
 }
 
 /// Measured decode-step wall-clock, sequential engine vs HCMP-parallel
-/// engine, on this host's tiny model across verification widths — the
-/// "execute for real" counterpart of Fig 9's simulated parallel factor.
-/// The simulator column prices the *same* model config and tree on the
-/// hetero-core cost model, so the table doubles as an ARCA calibration
-/// check (predicted vs measured parallel ratio).
+/// engine, on this host's tiny model — the "execute for real" counterpart
+/// of Fig 9's simulated parallel factor, swept over verification widths,
+/// batch sizes B ∈ {1, 4, 8} (weight-stream amortization changes the
+/// optimal split) and a long-context point. The predicted columns price
+/// the *same* shapes on the hetero-core cost model, so the table is the
+/// ARCA calibration check: `bench measured --autotune` adds the
+/// host-calibrated column and prints the predicted-vs-measured residual
+/// before and after calibration.
 pub fn measured(reps: usize) -> MeasuredOutcome {
-    let reps = reps.max(1);
+    measured_with(reps, None)
+}
+
+pub fn measured_with(reps: usize, host: Option<&crate::arca::HostProfile>) -> MeasuredOutcome {
+    measured_sweep(reps, host, &[1, 4, 8], &[4, 8, 16, 32])
+}
+
+/// The configurable core of `bench measured` (tests run a reduced sweep —
+/// debug-build forwards at B=8 are far too slow for the unit suite).
+pub fn measured_sweep(
+    reps: usize,
+    host: Option<&crate::arca::HostProfile>,
+    batches: &[usize],
+    widths: &[usize],
+) -> MeasuredOutcome {
+    assert!(!batches.is_empty() && !widths.is_empty());
+    let reps = reps.max(1) as u64;
+    // cold-start cost (pool spin-up, page faults, branch-predictor warm) is
+    // excluded per row: every (batch, ctx, width) point re-warms both
+    // engines before its timing loop starts
+    let warmup = (reps / 10).max(1);
     let cfg = ModelConfig::tiny();
     let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 7));
     let plan = PartitionPlan::hcmp(0.5);
-    let (wide, narrow) = crate::hcmp::auto_pool_sizes();
+    // with a host profile, measure on the exact pool sizes it was
+    // calibrated for — cal_x must score the hardware config it describes
+    let (wide, narrow) = host
+        .map(|h| (h.wide_threads, h.narrow_threads))
+        .unwrap_or_else(crate::hcmp::auto_pool_sizes);
     let mut seq = SequentialExecutor::new();
     let mut par = HcmpParallelExecutor::new(&plan, wide, narrow).expect("plan executable");
     let sim = Simulator::jetson_nx();
@@ -415,73 +469,152 @@ pub fn measured(reps: usize) -> MeasuredOutcome {
     let heads: Vec<Vec<f64>> =
         fit.profile.heads.iter().take(cfg.n_medusa).cloned().collect();
 
-    // a committed context so the dense span is realistic
-    let mut cache = KvCache::new(&cfg);
-    let ctx = 64usize.min(cfg.max_ctx / 2);
-    let pattern0 = CooPattern::causal(ctx);
-    let toks: Vec<u32> = (0..ctx as u32).map(|t| t % cfg.vocab as u32).collect();
-    let pos0: Vec<usize> = (0..ctx).collect();
-    let out = model.decode_step(&toks, &pos0, &pattern0, &cache);
-    cache.commit_prefix(&out.k_new, &out.v_new, ctx, ctx);
+    // committed contexts so the dense span is realistic: the standard point
+    // and a long-context point (dense-span traffic dominating)
+    let ctx_short = 64usize.min(cfg.max_ctx / 2);
+    let ctx_long = 160usize.min(cfg.max_ctx - 64);
+    let make_cache = |ctx: usize| -> KvCache {
+        let mut cache = KvCache::new(&cfg);
+        let pattern0 = CooPattern::causal(ctx);
+        let toks: Vec<u32> = (0..ctx as u32).map(|t| t % cfg.vocab as u32).collect();
+        let pos0: Vec<usize> = (0..ctx).collect();
+        let out = model.decode_step(&toks, &pos0, &pattern0, &cache);
+        cache.commit_prefix(&out.k_new, &out.v_new, ctx, ctx);
+        cache
+    };
+    let cache_short = make_cache(ctx_short);
+    let cache_long = make_cache(ctx_long);
+
+    // sweep: every width at every batch size on the short context, plus
+    // the long-context point at the smallest batch
+    let mut configs: Vec<(usize, usize)> = Vec::new(); // (batch, ctx)
+    for &b in batches {
+        configs.push((b.max(1), ctx_short));
+    }
+    configs.push((batches[0].max(1), ctx_long));
 
     let mut printer = TablePrinter::new(&[
+        "B",
+        "ctx",
         "width",
         "seq (ms)",
         "hcmp (ms)",
         "measured x",
-        "simulated x",
+        "sim x",
+        "cal x",
     ]);
-    let mut rows = Vec::new();
+    let mut rows: Vec<MeasuredRow> = Vec::new();
     let mut rng = Rng::new(99);
-    for w in [4usize, 8, 16, 32] {
-        let tree = build_tree(&heads, w);
-        let w = tree.width(); // the builder may exhaust candidates early
-        let pattern = tree.pattern();
-        let draft: Vec<u32> = (0..w).map(|_| rng.below(cfg.vocab) as u32).collect();
-        let pos = tree.positions(cache.len());
-        let seg = SegmentInput { tokens: &draft, pos: &pos, pattern: &pattern, cache: &cache };
-        let segs = std::slice::from_ref(&seg);
+    for (batch, ctx) in configs {
+        let cache = if ctx == ctx_long { &cache_long } else { &cache_short };
+        for &w in widths {
+            let tree = build_tree(&heads, w);
+            let w = tree.width(); // the builder may exhaust candidates early
+            let pattern = tree.pattern();
+            let pos = tree.positions(cache.len());
+            // one draft per lane (lanes share the committed context
+            // read-only — exactly the batched engine's memory shape)
+            let drafts: Vec<Vec<u32>> = (0..batch)
+                .map(|_| (0..w).map(|_| rng.below(cfg.vocab) as u32).collect())
+                .collect();
+            let segs: Vec<SegmentInput<'_>> = drafts
+                .iter()
+                .map(|d| SegmentInput { tokens: d, pos: &pos, pattern: &pattern, cache })
+                .collect();
 
-        let bench = |exec: &mut dyn StepExecutor| -> f64 {
-            exec.forward(&model, segs); // warmup
-            let t0 = Instant::now();
-            for _ in 0..reps {
-                std::hint::black_box(exec.forward(&model, segs));
-            }
-            t0.elapsed().as_secs_f64() / reps as f64
-        };
-        let t_seq = bench(&mut seq);
-        let t_par = bench(&mut par);
+            let bench = |exec: &mut dyn StepExecutor| -> (f64, u64, u64) {
+                let warm_from = exec.timings().steps;
+                for _ in 0..warmup {
+                    std::hint::black_box(exec.forward(&model, &segs));
+                }
+                let timed_from = exec.timings().steps;
+                let t0 = Instant::now();
+                for _ in 0..reps {
+                    std::hint::black_box(exec.forward(&model, &segs));
+                }
+                let secs = t0.elapsed().as_secs_f64() / reps as f64;
+                (secs, exec.timings().steps - timed_from, timed_from - warm_from)
+            };
+            let (t_seq, seq_timed, seq_warm) = bench(&mut seq);
+            let (t_par, par_timed, par_warm) = bench(&mut par);
+            debug_assert_eq!(seq_timed, par_timed);
+            debug_assert_eq!(seq_warm, par_warm);
 
-        let t_sim_seq = sim
-            .run(&build_step(&cfg, EngineKind::MedusaGpu, w, ctx, Some(&pattern), &PartitionPlan::gpu_only()))
-            .total;
-        let t_sim_par =
-            sim.run(&build_step(&cfg, EngineKind::Ghidorah, w, ctx, Some(&pattern), &plan)).total;
+            let t_sim_seq = sim
+                .run(&build_batched_step(
+                    &cfg,
+                    EngineKind::MedusaGpu,
+                    batch,
+                    w,
+                    ctx,
+                    Some(&pattern),
+                    &PartitionPlan::gpu_only(),
+                ))
+                .total;
+            let t_sim_par = sim
+                .run(&build_batched_step(
+                    &cfg,
+                    EngineKind::Ghidorah,
+                    batch,
+                    w,
+                    ctx,
+                    Some(&pattern),
+                    &plan,
+                ))
+                .total;
+            let measured_x = t_seq / t_par;
+            let sim_x = t_sim_seq / t_sim_par;
+            let cal_x =
+                host.map(|h| h.predict_parallel_ratio(&cfg, batch, w, ctx, Some(&pattern), &plan));
 
-        let measured_x = t_seq / t_par;
-        let sim_x = t_sim_seq / t_sim_par;
-        printer.row(vec![
-            w.to_string(),
-            format!("{:.2}", t_seq * 1e3),
-            format!("{:.2}", t_par * 1e3),
-            format!("{measured_x:.2}x"),
-            format!("{sim_x:.2}x"),
-        ]);
-        rows.push((w, t_seq * 1e3, t_par * 1e3, measured_x, sim_x));
+            printer.row(vec![
+                batch.to_string(),
+                ctx.to_string(),
+                w.to_string(),
+                format!("{:.2}", t_seq * 1e3),
+                format!("{:.2}", t_par * 1e3),
+                format!("{measured_x:.2}x"),
+                format!("{sim_x:.2}x"),
+                cal_x.map(|x| format!("{x:.2}x")).unwrap_or_else(|| "-".into()),
+            ]);
+            rows.push(MeasuredRow {
+                batch,
+                ctx,
+                width: w,
+                t_seq_ms: t_seq * 1e3,
+                t_par_ms: t_par * 1e3,
+                measured_x,
+                sim_x,
+                cal_x,
+                timed_steps: par_timed,
+                warmup_steps: par_warm,
+            });
+        }
     }
     let balance = par.timings().balance();
+    let residual_uncal =
+        rows.iter().map(|r| (r.sim_x - r.measured_x).abs()).sum::<f64>() / rows.len() as f64;
+    let residual_cal = host.map(|_| {
+        rows.iter().map(|r| (r.cal_x.unwrap() - r.measured_x).abs()).sum::<f64>()
+            / rows.len() as f64
+    });
+
     let mut text = format!(
-        "Measured — sequential vs HCMP-parallel wall-clock (tiny model, ctx {ctx}, \
-         pools {wide}+{narrow}, ratio {:.2})\n\
-         simulated column: the hetero-core cost model's predicted parallel ratio\n\n",
+        "Measured — sequential vs HCMP-parallel wall-clock (tiny model, \
+         pools {wide}+{narrow}, ratio {:.2}, {warmup} warmup + {reps} timed forwards per row)\n\
+         sim x: Jetson cost model's predicted parallel ratio; cal x: host-calibrated\n\n",
         plan.linear_ratio
     );
     text.push_str(&printer.render());
     text.push_str(&format!(
-        "\nmeasured wide/narrow balance: {balance:.2} (simulator target: ~1.0 at the tuned ratio)\n"
+        "\nmeasured wide/narrow balance: {balance:.2} (simulator target: ~1.0 at the tuned ratio)\n\
+         prediction residual, mean |predicted - measured|: uncalibrated {residual_uncal:.2}"
     ));
-    MeasuredOutcome { text, rows, balance }
+    match residual_cal {
+        Some(rc) => text.push_str(&format!(", calibrated {rc:.2}\n")),
+        None => text.push_str(" (run with --autotune for the calibrated column)\n"),
+    }
+    MeasuredOutcome { text, rows, balance, residual_uncal, residual_cal }
 }
 
 #[cfg(test)]
@@ -544,14 +677,128 @@ mod tests {
 
     #[test]
     fn measured_table_shapes_hold() {
-        let out = measured(1);
-        assert_eq!(out.rows.len(), 4);
-        for (w, t_seq, t_par, mx, sx) in &out.rows {
-            assert!(*t_seq > 0.0 && *t_par > 0.0, "w={w}: non-positive timing");
-            assert!(*mx > 0.0 && *sx > 0.0);
+        // a reduced sweep (debug forwards at B=8 are too slow for the unit
+        // suite); the full default sweep is covered release-gated below
+        let out = measured_sweep(1, None, &[1, 2], &[2, 4]);
+        // widths x (each batch at short ctx + smallest batch at long ctx)
+        assert_eq!(out.rows.len(), 6);
+        for r in &out.rows {
+            assert!(r.t_seq_ms > 0.0 && r.t_par_ms > 0.0, "{r:?}: non-positive timing");
+            assert!(r.measured_x > 0.0 && r.sim_x > 0.0);
+            assert!(r.cal_x.is_none(), "no host profile given");
         }
+        for b in [1usize, 2] {
+            assert!(out.rows.iter().any(|r| r.batch == b), "batch {b} missing");
+        }
+        let ctxs: std::collections::BTreeSet<usize> = out.rows.iter().map(|r| r.ctx).collect();
+        assert!(ctxs.len() >= 2, "long-context point missing: {ctxs:?}");
         assert!(out.balance > 0.0 && out.balance <= 1.0);
+        assert!(out.residual_uncal >= 0.0 && out.residual_cal.is_none());
         assert!(out.text.contains("measured x"));
+    }
+
+    /// The default `bench measured` sweep covers B ∈ {1, 4, 8} and a
+    /// long-context point (release-only: B=8 debug forwards are too slow).
+    #[test]
+    fn measured_default_sweep_covers_batches_and_long_ctx() {
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP: full measured sweep is release-only");
+            return;
+        }
+        let out = measured(1);
+        assert_eq!(out.rows.len(), 16);
+        for b in [1usize, 4, 8] {
+            assert!(out.rows.iter().any(|r| r.batch == b), "batch {b} missing");
+        }
+        let ctxs: std::collections::BTreeSet<usize> = out.rows.iter().map(|r| r.ctx).collect();
+        assert!(ctxs.len() >= 2, "long-context point missing: {ctxs:?}");
+    }
+
+    #[test]
+    fn measured_rows_exclude_per_row_warmup() {
+        // every row re-warms both engines; the timing loop counts exactly
+        // `reps` forwards on top (the old single-warmup bug let the first
+        // row absorb the cold-cache cost)
+        let reps = 2;
+        let out = measured_sweep(reps, None, &[1, 2], &[2, 4]);
+        for r in &out.rows {
+            assert_eq!(
+                r.timed_steps, reps as u64,
+                "row {r:?}: timed forwards must equal reps (warmup leaked into timing)"
+            );
+            assert!(r.warmup_steps >= 1, "row {r:?}: missing per-row warmup");
+        }
+    }
+
+    /// THE autotune acceptance criterion: after calibrating on this host,
+    /// the predicted-vs-measured parallel-ratio residual must be strictly
+    /// smaller than the uncalibrated (Jetson) cost model's at every tested
+    /// width, for B=1 and B=4. Release-gated (debug kernel ratios are
+    /// meaningless) and multi-core-gated like the perf smoke above.
+    #[test]
+    fn autotune_smoke_calibration_shrinks_residual() {
+        use crate::arca::autotune::{calibrate, CalibrationConfig};
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP: autotune smoke is release-only");
+            return;
+        }
+        if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 4 {
+            eprintln!("SKIP: needs a multi-core host");
+            return;
+        }
+        let (w, n) = crate::hcmp::auto_pool_sizes();
+        let host = calibrate(w, n, &CalibrationConfig::default());
+        let out = measured_with(5, Some(&host));
+        // per tested width, residual averaged over the B=1/B=4 rows (the
+        // averaging keeps one noisy timing sample on a shared CI runner
+        // from failing the whole job)
+        let mut widths: Vec<usize> = out.rows.iter().map(|r| r.width).collect();
+        widths.sort_unstable();
+        widths.dedup();
+        for w in widths {
+            let rows: Vec<_> = out
+                .rows
+                .iter()
+                .filter(|r| r.width == w && (r.batch == 1 || r.batch == 4))
+                .collect();
+            let uncal = rows.iter().map(|r| (r.sim_x - r.measured_x).abs()).sum::<f64>()
+                / rows.len() as f64;
+            let cal = rows
+                .iter()
+                .map(|r| (r.cal_x.unwrap() - r.measured_x).abs())
+                .sum::<f64>()
+                / rows.len() as f64;
+            assert!(
+                cal < uncal,
+                "w={w}: calibrated residual {cal:.3} not below uncalibrated {uncal:.3} \
+                 over B∈{{1,4}} rows {:?}",
+                rows.iter()
+                    .map(|r| (r.batch, r.ctx, r.measured_x, r.sim_x, r.cal_x.unwrap()))
+                    .collect::<Vec<_>>()
+            );
+        }
+        let rc = out.residual_cal.unwrap();
+        assert!(
+            rc < out.residual_uncal,
+            "mean residual must shrink: cal {rc:.3} vs uncal {:.3}",
+            out.residual_uncal
+        );
+    }
+
+    #[test]
+    fn measured_with_profile_fills_calibrated_column() {
+        use crate::arca::autotune::{calibrate, CalibrationConfig};
+        if cfg!(debug_assertions) {
+            eprintln!("SKIP: calibration probes are release-only");
+            return;
+        }
+        let (w, n) = crate::hcmp::auto_pool_sizes();
+        let host = calibrate(w, n, &CalibrationConfig::quick());
+        let out = measured_with(1, Some(&host));
+        assert!(out.rows.iter().all(|r| r.cal_x.is_some()));
+        let rc = out.residual_cal.expect("calibrated residual");
+        assert!(rc.is_finite() && rc >= 0.0);
+        assert!(out.text.contains("calibrated"));
     }
 
     /// The acceptance-criteria smoke bench: on a multi-core host in release
@@ -569,13 +816,17 @@ mod tests {
             return;
         }
         let out = measured(5);
-        let w16 = out.rows.iter().find(|r| r.0 == 16).expect("w=16 row");
+        let w16 = out
+            .rows
+            .iter()
+            .find(|r| r.width == 16 && r.batch == 1 && r.ctx == 64)
+            .expect("w=16 B=1 row");
         assert!(
-            w16.3 > 1.0,
+            w16.measured_x > 1.0,
             "HCMP-parallel must beat sequential at w=16: {:.2}x (seq {:.2} ms, par {:.2} ms)",
-            w16.3,
-            w16.1,
-            w16.2
+            w16.measured_x,
+            w16.t_seq_ms,
+            w16.t_par_ms
         );
     }
 

@@ -7,5 +7,5 @@ pub mod experiments;
 pub mod table;
 
 pub use ablation::ablation;
-pub use experiments::{fig10a, fig10b, fig9, measured, table1};
+pub use experiments::{fig10a, fig10b, fig9, measured, measured_sweep, measured_with, table1};
 pub use table::TablePrinter;

@@ -31,6 +31,24 @@ struct Inner {
     wide_busy_s: f64,
     /// Busy occupancy-seconds of the narrow-unit (CPU-analogue) pool.
     narrow_busy_s: f64,
+    /// Per-unit busy time accumulated since the last plan swap — the
+    /// measured side of the prediction residual (comparing the current
+    /// plan's prediction against lifetime-cumulative balance would let
+    /// pre-swap history dominate the metric forever).
+    era_wide_busy_s: f64,
+    era_narrow_busy_s: f64,
+    /// ARCA online re-tuning: plan swaps applied since startup (ratio
+    /// nudges + draft-tree width changes).
+    retune_count: u64,
+    /// The wide-unit column ratio currently executing (None: engine has no
+    /// executable partition plan).
+    current_ratio: Option<f64>,
+    /// Draft-tree width used for new admissions.
+    current_width: Option<u64>,
+    /// The calibrated cost model's predicted wide/narrow balance for the
+    /// deployed plan; `stats` reports |predicted - measured| as the
+    /// prediction residual.
+    predicted_balance: Option<f64>,
 }
 
 /// Thread-safe metrics sink shared by the scheduler and the server.
@@ -92,12 +110,64 @@ impl Metrics {
         let mut m = self.inner.lock().unwrap();
         m.wide_busy_s += wide_s.max(0.0);
         m.narrow_busy_s += narrow_s.max(0.0);
+        m.era_wide_busy_s += wide_s.max(0.0);
+        m.era_narrow_busy_s += narrow_s.max(0.0);
     }
 
     /// Cumulative per-unit busy occupancy-seconds (wide, narrow).
     pub fn unit_busy(&self) -> (f64, f64) {
         let m = self.inner.lock().unwrap();
         (m.wide_busy_s, m.narrow_busy_s)
+    }
+
+    /// Record the initial deployed plan (called once at engine startup).
+    pub fn set_plan(&self, ratio: Option<f64>, width: usize, predicted_balance: Option<f64>) {
+        let mut m = self.inner.lock().unwrap();
+        m.current_ratio = ratio;
+        m.current_width = Some(width as u64);
+        m.predicted_balance = predicted_balance;
+    }
+
+    /// Record an applied online ratio re-tune. Starts a new measurement
+    /// era: the residual now scores the new plan only.
+    pub fn record_retune(&self, new_ratio: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.retune_count += 1;
+        m.current_ratio = Some(new_ratio);
+        m.era_wide_busy_s = 0.0;
+        m.era_narrow_busy_s = 0.0;
+    }
+
+    /// Refresh the cost model's predicted balance after a plan swap, so
+    /// the residual keeps scoring the plan actually executing.
+    pub fn set_predicted_balance(&self, predicted: f64) {
+        self.inner.lock().unwrap().predicted_balance = Some(predicted);
+    }
+
+    /// Drop the predicted balance (the executing plan is no longer the one
+    /// it described); `prediction_residual` reports null until refreshed.
+    pub fn clear_predicted_balance(&self) {
+        self.inner.lock().unwrap().predicted_balance = None;
+    }
+
+    /// Record an applied draft-tree width re-tune (also starts a new
+    /// measurement era — the workload shape changed).
+    pub fn record_width_retune(&self, new_width: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.retune_count += 1;
+        m.current_width = Some(new_width as u64);
+        m.era_wide_busy_s = 0.0;
+        m.era_narrow_busy_s = 0.0;
+    }
+
+    /// Plan swaps applied so far (ratio + width).
+    pub fn retunes(&self) -> u64 {
+        self.inner.lock().unwrap().retune_count
+    }
+
+    /// The currently executing wide-unit column ratio, if any.
+    pub fn current_ratio(&self) -> Option<f64> {
+        self.inner.lock().unwrap().current_ratio
     }
 
     pub fn requests(&self) -> u64 {
@@ -126,6 +196,16 @@ impl Metrics {
         let busy_hi = m.wide_busy_s.max(m.narrow_busy_s);
         let unit_balance =
             if busy_hi > 0.0 { m.wide_busy_s.min(m.narrow_busy_s) / busy_hi } else { 1.0 };
+        let opt = |x: Option<f64>| x.map(Json::num).unwrap_or(Json::Null);
+        // prediction residual: calibrated-model balance vs the balance
+        // measured since the last plan swap (the plan the prediction is of)
+        let era_hi = m.era_wide_busy_s.max(m.era_narrow_busy_s);
+        let residual = match m.predicted_balance {
+            Some(p) if era_hi > 0.0 => {
+                Json::num((p - m.era_wide_busy_s.min(m.era_narrow_busy_s) / era_hi).abs())
+            }
+            _ => Json::Null,
+        };
         Json::obj(vec![
             ("requests", Json::num(m.requests as f64)),
             ("tokens_out", Json::num(m.tokens_out as f64)),
@@ -145,6 +225,11 @@ impl Metrics {
             ("unit_wide_busy_s", Json::num(m.wide_busy_s)),
             ("unit_narrow_busy_s", Json::num(m.narrow_busy_s)),
             ("unit_balance", Json::num(unit_balance)),
+            ("retune_count", Json::num(m.retune_count as f64)),
+            ("current_ratio", opt(m.current_ratio)),
+            ("current_width", opt(m.current_width.map(|w| w as f64))),
+            ("predicted_balance", opt(m.predicted_balance)),
+            ("prediction_residual", residual),
         ])
     }
 }
@@ -197,6 +282,30 @@ mod tests {
         assert!((j.get("unit_wide_busy_s").unwrap().as_f64().unwrap() - 0.8).abs() < 1e-12);
         assert!((j.get("unit_narrow_busy_s").unwrap().as_f64().unwrap() - 0.4).abs() < 1e-12);
         assert!((j.get("unit_balance").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retune_surface_tracks_plan_swaps_and_residual() {
+        let m = Metrics::new();
+        // no plan: nulls, zero count
+        let j = m.snapshot();
+        assert_eq!(j.get("retune_count").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("current_ratio"), Some(&Json::Null));
+        assert_eq!(j.get("prediction_residual"), Some(&Json::Null));
+
+        m.set_plan(Some(0.5), 16, Some(0.9));
+        m.record_retune(0.44);
+        m.record_width_retune(8);
+        m.record_unit_busy(1.0, 0.6); // measured balance 0.6
+        let j = m.snapshot();
+        assert_eq!(j.get("retune_count").unwrap().as_usize(), Some(2));
+        assert_eq!(m.retunes(), 2);
+        let r = j.get("current_ratio").unwrap().as_f64().unwrap();
+        assert!((r - 0.44).abs() < 1e-12);
+        assert_eq!(m.current_ratio(), Some(0.44));
+        assert_eq!(j.get("current_width").unwrap().as_usize(), Some(8));
+        let res = j.get("prediction_residual").unwrap().as_f64().unwrap();
+        assert!((res - (0.9f64 - 0.6).abs()).abs() < 1e-9, "residual {res}");
     }
 
     #[test]

@@ -13,5 +13,5 @@ pub mod scheduler;
 pub mod server;
 
 pub use metrics::Metrics;
-pub use scheduler::{EngineChoice, Request, Response, Scheduler, DEFAULT_MAX_BATCH};
+pub use scheduler::{EngineChoice, Request, Response, RetunePolicy, Scheduler, DEFAULT_MAX_BATCH};
 pub use server::Server;

@@ -12,6 +12,14 @@
 //! Metrics: the worker records per-step batch occupancy and per-request
 //! queue delay (submit → lane admission), both surfaced through the
 //! server's `stats` command.
+//!
+//! Online re-tuning (ARCA `autotune`): when spawned with a
+//! [`RetunePolicy`], the worker feeds each step's measured per-unit busy
+//! delta into the ratio re-tuner and each finished request's acceptance
+//! into the width re-tuner; decided plan swaps are applied **between**
+//! steps (`retune_ratio` on the engine, a fresh ARCA tree for future
+//! admissions), so token streams stay bitwise identical while the split
+//! keeps adapting to the measured load.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc;
@@ -20,6 +28,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::arca::autotune::{OnlineRetuner, WidthRetuner};
 use crate::model::kv_cache::BatchKvCache;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::model::ModelConfig;
@@ -30,6 +39,33 @@ use super::metrics::Metrics;
 
 /// Default maximum number of sequences decoded per shared step.
 pub const DEFAULT_MAX_BATCH: usize = 8;
+
+/// What the engine worker re-tunes online (all parts optional; the empty
+/// policy reproduces the static scheduler exactly).
+#[derive(Default)]
+pub struct RetunePolicy {
+    /// Nudges the executable linear column ratio from measured balance.
+    pub ratio: Option<OnlineRetuner>,
+    /// Swaps the ARCA tree for future admissions from measured acceptance.
+    pub width: Option<WidthRetuner>,
+    /// The calibrated cost model's predicted balance for the deployed
+    /// plan — surfaced in `stats` next to the measured balance as the
+    /// prediction residual.
+    pub predicted_balance: Option<f64>,
+    /// Re-predicts the plan balance for a `(ratio, tree width)` pair
+    /// (calibrated model), so `prediction_residual` keeps scoring the plan
+    /// actually executing after online re-tunes — both ratio nudges and
+    /// width swaps — rather than the startup plan.
+    #[allow(clippy::type_complexity)]
+    pub predict_balance: Option<Box<dyn Fn(f64, usize) -> f64 + Send>>,
+}
+
+impl RetunePolicy {
+    /// The static (no re-tuning) policy.
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
 
 /// Which decode engine a request wants.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -77,6 +113,13 @@ struct InFlight {
     reply: Reply,
     enqueued: Instant,
     admitted: Instant,
+    /// True for tree-verification requests — only their acceptance feeds
+    /// the width re-tuner (sequential lanes always accept exactly 1).
+    speculative: bool,
+    /// Width of the tree this lane was admitted with: after a width swap,
+    /// lanes still finishing on the previous tree must not be scored
+    /// against the new tree's expectation.
+    admitted_width: usize,
 }
 
 /// The scheduler owns the engine on a worker thread; `submit` is
@@ -122,6 +165,24 @@ impl Scheduler {
         E: BatchedStepExecutor + 'static,
         F: FnOnce() -> anyhow::Result<E> + Send + 'static,
     {
+        Self::spawn_tuned(factory, tree, prefill_width, top_k, max_batch, RetunePolicy::none())
+    }
+
+    /// Like [`Scheduler::spawn_with`], with an ARCA online re-tuning
+    /// policy: measured step timings keep adjusting the engine's partition
+    /// ratio (and the serving tree width) at step boundaries.
+    pub fn spawn_tuned<E, F>(
+        factory: F,
+        tree: VerificationTree,
+        prefill_width: usize,
+        top_k: usize,
+        max_batch: usize,
+        mut policy: RetunePolicy,
+    ) -> Self
+    where
+        E: BatchedStepExecutor + 'static,
+        F: FnOnce() -> anyhow::Result<E> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Job>();
         let metrics = Arc::new(Metrics::new());
         let metrics_w = Arc::clone(&metrics);
@@ -143,6 +204,27 @@ impl Scheduler {
                 let tokenizer = ByteTokenizer::new();
                 let mut caches = BatchKvCache::new(&cfg, max_batch);
                 let mut dec = BatchedDecoder::new(prefill_width, top_k);
+                // re-tuning: the policy's width candidate replaces the
+                // static ARCA tree for admissions, and the engine starts on
+                // the retuner's (clamped) ratio
+                let mut tree = tree;
+                if let Some(wr) = &policy.width {
+                    tree = wr.tree().clone();
+                }
+                // an engine without an executable partition plan rejects
+                // the initial ratio: drop the retuner entirely so `stats`
+                // never reports a ratio nothing is executing and the
+                // retuner's state cannot drift from the hardware
+                if let Some(rt) = &policy.ratio {
+                    if !engine.retune_ratio(rt.ratio()) {
+                        policy.ratio = None;
+                    }
+                }
+                metrics_w.set_plan(
+                    policy.ratio.as_ref().map(|r| r.ratio()),
+                    tree.width(),
+                    policy.predicted_balance,
+                );
                 let mut queue: VecDeque<Job> = VecDeque::new();
                 let mut inflight: HashMap<u64, InFlight> = HashMap::new();
                 let mut next_seq: u64 = 0;
@@ -190,6 +272,7 @@ impl Scheduler {
                         };
                         let sid = next_seq;
                         next_seq += 1;
+                        let admitted_width = seq_tree.width();
                         if let Err(e) =
                             dec.admit(&engine, sid, prompt, max_new, seq_tree, lane, &caches)
                         {
@@ -199,7 +282,14 @@ impl Scheduler {
                         }
                         inflight.insert(
                             sid,
-                            InFlight { req_id: req.id, reply, enqueued, admitted: Instant::now() },
+                            InFlight {
+                                req_id: req.id,
+                                reply,
+                                enqueued,
+                                admitted: Instant::now(),
+                                speculative: req.engine == EngineChoice::Ghidorah,
+                                admitted_width,
+                            },
                         );
                     }
 
@@ -211,8 +301,28 @@ impl Scheduler {
                     let step_result = dec.step(&mut engine, &mut caches);
                     metrics_w.record_step(occupancy, step_started.elapsed().as_secs_f64());
                     if let Some((wide, narrow)) = engine.unit_busy() {
-                        metrics_w.record_unit_busy(wide - unit_prev.0, narrow - unit_prev.1);
+                        let (dw, dn) = (wide - unit_prev.0, narrow - unit_prev.1);
+                        metrics_w.record_unit_busy(dw, dn);
                         unit_prev = (wide, narrow);
+                        // ratio re-tuning: measured balance in, plan swap
+                        // out — applied here, at the step boundary, so the
+                        // next forward re-shards without touching any
+                        // in-flight math
+                        if let Some(rt) = policy.ratio.as_mut() {
+                            if let Some(new_ratio) = rt.observe_step(dw, dn) {
+                                if engine.retune_ratio(new_ratio) {
+                                    metrics_w.record_retune(new_ratio);
+                                    // refresh (or, without a predictor,
+                                    // clear) the prediction so the residual
+                                    // never scores a stale plan
+                                    match &policy.predict_balance {
+                                        Some(f) => metrics_w
+                                            .set_predicted_balance(f(new_ratio, tree.width())),
+                                        None => metrics_w.clear_predicted_balance(),
+                                    }
+                                }
+                            }
+                        }
                     }
                     let deliver = |f: crate::spec::batch::FinishedSeq,
                                    caches: &mut BatchKvCache,
@@ -242,6 +352,51 @@ impl Scheduler {
                     };
                     match step_result {
                         Ok(finished) => {
+                            // width re-tuning: finished requests report how
+                            // much of the tree's expected acceptance the
+                            // drafter realized — fed per verification step
+                            // (a 50-step request is 50 samples, not 1), and
+                            // only from lanes admitted under the *current*
+                            // candidate so a swap's stragglers don't get
+                            // scored against the wrong expectation. A
+                            // decided swap only affects future admissions
+                            // (in-flight lanes keep their tree — parity is
+                            // tree-independent).
+                            if let Some(wr) = policy.width.as_mut() {
+                                let mut new_tree: Option<VerificationTree> = None;
+                                'feed: for f in &finished {
+                                    let Some(fl) = inflight.get(&f.id) else { continue };
+                                    if !fl.speculative
+                                        || f.outcome.steps == 0
+                                        || fl.admitted_width != wr.width()
+                                    {
+                                        continue;
+                                    }
+                                    for _ in 0..f.outcome.steps {
+                                        if let Some(t) =
+                                            wr.observe_acceptance(f.outcome.mean_acceptance())
+                                        {
+                                            new_tree = Some(t.clone());
+                                            break 'feed;
+                                        }
+                                    }
+                                }
+                                if let Some(t) = new_tree {
+                                    metrics_w.record_width_retune(t.width());
+                                    tree = t;
+                                    // the executing ratio is only known
+                                    // through the ratio retuner; without
+                                    // one, clear the stale prediction
+                                    // rather than score the new tree
+                                    // against the startup width's number
+                                    match (&policy.predict_balance, &policy.ratio) {
+                                        (Some(f), Some(rt)) => metrics_w
+                                            .set_predicted_balance(f(rt.ratio(), tree.width())),
+                                        (Some(_), None) => metrics_w.clear_predicted_balance(),
+                                        _ => {}
+                                    }
+                                }
+                            }
                             for f in finished {
                                 deliver(f, &mut caches, &mut inflight);
                             }
@@ -439,6 +594,71 @@ mod tests {
         let stats = s.metrics.snapshot();
         let bal = stats.get("unit_balance").unwrap().as_f64().unwrap();
         assert!(bal > 0.0 && bal <= 1.0, "balance out of range: {bal}");
+    }
+
+    #[test]
+    fn tuned_scheduler_retunes_and_stays_lossless() {
+        use crate::arca::autotune::{OnlineRetuner, RetuneConfig};
+        use crate::exec::ExecEngine;
+        use crate::hcmp::PartitionPlan;
+
+        // reference: the static serial engine
+        let want = sched()
+            .submit(Request {
+                id: 0,
+                prompt: "tune me".into(),
+                max_new: 12,
+                engine: EngineChoice::Ghidorah,
+            })
+            .unwrap()
+            .text;
+
+        // a deliberately lopsided plan + an aggressive re-tuner: the wide
+        // pool is ~20x busier, so epochs must keep nudging the ratio down
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let start_ratio = 0.95;
+        let policy = RetunePolicy {
+            ratio: Some(OnlineRetuner::new(
+                start_ratio,
+                RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
+            )),
+            predicted_balance: Some(1.0),
+            ..Default::default()
+        };
+        let s = Scheduler::spawn_tuned(
+            move || ExecEngine::parallel(model, &PartitionPlan::hcmp(start_ratio), 2, 2),
+            VerificationTree::chain(3),
+            8,
+            4,
+            DEFAULT_MAX_BATCH,
+            policy,
+        );
+        for id in 1..=3 {
+            let got = s
+                .submit(Request {
+                    id,
+                    prompt: "tune me".into(),
+                    max_new: 12,
+                    engine: EngineChoice::Ghidorah,
+                })
+                .unwrap();
+            assert_eq!(got.text, want, "re-tuned engine diverged on request {id}");
+        }
+        assert!(s.metrics.retunes() > 0, "lopsided plan never re-tuned");
+        let ratio = s.metrics.current_ratio().expect("ratio surfaced");
+        assert!(ratio < start_ratio, "ratio should move toward the idle pool: {ratio}");
+        let stats = s.metrics.snapshot();
+        // residual is Null when the newest plan era has no measured steps
+        // yet (a retune can land on the very last step), and this policy
+        // carries no re-predictor, so after the first retune the startup
+        // prediction must have been cleared rather than left stale
+        assert!(stats.get("prediction_residual").is_some());
+        assert_eq!(stats.get("predicted_balance"), Some(&crate::util::json::Json::Null));
+        assert_eq!(
+            stats.get("retune_count").unwrap().as_usize().unwrap() as u64,
+            s.metrics.retunes()
+        );
     }
 
     #[test]

@@ -32,6 +32,16 @@ pub trait StepExecutor: Send {
     fn unit_busy(&self) -> Option<(f64, f64)> {
         None
     }
+    /// Swap the executable column ratio for subsequent forwards (ARCA
+    /// online re-tuning; only valid between steps). Returns false for
+    /// executors without a partition plan (the default).
+    fn retune_ratio(&mut self, _ratio: f64) -> bool {
+        false
+    }
+    /// The currently executing wide-unit column ratio, if any.
+    fn current_ratio(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Measured execution-side timings, the wall-clock counterpart of the
@@ -78,6 +88,80 @@ impl ExecTimings {
     }
 }
 
+/// Sliding window over per-step `ExecTimings` deltas — the measured signal
+/// ARCA's online re-tuner consumes. The scheduler pushes one (wide, narrow)
+/// busy-occupancy delta per batched step; the window reports the balance of
+/// the last `capacity` steps, so a tuning decision reflects recent load,
+/// not the serve-lifetime average.
+#[derive(Clone, Debug)]
+pub struct BalanceWindow {
+    cap: usize,
+    /// (wide_busy_s, narrow_busy_s) per step, newest overwriting oldest.
+    ring: Vec<(f64, f64)>,
+    next: usize,
+    pushed: u64,
+}
+
+impl BalanceWindow {
+    pub fn new(capacity: usize) -> Self {
+        Self { cap: capacity.max(1), ring: Vec::new(), next: 0, pushed: 0 }
+    }
+
+    /// Record one step's measured per-unit busy delta.
+    pub fn push(&mut self, wide_s: f64, narrow_s: f64) {
+        let sample = (wide_s.max(0.0), narrow_s.max(0.0));
+        if self.ring.len() < self.cap {
+            self.ring.push(sample);
+        } else {
+            self.ring[self.next] = sample;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.pushed += 1;
+    }
+
+    /// Steps currently in the window.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// True once `capacity` new steps have accumulated since the last
+    /// [`Self::reset_epoch`] — the re-tuner's decision boundary.
+    pub fn epoch_full(&self) -> bool {
+        self.pushed >= self.cap as u64
+    }
+
+    /// Start a new decision epoch (samples stay for the rolling stats).
+    pub fn reset_epoch(&mut self) {
+        self.pushed = 0;
+    }
+
+    /// Windowed busy sums (wide, narrow).
+    pub fn busy(&self) -> (f64, f64) {
+        let mut w = 0.0;
+        let mut n = 0.0;
+        for &(a, b) in &self.ring {
+            w += a;
+            n += b;
+        }
+        (w, n)
+    }
+
+    /// Windowed load balance: idler / busier unit occupancy, 1.0 when
+    /// balanced or empty (same definition as [`ExecTimings::balance`]).
+    pub fn balance(&self) -> f64 {
+        let (w, n) = self.busy();
+        let hi = w.max(n);
+        if hi <= 0.0 {
+            return 1.0;
+        }
+        w.min(n) / hi
+    }
+}
+
 /// A pure-Rust decode engine — model weights plus a pluggable step
 /// executor — usable anywhere a [`BatchedStepExecutor`] is (the
 /// continuous-batching scheduler, the batched decoder, benches).
@@ -111,6 +195,17 @@ impl ExecEngine {
         self.exec.timings()
     }
 
+    /// Swap the executable column ratio between steps (ARCA re-tuning);
+    /// false when the underlying executor has no partition plan.
+    pub fn retune_ratio(&mut self, ratio: f64) -> bool {
+        self.exec.retune_ratio(ratio)
+    }
+
+    /// The currently executing wide-unit column ratio, if any.
+    pub fn current_ratio(&self) -> Option<f64> {
+        self.exec.current_ratio()
+    }
+
     pub fn model(&self) -> &RustModel {
         &self.model
     }
@@ -135,6 +230,10 @@ impl BatchedStepExecutor for ExecEngine {
     fn unit_busy(&self) -> Option<(f64, f64)> {
         self.exec.unit_busy()
     }
+
+    fn retune_ratio(&mut self, ratio: f64) -> bool {
+        ExecEngine::retune_ratio(self, ratio)
+    }
 }
 
 #[cfg(test)]
@@ -151,5 +250,31 @@ mod tests {
         assert!((r.cpu_busy - 0.2).abs() < 1e-12);
         assert_eq!(ExecTimings::default().balance(), 1.0);
         assert_eq!(ExecTimings::default().to_sim_report().total, 0.0);
+    }
+
+    #[test]
+    fn balance_window_rolls_and_epochs() {
+        let mut w = BalanceWindow::new(3);
+        assert_eq!(w.balance(), 1.0);
+        assert!(!w.epoch_full());
+        w.push(1.0, 0.5);
+        w.push(1.0, 0.5);
+        w.push(1.0, 0.5);
+        assert!(w.epoch_full());
+        assert!((w.balance() - 0.5).abs() < 1e-12);
+        w.reset_epoch();
+        assert!(!w.epoch_full());
+        // rolling: three perfectly balanced steps evict the skewed ones
+        w.push(1.0, 1.0);
+        w.push(1.0, 1.0);
+        w.push(1.0, 1.0);
+        assert!(w.epoch_full());
+        assert_eq!(w.len(), 3);
+        assert!((w.balance() - 1.0).abs() < 1e-12);
+        // negative deltas (engine counter reset) clamp to zero
+        let mut w = BalanceWindow::new(2);
+        w.push(-1.0, 1.0);
+        assert_eq!(w.busy(), (0.0, 1.0));
+        assert_eq!(w.balance(), 0.0);
     }
 }

@@ -154,6 +154,17 @@ impl StepExecutor for HcmpParallelExecutor {
         let t = self.timings();
         Some((t.wide_busy_s, t.narrow_busy_s))
     }
+
+    /// Move the wide/narrow column boundary for subsequent forwards. The
+    /// pools persist; only the shard split changes, which preserves the
+    /// bitwise guarantee across the swap (`tests/retune_parity.rs`).
+    fn retune_ratio(&mut self, ratio: f64) -> bool {
+        self.plan.set_ratio(ratio).is_ok()
+    }
+
+    fn current_ratio(&self) -> Option<f64> {
+        Some(self.plan.linear_ratio)
+    }
 }
 
 struct ParallelOps<'e> {

@@ -84,6 +84,20 @@ impl Op {
         }
     }
 
+    /// The FLOP rate `unit` sustains on this op at verification width `w`:
+    /// sweet-spot decay applies to GEMM tiles (register/L1 pressure,
+    /// §IV-C), irregular sparse gathers run at the calibrated `sparse_eff`
+    /// fraction of peak, and streaming attention spans run at peak. One
+    /// policy shared by [`Op::time_on`], [`sum_time`], and the host
+    /// calibrator's fit so predictions and fits can never disagree.
+    pub fn rate_on(&self, unit: &UnitSpec, w: usize) -> f64 {
+        match self {
+            Op::Gemm { .. } => unit.effective_flops(w),
+            Op::AttnSparse { .. } => unit.sparse_flops(),
+            _ => unit.peak_flops,
+        }
+    }
+
     /// Compute time on `unit` at verification width `w`, given achievable
     /// bandwidth `bw` (bytes/s, already contention-adjusted).
     pub fn time_on(&self, unit: &UnitSpec, w: usize, bw: f64) -> f64 {
@@ -94,7 +108,7 @@ impl Op {
             }
             _ => self.flops(),
         };
-        let compute = flops / unit.effective_flops(w);
+        let compute = flops / self.rate_on(unit, w);
         let memory = self.bytes() / bw;
         unit.launch_overhead + compute.max(memory)
     }
@@ -115,15 +129,7 @@ pub fn sum_time(ops: &[Op], unit: &UnitSpec, w: usize, bw: f64) -> f64 {
             Some(m) if m > 0 => op.flops() * unit.quantize_rows(m) as f64 / m as f64,
             _ => op.flops(),
         };
-        // Sweet-spot decay models register/L1 pressure of wide GEMM tiles
-        // (the paper's §IV-C CPU observation). Streaming attention spans do
-        // not tile on the width dimension, so they run at peak.
-        let rate = if matches!(op, Op::Gemm { .. }) {
-            unit.effective_flops(w)
-        } else {
-            unit.peak_flops
-        };
-        compute += flops / rate;
+        compute += flops / op.rate_on(unit, w);
         memory += op.bytes() / bw;
         launch += unit.launch_overhead;
     }

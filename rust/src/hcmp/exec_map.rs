@@ -35,6 +35,20 @@ impl ExecPlan {
     pub fn wide_cols(&self, n: usize) -> usize {
         (((n as f64) * self.linear_ratio).round() as usize).min(n)
     }
+
+    /// Re-point the wide/narrow column boundary (ARCA online re-tuning).
+    /// Pool sizes are fixed for the engine's lifetime; only the shard
+    /// boundary moves. Column re-sharding never reorders any element's
+    /// accumulation, so swaps **between** steps preserve the bitwise
+    /// guarantee. Errors outside [0, 1].
+    pub fn set_ratio(&mut self, ratio: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&ratio) && ratio.is_finite(),
+            "linear_ratio {ratio} outside [0, 1]"
+        );
+        self.linear_ratio = ratio;
+        Ok(())
+    }
 }
 
 /// Map a partition plan onto pools of the given sizes. Errors for plans
@@ -92,6 +106,16 @@ mod tests {
         assert_eq!(all.wide_cols(37), 37);
         let none = plan_to_exec(&PartitionPlan::hcmp(0.0), 1, 1).unwrap();
         assert_eq!(none.wide_cols(37), 0);
+    }
+
+    #[test]
+    fn set_ratio_moves_boundary_and_validates() {
+        let mut p = plan_to_exec(&PartitionPlan::hcmp(0.5), 2, 2).unwrap();
+        p.set_ratio(0.25).unwrap();
+        assert_eq!(p.wide_cols(100), 25);
+        assert!(p.set_ratio(1.5).is_err());
+        assert!(p.set_ratio(f64::NAN).is_err());
+        assert_eq!(p.linear_ratio, 0.25, "failed set must not clobber the ratio");
     }
 
     #[test]

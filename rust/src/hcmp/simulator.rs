@@ -46,6 +46,13 @@ impl Simulator {
         }
     }
 
+    /// A simulator over arbitrary unit specs — how a fitted host profile
+    /// (`arca::autotune::HostProfile`) prices schedules on *this* machine's
+    /// wide/narrow pools instead of the Jetson's GPU/CPU.
+    pub fn with_units(gpu: UnitSpec, cpu: UnitSpec, mem: UnifiedMemory) -> Self {
+        Self { gpu, cpu, mem }
+    }
+
     /// Price one phase: fixed-point on the bandwidth split (each unit's
     /// demand rate depends on its time, which depends on its bandwidth).
     fn phase_time(&self, phase: &Phase, width: usize) -> (f64, f64, f64) {

@@ -28,6 +28,12 @@ pub struct UnitSpec {
     pub sweet_spot: usize,
     /// Efficiency decay factor per doubling beyond the sweet spot.
     pub decay_per_doubling: f64,
+    /// Fraction of `peak_flops` the unit sustains on irregular sparse
+    /// (COO) attention work. 1.0 on the calibrated Jetson units (the paper
+    /// prices sparse spans at peak); host calibration fits it from the
+    /// sparse-attention probes, where gather-heavy code runs well below
+    /// the dense-GEMM rate.
+    pub sparse_eff: f64,
 }
 
 impl UnitSpec {
@@ -49,6 +55,7 @@ impl UnitSpec {
             wave: 32,
             sweet_spot: 64,
             decay_per_doubling: 0.95,
+            sparse_eff: 1.0,
         }
     }
 
@@ -66,7 +73,15 @@ impl UnitSpec {
             wave: 4,
             sweet_spot: 16,
             decay_per_doubling: 0.55,
+            sparse_eff: 1.0,
         }
+    }
+
+    /// Sustained FLOP/s on irregular sparse (COO) gather work — THE
+    /// sparse-rate policy, shared by the cost model (`Op::rate_on`) and
+    /// the host calibrator's probe predictions so they cannot diverge.
+    pub fn sparse_flops(&self) -> f64 {
+        self.peak_flops * self.sparse_eff
     }
 
     /// Effective FLOP/s at verification width `w` (sweet-spot decay).
@@ -84,6 +99,43 @@ impl UnitSpec {
             return 0;
         }
         m.div_ceil(self.wave) * self.wave
+    }
+
+    /// Serialize for the host-profile JSON (`arca::autotune`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("peak_flops", Json::num(self.peak_flops)),
+            ("solo_bw", Json::num(self.solo_bw)),
+            ("launch_overhead", Json::num(self.launch_overhead)),
+            ("wave", Json::num(self.wave as f64)),
+            ("sweet_spot", Json::num(self.sweet_spot as f64)),
+            ("decay_per_doubling", Json::num(self.decay_per_doubling)),
+            ("sparse_eff", Json::num(self.sparse_eff)),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        use crate::util::json::Json;
+        let f = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("unit missing '{k}'"))
+        };
+        Ok(Self {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("unit missing 'name'"))?
+                .to_string(),
+            peak_flops: f("peak_flops")?,
+            solo_bw: f("solo_bw")?,
+            launch_overhead: f("launch_overhead")?,
+            wave: (f("wave")? as usize).max(1),
+            sweet_spot: (f("sweet_spot")? as usize).max(1),
+            decay_per_doubling: f("decay_per_doubling")?,
+            // absent in older profiles: the paper's default (sparse at peak)
+            sparse_eff: j.get("sparse_eff").and_then(Json::as_f64).unwrap_or(1.0),
+        })
     }
 }
 
@@ -106,6 +158,28 @@ pub struct UnifiedMemory {
 impl UnifiedMemory {
     pub fn jetson_nx() -> Self {
         Self { dram_bw: 51.2e9, contention_penalty: 0.06, sync_latency: 80e-6 }
+    }
+
+    /// Serialize for the host-profile JSON (`arca::autotune`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("dram_bw", Json::num(self.dram_bw)),
+            ("contention_penalty", Json::num(self.contention_penalty)),
+            ("sync_latency", Json::num(self.sync_latency)),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Self> {
+        use crate::util::json::Json;
+        let f = |k: &str| {
+            j.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("memory missing '{k}'"))
+        };
+        Ok(Self {
+            dram_bw: f("dram_bw")?,
+            contention_penalty: f("contention_penalty")?,
+            sync_latency: f("sync_latency")?,
+        })
     }
 
     /// Effective per-unit bandwidths when the given demands (bytes/s at
@@ -169,6 +243,17 @@ mod tests {
         let roof = mem.dram_bw * (1.0 - mem.contention_penalty);
         assert!((out[0] + out[1] - roof).abs() < 1.0);
         assert!((out[0] - out[1]).abs() < 1.0);
+    }
+
+    #[test]
+    fn unit_and_memory_json_roundtrip() {
+        use crate::util::json::Json;
+        let gpu = UnitSpec::jetson_nx_gpu();
+        let back = UnitSpec::from_json(&Json::parse(&gpu.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(gpu, back);
+        let mem = UnifiedMemory::jetson_nx();
+        let back = UnifiedMemory::from_json(&Json::parse(&mem.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(mem, back);
     }
 
     #[test]

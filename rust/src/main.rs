@@ -8,12 +8,16 @@
 //!   info                                          artifact + model summary
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 
+use ghidorah::arca::autotune::{
+    CalibrationConfig, HostProfile, OnlineRetuner, RetuneConfig, WidthRetuner,
+};
 use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
 use ghidorah::arca::profiler::profile;
 use ghidorah::arca::tree_builder::build_tree;
 use ghidorah::bench;
-use ghidorah::coordinator::{EngineChoice, Request, Scheduler, Server};
+use ghidorah::coordinator::{EngineChoice, Request, RetunePolicy, Scheduler, Server};
 use ghidorah::exec::ExecEngine;
 use ghidorah::hcmp::simulator::Simulator;
 use ghidorah::hcmp::{auto_pool_sizes, PartitionPlan};
@@ -51,17 +55,28 @@ fn usage() -> ! {
 USAGE:
   ghidorah serve    [--addr 127.0.0.1:7331] [--width 16] [--topk 4] [--batch 8]
                     [--parallel hcmp[:RATIO]|seq] [--wide N] [--narrow M]
+                    [--autotune] [--host-profile PATH]
   ghidorah generate --prompt TEXT [--max-new 32] [--engine ghidorah|sequential] [--width 16]
                     [--parallel hcmp[:RATIO]|seq] [--wide N] [--narrow M]
-  ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256]
+                    [--autotune] [--host-profile PATH]
+  ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256] [--host-profile PATH]
   ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|all
+                    (measured also takes [--autotune] [--host-profile PATH])
   ghidorah info
 
   --parallel selects the pure-Rust execution engine: `hcmp[:RATIO]` runs the
   HCMP plan (wide-unit column ratio RATIO, default 0.5) concurrently on two
   worker pools sized --wide/--narrow (default: derived from the core count);
   `seq` runs the single-threaded engine. Without --parallel the PJRT/AOT
-  runtime serves (requires the `pjrt` feature + artifacts).",
+  runtime serves (requires the `pjrt` feature + artifacts). The env var
+  GHIDORAH_PARALLEL supplies the default when the flag is absent.
+
+  --autotune calibrates the ARCA cost model to THIS host (micro-benchmarks
+  on the real worker pools), picks the initial hcmp ratio from the
+  calibrated model when none was given explicitly, and keeps re-tuning the
+  split online from measured step timings while serving. --host-profile
+  PATH persists the calibration (with --autotune) or loads a previously
+  saved one (without).",
         ghidorah::version()
     );
     std::process::exit(2);
@@ -84,11 +99,12 @@ fn main() -> anyhow::Result<()> {
 
 /// Pick the ARCA tree for the tiny serving model: structure from the
 /// MT-Bench calibration profile at the requested width, capped to the
-/// model's head count.
-fn serving_tree(cfg: &ModelConfig, width: usize) -> VerificationTree {
+/// model's head count. Also returns the head accuracies so the width
+/// re-tuner can build its candidate trees from the same profile.
+fn serving_tree(cfg: &ModelConfig, width: usize) -> (VerificationTree, Vec<Vec<f64>>) {
     let fit = fit_profile(&PAPER_TABLE1[0]);
     let heads: Vec<Vec<f64>> = fit.profile.heads.iter().take(cfg.n_medusa).cloned().collect();
-    build_tree(&heads, width)
+    (build_tree(&heads, width), heads)
 }
 
 fn load_cfg() -> anyhow::Result<ModelConfig> {
@@ -118,14 +134,33 @@ fn load_cfg_or_tiny() -> ModelConfig {
 #[derive(Clone, Copy, Debug)]
 enum ParallelMode {
     Seq,
-    Hcmp(PartitionPlan),
+    Hcmp {
+        plan: PartitionPlan,
+        /// True when the user pinned the ratio (`hcmp:RATIO`) — autotune
+        /// then leaves the initial ratio alone.
+        explicit: bool,
+    },
 }
 
+/// Parse `--parallel`, falling back to the `GHIDORAH_PARALLEL` env var
+/// (the CI matrix's engine selector) when the flag is absent.
 fn parse_parallel(flags: &BTreeMap<String, String>) -> anyhow::Result<Option<ParallelMode>> {
-    let Some(s) = flags.get("parallel") else { return Ok(None) };
-    match s.as_str() {
+    let from_env;
+    let s = match flags.get("parallel") {
+        Some(s) => s.as_str(),
+        None => match std::env::var("GHIDORAH_PARALLEL") {
+            Ok(v) if !v.is_empty() => {
+                from_env = v;
+                from_env.as_str()
+            }
+            _ => return Ok(None),
+        },
+    };
+    match s {
         "seq" | "sequential" => Ok(Some(ParallelMode::Seq)),
-        "hcmp" | "true" => Ok(Some(ParallelMode::Hcmp(PartitionPlan::hcmp(0.5)))),
+        "hcmp" | "true" => {
+            Ok(Some(ParallelMode::Hcmp { plan: PartitionPlan::hcmp(0.5), explicit: false }))
+        }
         other => {
             let ratio = other
                 .strip_prefix("hcmp:")
@@ -134,9 +169,119 @@ fn parse_parallel(flags: &BTreeMap<String, String>) -> anyhow::Result<Option<Par
                 .ok_or_else(|| {
                     anyhow::anyhow!("bad --parallel '{other}' (want hcmp, hcmp:RATIO, or seq)")
                 })?;
-            Ok(Some(ParallelMode::Hcmp(PartitionPlan::hcmp(ratio))))
+            Ok(Some(ParallelMode::Hcmp { plan: PartitionPlan::hcmp(ratio), explicit: true }))
         }
     }
+}
+
+/// Resolve `--autotune` / `--host-profile`: calibrate on the real pools
+/// (saving when a path is given), or load a previously saved profile.
+fn resolve_host_profile(
+    flags: &BTreeMap<String, String>,
+    wide: usize,
+    narrow: usize,
+) -> anyhow::Result<Option<HostProfile>> {
+    let path = flags.get("host-profile").map(PathBuf::from);
+    if flags.get("autotune").is_none() {
+        return match path {
+            Some(p) => Ok(Some(HostProfile::load(&p)?)),
+            None => Ok(None),
+        };
+    }
+    eprintln!("ghidorah: calibrating host profile (pools {wide}+{narrow}) ...");
+    let profile = ghidorah::arca::autotune::calibrate(wide, narrow, &CalibrationConfig::default());
+    eprintln!(
+        "ghidorah: calibrated — wide {:.1} GFLOP/s (sweet spot {}), narrow {:.1} GFLOP/s, \
+         fit rms rel err {:.3}",
+        profile.wide.peak_flops / 1e9,
+        profile.wide.sweet_spot,
+        profile.narrow.peak_flops / 1e9,
+        profile.fit_rms_rel_err
+    );
+    if let Some(p) = &path {
+        profile.save(p)?;
+        eprintln!("ghidorah: host profile saved to {}", p.display());
+    }
+    Ok(Some(profile))
+}
+
+/// Fold a host profile into the engine mode: pick the initial hcmp ratio
+/// from the calibrated cost model (unless pinned on the command line) and
+/// build the online re-tuning policy.
+fn apply_autotune(
+    mode: ParallelMode,
+    profile: Option<&HostProfile>,
+    cfg: &ModelConfig,
+    tree: &VerificationTree,
+    heads: &[Vec<f64>],
+) -> (ParallelMode, RetunePolicy) {
+    let (Some(p), ParallelMode::Hcmp { plan, explicit }) = (profile, mode) else {
+        return (mode, RetunePolicy::none());
+    };
+    let pattern = tree.pattern();
+    let ctx = 64usize.min(cfg.max_ctx / 2); // representative serving context
+    let plan = if explicit {
+        plan
+    } else {
+        let (tuned, _t) = p.tune_plan(cfg, tree.width(), ctx, Some(&pattern));
+        eprintln!(
+            "ghidorah: autotune initial ratio {:.2} (host-calibrated tune_plan)",
+            tuned.linear_ratio
+        );
+        PartitionPlan::hcmp(tuned.linear_ratio)
+    };
+    let predicted = p.predict_balance(cfg, 1, tree.width(), ctx, Some(&pattern), &plan);
+    // width candidates: the serving width itself always qualifies (so the
+    // requested width is never silently overridden and the set is never
+    // empty); neighbors join only within the ARCA candidate range
+    let mut widths: Vec<usize> = vec![tree.width()];
+    for w in [tree.width() / 2, tree.width() * 2] {
+        if (2..=64).contains(&w) {
+            widths.push(w);
+        }
+    }
+    // re-prediction hook: after each online re-tune (ratio nudge or width
+    // swap), `stats` scores the plan actually executing, not the startup
+    // plan
+    let (p2, cfg2, heads2) = (p.clone(), cfg.clone(), heads.to_vec());
+    let policy = RetunePolicy {
+        ratio: Some(OnlineRetuner::new(plan.linear_ratio, RetuneConfig::default())),
+        width: Some(WidthRetuner::new(heads, &widths, tree.width())),
+        predicted_balance: Some(predicted),
+        predict_balance: Some(Box::new(move |r, w| {
+            let t = build_tree(&heads2, w);
+            p2.predict_balance(
+                &cfg2,
+                1,
+                t.width(),
+                ctx,
+                Some(&t.pattern()),
+                &PartitionPlan::hcmp(r),
+            )
+        })),
+    };
+    (ParallelMode::Hcmp { plan, explicit: true }, policy)
+}
+
+/// The shared `--autotune` wiring of serve/generate: resolve the host
+/// profile (hcmp engines only — calibration buys nothing for a sequential
+/// serve), reconcile pool sizes with it, and fold it into the engine mode
+/// + online re-tuning policy.
+fn autotune_wiring(
+    flags: &BTreeMap<String, String>,
+    mode: ParallelMode,
+    cfg: &ModelConfig,
+    tree: &VerificationTree,
+    heads: &[Vec<f64>],
+) -> anyhow::Result<(ParallelMode, usize, usize, RetunePolicy)> {
+    let (wide, narrow) = pool_sizes(flags)?;
+    let profile = match mode {
+        ParallelMode::Hcmp { .. } => resolve_host_profile(flags, wide, narrow)?,
+        ParallelMode::Seq => None,
+    };
+    let (wide, narrow) = reconcile_pools(flags, profile.as_ref(), wide, narrow);
+    let (mode, policy) = apply_autotune(mode, profile.as_ref(), cfg, tree, heads);
+    Ok((mode, wide, narrow, policy))
 }
 
 /// Pool sizes from --wide/--narrow, defaulting to the host-derived split.
@@ -145,6 +290,37 @@ fn pool_sizes(flags: &BTreeMap<String, String>) -> anyhow::Result<(usize, usize)
     let wide = flags.get("wide").map(|s| s.parse()).transpose()?.unwrap_or(auto_w);
     let narrow = flags.get("narrow").map(|s| s.parse()).transpose()?.unwrap_or(auto_n);
     Ok((wide.max(1), narrow.max(1)))
+}
+
+/// Reconcile serving pool sizes with a loaded host profile: the profile's
+/// predictions only describe the pools it was calibrated on, so unless the
+/// user pinned --wide/--narrow explicitly, serve on the calibrated sizes.
+/// An explicit mismatch keeps the user's pools but warns that the
+/// calibrated predictions are approximate.
+fn reconcile_pools(
+    flags: &BTreeMap<String, String>,
+    profile: Option<&HostProfile>,
+    wide: usize,
+    narrow: usize,
+) -> (usize, usize) {
+    let Some(p) = profile else { return (wide, narrow) };
+    if (wide, narrow) == (p.wide_threads, p.narrow_threads) {
+        return (wide, narrow);
+    }
+    if flags.contains_key("wide") || flags.contains_key("narrow") {
+        eprintln!(
+            "ghidorah: WARNING: pools {wide}+{narrow} differ from the host profile's \
+             calibrated {}+{} — calibrated predictions are approximate",
+            p.wide_threads, p.narrow_threads
+        );
+        (wide, narrow)
+    } else {
+        eprintln!(
+            "ghidorah: using the host profile's calibrated pools {}+{}",
+            p.wide_threads, p.narrow_threads
+        );
+        (p.wide_threads, p.narrow_threads)
+    }
 }
 
 /// Build the factory for a pure-Rust engine: artifact weights when loadable
@@ -170,7 +346,7 @@ fn rust_engine_factory(
         let model = RustModel::new(cfg, weights);
         match mode {
             ParallelMode::Seq => Ok(ExecEngine::sequential(model)),
-            ParallelMode::Hcmp(plan) => {
+            ParallelMode::Hcmp { plan, .. } => {
                 eprintln!(
                     "ghidorah: HCMP parallel engine (ratio {:.2}, pools {wide}+{narrow})",
                     plan.linear_ratio
@@ -196,7 +372,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         Some(_) => load_cfg_or_tiny(),
         None => load_cfg()?,
     };
-    let tree = serving_tree(&cfg, width);
+    let (tree, heads) = serving_tree(&cfg, width);
     eprintln!(
         "ghidorah: model d={} L={} medusa={} | ARCA tree width {} depth {} | max batch {}",
         cfg.d_model,
@@ -208,13 +384,14 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     );
     let sched = match parallel {
         Some(mode) => {
-            let (wide, narrow) = pool_sizes(flags)?;
-            Scheduler::spawn_with(
+            let (mode, wide, narrow, policy) = autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
+            Scheduler::spawn_tuned(
                 rust_engine_factory(cfg, mode, wide, narrow),
                 tree,
                 64,
                 top_k,
                 max_batch,
+                policy,
             )
         }
         None => Scheduler::spawn_with(
@@ -249,11 +426,18 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         Some(_) => load_cfg_or_tiny(),
         None => load_cfg()?,
     };
-    let tree = serving_tree(&cfg, width);
+    let (tree, heads) = serving_tree(&cfg, width);
     let sched = match parallel {
         Some(mode) => {
-            let (wide, narrow) = pool_sizes(flags)?;
-            Scheduler::spawn(rust_engine_factory(cfg, mode, wide, narrow), tree, 64, 4)
+            let (mode, wide, narrow, policy) = autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
+            Scheduler::spawn_tuned(
+                rust_engine_factory(cfg, mode, wide, narrow),
+                tree,
+                64,
+                4,
+                ghidorah::coordinator::DEFAULT_MAX_BATCH,
+                policy,
+            )
         }
         None => Scheduler::spawn(
             move || Runtime::load_widths(&Artifacts::default_dir(), &[1, width, 64]),
@@ -291,10 +475,21 @@ fn cmd_arca(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         "  family a_d(k) = {:.3} * {:.3}^d * {:.3}^k (top1 boost {:.2}; rel-rmse {:.4})",
         fit.c, fit.rho, fit.r, fit.b, fit.rmse
     );
-    let sim = Simulator::jetson_nx();
     let cfg = ModelConfig::vicuna_7b();
-    eprintln!("ARCA: profiling widths on the NX simulator (ctx {ctx}) ...");
-    let out = profile(&sim, &cfg, &fit.profile, &[2, 4, 8, 16, 32, 64], ctx);
+    let widths = [2usize, 4, 8, 16, 32, 64];
+    // with --host-profile, run the whole profiling pass on the fitted host
+    // units instead of the Jetson model (ghidorah::arca::profile_host)
+    let out = match flags.get("host-profile") {
+        Some(path) => {
+            let host = HostProfile::load(&PathBuf::from(path))?;
+            eprintln!("ARCA: profiling widths on the calibrated host profile (ctx {ctx}) ...");
+            ghidorah::arca::profile_host(&host, &cfg, &fit.profile, &widths, ctx)
+        }
+        None => {
+            eprintln!("ARCA: profiling widths on the NX simulator (ctx {ctx}) ...");
+            profile(&Simulator::jetson_nx(), &cfg, &fit.profile, &widths, ctx)
+        }
+    };
     let mut t = bench::TablePrinter::new(&["width", "E[acc]", "step (ms)", "tok/s", "gpu ratio"]);
     for r in &out.rows {
         t.row(vec![
@@ -330,7 +525,9 @@ fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()
         "ablation" => println!("{}", bench::ablation().text),
         "measured" => {
             let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(20);
-            println!("{}", bench::measured(reps).text);
+            let (wide, narrow) = pool_sizes(flags)?;
+            let profile = resolve_host_profile(flags, wide, narrow)?;
+            println!("{}", bench::measured_with(reps, profile.as_ref()).text);
         }
         "all" => {
             println!("{}", bench::table1(200_000, false).text);

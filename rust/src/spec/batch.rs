@@ -19,11 +19,12 @@
 //!   hits EOS, its token quota, or lane-context exhaustion; its lane is
 //!   released (and scrubbed) immediately, so the next queued request can
 //!   join on the very next step.
-//! * **Losslessness** — per-sequence accept/rollback is exactly the
-//!   single-sequence controller's logic over the sequence's own lane, and
-//!   the batched forward is row/segment-local, so every sequence's output
-//!   is token-for-token identical to decoding it alone (golden-trace
-//!   parity tests in `tests/batch_parity.rs`).
+//! * **Losslessness** — per-sequence state transitions are *literally* the
+//!   single-sequence controller's logic: both loops drive the same
+//!   [`LaneState`](crate::spec::lane::LaneState) step machine over the
+//!   sequence's own lane, and the batched forward is row/segment-local, so
+//!   every sequence's output is token-for-token identical to decoding it
+//!   alone (golden-trace parity tests in `tests/batch_parity.rs`).
 //!
 //! Interaction with HCMP: a batched step is still one verification step
 //! per sequence, so the ARCA tree/width choice is unchanged; only the GEMM
@@ -34,14 +35,11 @@
 
 use crate::model::forward::{RustModel, StepOutput};
 use crate::model::kv_cache::BatchKvCache;
-use crate::model::tokenizer::EOS;
 use crate::model::ModelConfig;
 use crate::sparse::CooPattern;
 use crate::spec::controller::GenerateOutcome;
+use crate::spec::lane::LaneState;
 use crate::spec::tree::VerificationTree;
-use crate::spec::verify::verify_greedy;
-use crate::util::mathx::{argmax, topk};
-use crate::util::stats::OnlineStats;
 
 /// One sequence's slice of a batched decode step — the same shape the
 /// batched forward consumes, re-exported so executors and the forward pass
@@ -64,6 +62,16 @@ pub trait BatchedStepExecutor {
     fn unit_busy(&self) -> Option<(f64, f64)> {
         None
     }
+
+    /// Swap the executable linear column ratio for subsequent steps (ARCA
+    /// online re-tuning). Only meaningful **between** `decode_batch` calls:
+    /// column re-sharding never reorders any element's accumulation, so a
+    /// step-boundary swap preserves bitwise token parity
+    /// (`tests/retune_parity.rs`). Returns false for engines without an
+    /// executable partition plan (the default).
+    fn retune_ratio(&mut self, _ratio: f64) -> bool {
+        false
+    }
 }
 
 impl BatchedStepExecutor for RustModel {
@@ -80,33 +88,12 @@ impl BatchedStepExecutor for RustModel {
     }
 }
 
-#[derive(Clone, Copy, Debug)]
-enum Phase {
-    /// Streaming the prompt; `off` tokens committed so far.
-    Prefill { off: usize },
-    /// Draft-and-verify steady state.
-    Decode,
-}
-
+/// One admitted sequence: its KV-lane bookkeeping plus the shared
+/// per-sequence step machine (`spec::lane`).
 struct Seq {
     id: u64,
     lane: usize,
-    prompt: Vec<u32>,
-    tree: VerificationTree,
-    /// The tree's COO pattern, built once at admission.
-    pattern: CooPattern,
-    max_new: usize,
-    phase: Phase,
-    /// Root of the next verification tree (the model's committed greedy
-    /// prediction at the last accepted position).
-    root: u32,
-    /// Medusa head logit rows at the last accepted position.
-    medusa_rows: Vec<Vec<f32>>,
-    out: Vec<u32>,
-    steps: usize,
-    acceptance: OnlineStats,
-    hit_eos: bool,
-    done: bool,
+    state: LaneState,
 }
 
 /// A sequence that left the batch, with its lane (for the caller to
@@ -118,16 +105,7 @@ pub struct FinishedSeq {
 }
 
 fn finish(s: Seq) -> FinishedSeq {
-    FinishedSeq {
-        id: s.id,
-        lane: s.lane,
-        outcome: GenerateOutcome {
-            tokens: s.out,
-            steps: s.steps,
-            acceptance: s.acceptance,
-            hit_eos: s.hit_eos,
-        },
-    }
+    FinishedSeq { id: s.id, lane: s.lane, outcome: s.state.into_outcome() }
 }
 
 fn causal_pattern(w: usize) -> CooPattern {
@@ -198,23 +176,7 @@ impl BatchedDecoder {
             "no executable for verification width {}",
             tree.width()
         );
-        let pattern = tree.pattern();
-        self.seqs.push(Seq {
-            id,
-            lane,
-            prompt,
-            tree,
-            pattern,
-            max_new,
-            phase: Phase::Prefill { off: 0 },
-            root: 0,
-            medusa_rows: Vec::new(),
-            out: Vec::new(),
-            steps: 0,
-            acceptance: OnlineStats::new(),
-            hit_eos: false,
-            done: false,
-        });
+        self.seqs.push(Seq { id, lane, state: LaneState::new(prompt, max_new, tree) });
         Ok(())
     }
 
@@ -244,15 +206,7 @@ impl BatchedDecoder {
         // step (token quota reached, or the lane cannot fit a tree block).
         let mut i = 0;
         while i < self.seqs.len() {
-            let s = &self.seqs[i];
-            let retire = match s.phase {
-                Phase::Decode => {
-                    s.out.len() >= s.max_new
-                        || caches.lane(s.lane).remaining() < s.tree.width()
-                }
-                Phase::Prefill { .. } => false,
-            };
-            if retire {
+            if self.seqs[i].state.needs_retire(caches.lane(self.seqs[i].lane)) {
                 let f = finish(self.seqs.swap_remove(i));
                 self.retired.push(f);
             } else {
@@ -263,36 +217,18 @@ impl BatchedDecoder {
             return Ok(std::mem::take(&mut self.retired));
         }
 
-        // build each sequence's segment: a (padded) causal prefill chunk or
-        // a drafted verification tree. Patterns are never built per step:
-        // prefill chunks share self.prefill_pattern, decode steps borrow
-        // the pattern cached on the sequence at admission.
-        let mut owned: Vec<(Vec<u32>, Vec<usize>, bool)> = Vec::with_capacity(self.seqs.len());
-        for s in &self.seqs {
-            let lane_len = caches.lane(s.lane).len();
-            match s.phase {
-                Phase::Prefill { off } => {
-                    let w = self.prefill_width;
-                    let n = w.min(s.prompt.len() - off);
-                    // pad the chunk to the executable width with repeats of
-                    // the last token; padded positions are never committed.
-                    let mut toks: Vec<u32> = s.prompt[off..off + n].to_vec();
-                    toks.resize(w, *toks.last().expect("non-empty chunk"));
-                    let pos: Vec<usize> = (0..w).map(|i| lane_len + i).collect();
-                    owned.push((toks, pos, true));
-                }
-                Phase::Decode => {
-                    let head_topk: Vec<Vec<u32>> = s
-                        .medusa_rows
-                        .iter()
-                        .map(|row| topk(row, self.top_k).into_iter().map(|i| i as u32).collect())
-                        .collect();
-                    let draft = s.tree.fill_tokens(s.root, &head_topk);
-                    let pos = s.tree.positions(lane_len);
-                    owned.push((draft, pos, false));
-                }
-            }
-        }
+        // build each sequence's segment via the shared lane step machine: a
+        // (padded) causal prefill chunk or a drafted verification tree.
+        // Patterns are never built per step: prefill chunks share
+        // self.prefill_pattern, decode steps borrow the pattern cached on
+        // the sequence's lane state at admission.
+        let owned: Vec<(Vec<u32>, Vec<usize>, bool)> = self
+            .seqs
+            .iter()
+            .map(|s| {
+                s.state.build_segment(self.prefill_width, self.top_k, caches.lane(s.lane).len())
+            })
+            .collect();
 
         let prefill_pattern = &self.prefill_pattern;
         let inputs: Vec<SeqStepInput<'_>> = self
@@ -302,7 +238,7 @@ impl BatchedDecoder {
             .map(|(s, (toks, pos, is_prefill))| SeqStepInput {
                 tokens: toks,
                 pos,
-                pattern: if *is_prefill { prefill_pattern } else { &s.pattern },
+                pattern: if *is_prefill { prefill_pattern } else { &s.state.pattern },
                 cache: caches.lane(s.lane),
             })
             .collect();
@@ -317,59 +253,19 @@ impl BatchedDecoder {
             self.seqs.len()
         );
 
-        // per-sequence commit + verify (exactly the single-sequence
-        // controller's logic over the sequence's own lane).
+        // per-sequence commit + verify (the shared lane step machine —
+        // literally the single-sequence controller's logic over the
+        // sequence's own lane).
         for ((s, (toks, _pos, _is_prefill)), out) in
             self.seqs.iter_mut().zip(owned.iter()).zip(outs.into_iter())
         {
-            match s.phase {
-                Phase::Prefill { off } => {
-                    let w = self.prefill_width;
-                    let n = w.min(s.prompt.len() - off);
-                    caches.lane_mut(s.lane).commit_prefix(&out.k_new, &out.v_new, w, n);
-                    if off + n == s.prompt.len() {
-                        s.root = argmax(out.logits.row(n - 1)) as u32;
-                        s.medusa_rows =
-                            out.medusa_logits.iter().map(|t| t.row(n - 1).to_vec()).collect();
-                        s.phase = Phase::Decode;
-                    } else {
-                        s.phase = Phase::Prefill { off: off + n };
-                    }
-                }
-                Phase::Decode => {
-                    s.steps += 1;
-                    let verdict = verify_greedy(&s.tree, toks, &out.logits);
-                    s.acceptance.push(verdict.accepted_nodes.len() as f64);
-                    caches.lane_mut(s.lane).commit_selected(
-                        &out.k_new,
-                        &out.v_new,
-                        s.tree.width(),
-                        &verdict.accepted_nodes,
-                    );
-                    for &t in &verdict.accepted_tokens {
-                        s.out.push(t);
-                        if t == EOS || s.out.len() >= s.max_new {
-                            s.hit_eos = t == EOS;
-                            s.done = true;
-                            break;
-                        }
-                    }
-                    if !s.done {
-                        s.root = verdict.next_token;
-                        s.medusa_rows = out
-                            .medusa_logits
-                            .iter()
-                            .map(|t| t.row(verdict.last_node).to_vec())
-                            .collect();
-                    }
-                }
-            }
+            s.state.apply_output(toks, &out, self.prefill_width, caches.lane_mut(s.lane));
         }
 
         // leave protocol, part 2: sequences that finished inside this step.
         let mut i = 0;
         while i < self.seqs.len() {
-            if self.seqs[i].done {
+            if self.seqs[i].state.done {
                 let f = finish(self.seqs.swap_remove(i));
                 self.retired.push(f);
             } else {

@@ -1,16 +1,20 @@
 //! The draft-then-verify decode loop, generic over the step executor so the
 //! same controller drives the pure-Rust model (tests, simulator) and the
 //! PJRT runtime (serving).
+//!
+//! The controller is the **one-lane** driver of the shared
+//! [`LaneState`](crate::spec::lane::LaneState) step machine: every
+//! prefill/verify/commit/EOS decision lives in `spec::lane`, shared verbatim
+//! with the batched decoder, so the batched-equals-solo guarantee cannot
+//! drift between the two loops.
 
 use crate::model::forward::{RustModel, StepOutput};
 use crate::model::kv_cache::KvCache;
-use crate::model::tokenizer::EOS;
 use crate::model::ModelConfig;
 use crate::sparse::CooPattern;
 use crate::spec::drafter::MedusaDrafter;
+use crate::spec::lane::LaneState;
 use crate::spec::tree::VerificationTree;
-use crate::spec::verify::verify_greedy;
-use crate::util::mathx::argmax;
 use crate::util::stats::OnlineStats;
 
 /// Anything that can run one decode step of width W. Implemented by the
@@ -77,47 +81,26 @@ pub struct SpeculativeController<'a, E: StepExecutor> {
     exec: &'a mut E,
     /// Prefill chunk width (must be a supported executor width).
     prefill_width: usize,
+    /// Causal pattern of one prefill chunk, built once.
+    prefill_pattern: CooPattern,
     drafter: MedusaDrafter,
 }
 
 impl<'a, E: StepExecutor> SpeculativeController<'a, E> {
     pub fn new(exec: &'a mut E, prefill_width: usize, top_k: usize) -> Self {
         assert!(exec.supports_width(prefill_width));
-        Self { exec, prefill_width, drafter: MedusaDrafter::new(top_k) }
-    }
-
-    /// Prefill the prompt in chunks, committing KV; returns (logits row,
-    /// medusa rows) at the last prompt position.
-    pub fn prefill(
-        &mut self,
-        prompt: &[u32],
-        cache: &mut KvCache,
-    ) -> anyhow::Result<(Vec<f32>, Vec<Vec<f32>>)> {
-        assert!(!prompt.is_empty(), "empty prompt");
-        assert!(prompt.len() <= cache.remaining(), "prompt exceeds context");
-        let w = self.prefill_width;
-        let mut last: Option<(Vec<f32>, Vec<Vec<f32>>)> = None;
-        let mut off = 0;
-        while off < prompt.len() {
-            let n = w.min(prompt.len() - off);
-            // pad the chunk to the executable width with repeats of the last
-            // token; padded positions are never committed or read.
-            let mut toks: Vec<u32> = prompt[off..off + n].to_vec();
-            toks.resize(w, *toks.last().unwrap());
-            let pos: Vec<usize> = (0..w).map(|i| cache.len() + i).collect();
-            let pattern = CooPattern::causal(w);
-            let out = self.exec.decode(&toks, &pos, &pattern, cache)?;
-            cache.commit_prefix(&out.k_new, &out.v_new, w, n);
-            let row = out.logits.row(n - 1).to_vec();
-            let medusa_rows: Vec<Vec<f32>> =
-                out.medusa_logits.iter().map(|t| t.row(n - 1).to_vec()).collect();
-            last = Some((row, medusa_rows));
-            off += n;
+        Self {
+            exec,
+            prefill_width,
+            prefill_pattern: CooPattern::causal(prefill_width),
+            drafter: MedusaDrafter::new(top_k),
         }
-        Ok(last.expect("non-empty prompt"))
     }
 
-    /// Generate up to `max_new` tokens (greedy), in the given mode.
+    /// Generate up to `max_new` tokens (greedy), in the given mode. This is
+    /// the one-lane loop over the shared [`LaneState`] step machine — build
+    /// the lane's segment, run it through the executor, apply the output —
+    /// identical per-step semantics to one lane of the batched decoder.
     pub fn generate(
         &mut self,
         prompt: &[u32],
@@ -130,53 +113,17 @@ impl<'a, E: StepExecutor> SpeculativeController<'a, E> {
             DecodeMode::Speculative(t) => t.clone(),
         };
         assert!(self.exec.supports_width(tree.width()), "no executable for width {}", tree.width());
+        assert!(prompt.len() <= cache.remaining(), "prompt exceeds context");
 
-        let (last_logits, mut medusa_rows) = self.prefill(prompt, cache)?;
-        let mut root = argmax(&last_logits) as u32;
-        let mut out_tokens: Vec<u32> = Vec::new();
-        let mut acceptance = OnlineStats::new();
-        let mut steps = 0usize;
-        let mut hit_eos = false;
-
-        'outer: while out_tokens.len() < max_new {
-            if cache.remaining() < tree.width() {
-                break; // context exhausted
-            }
-            let head_topk: Vec<Vec<u32>> = medusa_rows
-                .iter()
-                .map(|row| {
-                    crate::util::mathx::topk(row, self.drafter.top_k)
-                        .into_iter()
-                        .map(|i| i as u32)
-                        .collect()
-                })
-                .collect();
-            let draft = tree.fill_tokens(root, &head_topk);
-            let pos = tree.positions(cache.len());
-            let pattern = tree.pattern();
-            let out = self.exec.decode(&draft, &pos, &pattern, cache)?;
-            steps += 1;
-
-            let verdict = verify_greedy(&tree, &draft, &out.logits);
-            acceptance.push(verdict.accepted_nodes.len() as f64);
-            cache.commit_selected(&out.k_new, &out.v_new, tree.width(), &verdict.accepted_nodes);
-
-            for &t in &verdict.accepted_tokens {
-                out_tokens.push(t);
-                if t == EOS || out_tokens.len() >= max_new {
-                    hit_eos = t == EOS;
-                    break 'outer;
-                }
-            }
-            root = verdict.next_token;
-            medusa_rows = out
-                .medusa_logits
-                .iter()
-                .map(|t| t.row(verdict.last_node).to_vec())
-                .collect();
+        let mut lane = LaneState::new(prompt.to_vec(), max_new, tree);
+        while !lane.done && !lane.needs_retire(cache) {
+            let (toks, pos, is_prefill) =
+                lane.build_segment(self.prefill_width, self.drafter.top_k, cache.len());
+            let pattern = if is_prefill { &self.prefill_pattern } else { &lane.pattern };
+            let out = self.exec.decode(&toks, &pos, pattern, cache)?;
+            lane.apply_output(&toks, &out, self.prefill_width, cache);
         }
-
-        Ok(GenerateOutcome { tokens: out_tokens, steps, acceptance, hit_eos })
+        Ok(lane.into_outcome())
     }
 }
 

@@ -1,0 +1,238 @@
+//! The per-sequence decode state machine, factored out of the two decode
+//! loops so they cannot drift: [`SpeculativeController`] drives exactly one
+//! [`LaneState`] (the one-lane special case), [`BatchedDecoder`] drives B of
+//! them through one shared forward per step. All the semantics that make
+//! speculative decoding lossless — prefill chunking/padding, greedy tree
+//! verification, selective KV commit, EOS/quota/context retirement — live
+//! here once.
+//!
+//! A lane advances in *steps*. Each step has three stages:
+//!
+//! 1. [`LaneState::needs_retire`] — can the lane take another step at all?
+//! 2. [`LaneState::build_segment`] — the tokens/positions of its slice of
+//!    the (possibly batched) forward: a padded causal prefill chunk, or a
+//!    drafted verification tree.
+//! 3. [`LaneState::apply_output`] — commit KV, verify the draft, collect
+//!    accepted tokens, advance the phase.
+//!
+//! The drivers differ only in how many lanes share stage 2's forward.
+//!
+//! [`SpeculativeController`]: crate::spec::controller::SpeculativeController
+//! [`BatchedDecoder`]: crate::spec::batch::BatchedDecoder
+
+use crate::model::forward::StepOutput;
+use crate::model::kv_cache::KvCache;
+use crate::model::tokenizer::EOS;
+use crate::sparse::CooPattern;
+use crate::spec::controller::GenerateOutcome;
+use crate::spec::tree::VerificationTree;
+use crate::spec::verify::verify_greedy;
+use crate::util::mathx::{argmax, topk};
+use crate::util::stats::OnlineStats;
+
+/// Where a lane is in its lifecycle.
+#[derive(Clone, Copy, Debug)]
+pub enum Phase {
+    /// Streaming the prompt; `off` tokens committed so far.
+    Prefill { off: usize },
+    /// Draft-and-verify steady state.
+    Decode,
+}
+
+/// One sequence's decode state: the prompt being streamed, the tree it
+/// verifies with, and everything accumulated so far.
+pub struct LaneState {
+    pub prompt: Vec<u32>,
+    pub tree: VerificationTree,
+    /// The tree's COO pattern, built once at admission.
+    pub pattern: CooPattern,
+    pub max_new: usize,
+    pub phase: Phase,
+    /// Root of the next verification tree (the model's committed greedy
+    /// prediction at the last accepted position).
+    root: u32,
+    /// Medusa head logit rows at the last accepted position.
+    medusa_rows: Vec<Vec<f32>>,
+    pub out: Vec<u32>,
+    pub steps: usize,
+    pub acceptance: OnlineStats,
+    pub hit_eos: bool,
+    pub done: bool,
+}
+
+impl LaneState {
+    pub fn new(prompt: Vec<u32>, max_new: usize, tree: VerificationTree) -> Self {
+        assert!(!prompt.is_empty(), "empty prompt");
+        let pattern = tree.pattern();
+        Self {
+            prompt,
+            tree,
+            pattern,
+            max_new,
+            phase: Phase::Prefill { off: 0 },
+            root: 0,
+            medusa_rows: Vec::new(),
+            out: Vec::new(),
+            steps: 0,
+            acceptance: OnlineStats::new(),
+            hit_eos: false,
+            done: false,
+        }
+    }
+
+    /// Stage 1: true when the lane cannot take another step — token quota
+    /// reached, or the cache cannot fit one more tree block. Prefill never
+    /// retires (admission checked the prompt fits).
+    pub fn needs_retire(&self, cache: &KvCache) -> bool {
+        match self.phase {
+            Phase::Decode => {
+                self.out.len() >= self.max_new || cache.remaining() < self.tree.width()
+            }
+            Phase::Prefill { .. } => false,
+        }
+    }
+
+    /// Stage 2: build this lane's segment of the step — `(tokens, positions,
+    /// is_prefill)`. Prefill chunks are padded to `prefill_width` with
+    /// repeats of the last token (padded positions are never committed or
+    /// read); decode steps draft a tree from the cached Medusa rows.
+    pub fn build_segment(
+        &self,
+        prefill_width: usize,
+        top_k: usize,
+        cache_len: usize,
+    ) -> (Vec<u32>, Vec<usize>, bool) {
+        match self.phase {
+            Phase::Prefill { off } => {
+                let w = prefill_width;
+                let n = w.min(self.prompt.len() - off);
+                let mut toks: Vec<u32> = self.prompt[off..off + n].to_vec();
+                toks.resize(w, *toks.last().expect("non-empty chunk"));
+                let pos: Vec<usize> = (0..w).map(|i| cache_len + i).collect();
+                (toks, pos, true)
+            }
+            Phase::Decode => {
+                let head_topk: Vec<Vec<u32>> = self
+                    .medusa_rows
+                    .iter()
+                    .map(|row| topk(row, top_k).into_iter().map(|i| i as u32).collect())
+                    .collect();
+                let draft = self.tree.fill_tokens(self.root, &head_topk);
+                let pos = self.tree.positions(cache_len);
+                (draft, pos, false)
+            }
+        }
+    }
+
+    /// Stage 3: consume the forward's output for this lane — commit KV,
+    /// verify, collect accepted tokens, advance the phase. `toks` is the
+    /// segment stage 2 built. Exactly the single-sequence controller's
+    /// historical logic; both drivers call this verbatim.
+    pub fn apply_output(
+        &mut self,
+        toks: &[u32],
+        out: &StepOutput,
+        prefill_width: usize,
+        cache: &mut KvCache,
+    ) {
+        match self.phase {
+            Phase::Prefill { off } => {
+                let w = prefill_width;
+                let n = w.min(self.prompt.len() - off);
+                cache.commit_prefix(&out.k_new, &out.v_new, w, n);
+                if off + n == self.prompt.len() {
+                    self.root = argmax(out.logits.row(n - 1)) as u32;
+                    self.medusa_rows =
+                        out.medusa_logits.iter().map(|t| t.row(n - 1).to_vec()).collect();
+                    self.phase = Phase::Decode;
+                } else {
+                    self.phase = Phase::Prefill { off: off + n };
+                }
+            }
+            Phase::Decode => {
+                self.steps += 1;
+                let verdict = verify_greedy(&self.tree, toks, &out.logits);
+                self.acceptance.push(verdict.accepted_nodes.len() as f64);
+                cache.commit_selected(
+                    &out.k_new,
+                    &out.v_new,
+                    self.tree.width(),
+                    &verdict.accepted_nodes,
+                );
+                for &t in &verdict.accepted_tokens {
+                    self.out.push(t);
+                    if t == EOS || self.out.len() >= self.max_new {
+                        self.hit_eos = t == EOS;
+                        self.done = true;
+                        break;
+                    }
+                }
+                if !self.done {
+                    self.root = verdict.next_token;
+                    self.medusa_rows = out
+                        .medusa_logits
+                        .iter()
+                        .map(|t| t.row(verdict.last_node).to_vec())
+                        .collect();
+                }
+            }
+        }
+    }
+
+    /// Consume the lane into its finished outcome.
+    pub fn into_outcome(self) -> GenerateOutcome {
+        GenerateOutcome {
+            tokens: self.out,
+            steps: self.steps,
+            acceptance: self.acceptance,
+            hit_eos: self.hit_eos,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::RustModel;
+    use crate::model::weights::Weights;
+    use crate::model::ModelConfig;
+
+    #[test]
+    fn lane_walks_prefill_then_decode() {
+        let cfg = ModelConfig::test_small();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let mut cache = KvCache::new(&cfg);
+        let mut lane = LaneState::new(vec![1, 2, 3, 4, 5], 4, VerificationTree::chain(2));
+        let prefill_w = 4usize;
+        let mut guard = 0;
+        while !lane.done && !lane.needs_retire(&cache) {
+            let (toks, pos, is_prefill) = lane.build_segment(prefill_w, 4, cache.len());
+            let pattern =
+                if is_prefill { CooPattern::causal(prefill_w) } else { lane.pattern.clone() };
+            let out = model.decode_step(&toks, &pos, &pattern, &cache);
+            lane.apply_output(&toks, &out, prefill_w, &mut cache);
+            guard += 1;
+            assert!(guard < 64, "lane failed to make progress");
+        }
+        // two prefill chunks (4 + 1) then decode to quota
+        assert!(cache.len() >= 5, "prompt not fully committed");
+        let outcome = lane.into_outcome();
+        assert_eq!(outcome.tokens.len(), 4);
+        assert!(outcome.steps >= 2, "speculative steps recorded");
+    }
+
+    #[test]
+    fn zero_quota_retires_after_prefill() {
+        let cfg = ModelConfig::test_small();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 7));
+        let mut cache = KvCache::new(&cfg);
+        let mut lane = LaneState::new(vec![3, 1], 0, VerificationTree::root_only());
+        // prefill step still runs; then the lane must retire with no output
+        assert!(!lane.needs_retire(&cache));
+        let (toks, pos, _) = lane.build_segment(8, 4, cache.len());
+        let out = model.decode_step(&toks, &pos, &CooPattern::causal(8), &cache);
+        lane.apply_output(&toks, &out, 8, &mut cache);
+        assert!(lane.needs_retire(&cache));
+        assert!(lane.into_outcome().tokens.is_empty());
+    }
+}

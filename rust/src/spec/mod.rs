@@ -5,19 +5,23 @@
 //! * [`drafter`] — candidate sources: real Medusa heads, or the calibrated
 //!   accuracy-profile drafter used for the paper-scale experiments.
 //! * [`verify`] — greedy tree verification (longest accepted path).
+//! * [`lane`] — the per-sequence step machine (prefill / verify / commit /
+//!   EOS), shared verbatim by both decode loops so they cannot drift.
 //! * [`controller`] — the draft-then-verify decode loop over any step
-//!   executor (pure-Rust model or PJRT runtime).
+//!   executor (pure-Rust model or PJRT runtime) — one lane.
 //! * [`batch`] — the batched generalization: one shared decode step over
-//!   B sequences with continuous join/leave at step boundaries.
+//!   B lanes with continuous join/leave at step boundaries.
 
 pub mod batch;
 pub mod controller;
 pub mod drafter;
+pub mod lane;
 pub mod tree;
 pub mod verify;
 
 pub use batch::{BatchedDecoder, BatchedStepExecutor, FinishedSeq, SeqStepInput};
 pub use controller::{DecodeMode, GenerateOutcome, SpeculativeController, StepExecutor};
+pub use lane::LaneState;
 pub use drafter::AccuracyProfile;
 pub use tree::VerificationTree;
 pub use verify::verify_greedy;

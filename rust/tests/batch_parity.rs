@@ -80,6 +80,63 @@ fn batched_b4_matches_single_sequence_goldens() {
     }
 }
 
+/// The dedup guarantee (ROADMAP): `SpeculativeController` IS a one-lane
+/// `BatchedDecoder` — both drive the shared `spec::lane::LaneState` step
+/// machine — so a one-lane batch must reproduce the controller's full
+/// outcome *exactly*: tokens, step count, and mean acceptance, across
+/// engines, prompt shapes (incl. prompts spanning several prefill chunks),
+/// and quota edges. Token-only parity could survive a drift in step
+/// accounting; this pins the whole trace.
+#[test]
+fn controller_is_a_one_lane_batched_decoder() {
+    let mut model = model();
+    let cfg = model.cfg.clone();
+    // quota 0 exercises the retire-after-prefill edge both loops share
+    let cases: Vec<(Vec<u32>, usize)> = vec![
+        (vec![1, 2, 3], MAX_NEW),
+        (vec![3, 1, 4, 1, 5, 9, 2, 6, 5, 3], MAX_NEW), // > PREFILL_W: chunked prefill
+        (vec![7], 3),
+        (vec![5, 9], 0),
+    ];
+    for (label, tree) in engines() {
+        for (prompt, max_new) in &cases {
+            let want = {
+                let mut cache = KvCache::new(&cfg);
+                let mode = if tree.width() == 1 {
+                    DecodeMode::Sequential
+                } else {
+                    DecodeMode::Speculative(tree.clone())
+                };
+                let mut ctl = SpeculativeController::new(&mut model, PREFILL_W, TOP_K);
+                ctl.generate(prompt, *max_new, &mode, &mut cache).unwrap()
+            };
+
+            let mut caches = BatchKvCache::new(&cfg, 1);
+            let mut dec = BatchedDecoder::new(PREFILL_W, TOP_K);
+            let lane = caches.alloc().unwrap();
+            dec.admit(&model, 0, prompt.clone(), *max_new, tree.clone(), lane, &caches).unwrap();
+            let mut got = None;
+            let mut guard = 0;
+            while dec.active() > 0 {
+                guard += 1;
+                assert!(guard < 1000, "{label}: one-lane batch failed to drain");
+                for f in dec.step(&mut model, &mut caches).unwrap() {
+                    caches.release(f.lane);
+                    got = Some(f.outcome);
+                }
+            }
+            let got = got.expect("one-lane batch produced an outcome");
+            assert_eq!(got.tokens, want.tokens, "{label}: {prompt:?} tokens diverged");
+            assert_eq!(got.steps, want.steps, "{label}: {prompt:?} step count diverged");
+            assert_eq!(got.hit_eos, want.hit_eos, "{label}: {prompt:?} EOS flag diverged");
+            assert!(
+                (got.mean_acceptance() - want.mean_acceptance()).abs() < 1e-12,
+                "{label}: {prompt:?} acceptance stats diverged"
+            );
+        }
+    }
+}
+
 #[test]
 fn staggered_joins_preserve_goldens() {
     // sequences joining mid-flight (continuous batching) must not perturb

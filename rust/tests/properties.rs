@@ -532,3 +532,174 @@ fn prop_greedy_tree_dominates_chain() {
         Ok(())
     });
 }
+
+/// ARCA host calibration: `fit_unit` recovers synthetic efficiency tiers
+/// from probe timings generated by a known `UnitSpec` with bounded
+/// (±2%) multiplicative noise — peak rate, the sweet-spot tier, the decay
+/// slope, the sparse-gather efficiency, and per-width predicted times all
+/// land within tolerance.
+#[test]
+fn prop_unit_fit_recovers_synthetic_tiers() {
+    use ghidorah::arca::autotune::{fit_unit, predict_probe_secs, ProbeSample};
+    use ghidorah::hcmp::cost::Op;
+    use ghidorah::hcmp::unit::UnitSpec;
+
+    const WIDTHS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+    check("unit-fit-recovery", 60, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        // a synthetic host unit: compute-rich regime (bandwidth binds only
+        // at the narrow widths, as on real hosts), a real sweet spot below
+        // the largest probe, and a decay strong enough to be identifiable
+        let peak = 2e9 * 10f64.powf(rng.f64() * 1.4); // 2e9 .. ~5e10
+        let truth = UnitSpec {
+            name: "synthetic".into(),
+            peak_flops: peak,
+            solo_bw: peak / (2.5 + rng.f64() * 1.5), // peak/2.5 .. peak/4
+            launch_overhead: rng.f64() * 30e-6,
+            wave: 1,
+            sweet_spot: [4usize, 8, 16][rng.below(3)],
+            decay_per_doubling: 0.45 + rng.f64() * 0.3, // 0.45 .. 0.75
+            sparse_eff: 0.05 + rng.f64() * 0.55,
+        };
+        let noise = |rng: &mut Rng| 1.0 + (rng.f64() - 0.5) * 0.04; // ±2%
+
+        let mut probes: Vec<ProbeSample> = WIDTHS
+            .iter()
+            .map(|&m| {
+                let op = Op::Gemm { m, k: 256, n: 256 };
+                let mut s = ProbeSample {
+                    width: m,
+                    flops: op.flops(),
+                    bytes: op.bytes(),
+                    secs: 0.0,
+                    sparse: false,
+                };
+                s.secs = predict_probe_secs(&truth, &s) * noise(&mut rng);
+                s
+            })
+            .collect();
+        let sp = Op::AttnSparse { nnz: 528, heads: 8, dh: 64 };
+        let mut sparse = ProbeSample {
+            width: 32,
+            flops: sp.flops(),
+            bytes: sp.bytes(),
+            secs: 0.0,
+            sparse: true,
+        };
+        sparse.secs = predict_probe_secs(&truth, &sparse) * noise(&mut rng);
+        probes.push(sparse);
+
+        let fit = fit_unit("fit", &probes, truth.launch_overhead);
+        if (fit.peak_flops / truth.peak_flops - 1.0).abs() > 0.1 {
+            return Err(format!("peak {} vs {}", fit.peak_flops, truth.peak_flops));
+        }
+        if fit.sweet_spot != truth.sweet_spot {
+            return Err(format!("sweet spot {} vs {}", fit.sweet_spot, truth.sweet_spot));
+        }
+        if (fit.decay_per_doubling - truth.decay_per_doubling).abs() > 0.12 {
+            return Err(format!(
+                "decay {} vs {}",
+                fit.decay_per_doubling, truth.decay_per_doubling
+            ));
+        }
+        if (fit.sparse_eff / truth.sparse_eff - 1.0).abs() > 0.2 {
+            return Err(format!("sparse_eff {} vs {}", fit.sparse_eff, truth.sparse_eff));
+        }
+        for p in &probes {
+            let pred = predict_probe_secs(&fit, p);
+            let rel = (pred - p.secs).abs() / p.secs;
+            if rel > 0.08 {
+                return Err(format!(
+                    "width {} ({}): predicted {pred} vs measured {} ({:.1}% off)",
+                    p.width,
+                    if p.sparse { "sparse" } else { "gemm" },
+                    p.secs,
+                    rel * 100.0
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A simulator built from fitted host units prices wider steps at no less
+/// than narrower ones (monotone `SimReport` step time in width), so the
+/// predicted parallel ratio it yields is well-behaved across the width
+/// sweep `bench measured` compares against.
+#[test]
+fn prop_fitted_simreport_monotone_in_width() {
+    use ghidorah::arca::autotune::{fit_unit, predict_probe_secs, ProbeSample};
+    use ghidorah::hcmp::cost::Op;
+    use ghidorah::hcmp::schedule::{build_step, EngineKind};
+    use ghidorah::hcmp::simulator::Simulator;
+    use ghidorah::hcmp::unit::{UnifiedMemory, UnitSpec};
+    use ghidorah::hcmp::PartitionPlan;
+    use ghidorah::model::ModelConfig;
+
+    const WIDTHS: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+    check("fitted-sim-monotone", 25, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let mut synth_unit = |name: &str| {
+            let peak = 2e9 * 10f64.powf(rng.f64() * 1.2);
+            UnitSpec {
+                name: name.into(),
+                peak_flops: peak,
+                solo_bw: peak / (2.5 + rng.f64() * 1.5),
+                launch_overhead: rng.f64() * 30e-6,
+                wave: 1,
+                sweet_spot: [4usize, 8, 16][rng.below(3)],
+                decay_per_doubling: 0.45 + rng.f64() * 0.3,
+                sparse_eff: 0.05 + rng.f64() * 0.55,
+            }
+        };
+        let fitted = |truth: &UnitSpec| {
+            let probes: Vec<ProbeSample> = WIDTHS
+                .iter()
+                .map(|&m| {
+                    let op = Op::Gemm { m, k: 256, n: 256 };
+                    let mut s = ProbeSample {
+                        width: m,
+                        flops: op.flops(),
+                        bytes: op.bytes(),
+                        secs: 0.0,
+                        sparse: false,
+                    };
+                    s.secs = predict_probe_secs(truth, &s);
+                    s
+                })
+                .collect();
+            fit_unit(&truth.name, &probes, truth.launch_overhead)
+        };
+        let wide_truth = synth_unit("wide");
+        let narrow_truth = synth_unit("narrow");
+        let (wide, narrow) = (fitted(&wide_truth), fitted(&narrow_truth));
+        // no contention penalty: the roof equals the pools' summed solo
+        // bandwidth (the calibrated default on hosts whose pools do not
+        // interfere), so per-width pricing is a clean function of the work
+        let mem = UnifiedMemory {
+            dram_bw: wide.solo_bw + narrow.solo_bw,
+            contention_penalty: 0.0,
+            sync_latency: 0.0,
+        };
+        let sim = Simulator::with_units(wide, narrow, mem);
+        let cfg = ModelConfig::tiny();
+        let plan = PartitionPlan::hcmp(0.5);
+        let mut last = 0.0f64;
+        for w in [2usize, 4, 8, 16, 32, 64] {
+            let pattern = CooPattern::causal(w);
+            let rep =
+                sim.run(&build_step(&cfg, EngineKind::Ghidorah, w, 64, Some(&pattern), &plan));
+            if rep.balance() <= 0.0 || rep.balance() > 1.0 {
+                return Err(format!("balance out of range at width {w}: {}", rep.balance()));
+            }
+            if rep.total < last * 0.999 {
+                return Err(format!(
+                    "step time decreased with width: {} at w={w} after {last}",
+                    rep.total
+                ));
+            }
+            last = rep.total;
+        }
+        Ok(())
+    });
+}

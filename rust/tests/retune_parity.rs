@@ -1,0 +1,101 @@
+//! Online re-tuning regression: swapping the HCMP linear ratio **mid
+//! stream** (between decode steps, exactly where the scheduler's ARCA
+//! re-tuner applies it) must preserve bitwise token parity with the
+//! untuned sequential trace — for B=1 and B=4. Column re-sharding only
+//! moves the wide/narrow boundary; it can never reorder any element's
+//! accumulation, and this test pins that guarantee so it can't drift.
+
+use ghidorah::exec::ExecEngine;
+use ghidorah::hcmp::PartitionPlan;
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::kv_cache::BatchKvCache;
+use ghidorah::model::weights::Weights;
+use ghidorah::model::ModelConfig;
+use ghidorah::spec::batch::{BatchedDecoder, BatchedStepExecutor};
+use ghidorah::spec::tree::VerificationTree;
+
+fn model() -> RustModel {
+    let cfg = ModelConfig::test_small();
+    RustModel::new(cfg.clone(), Weights::random(&cfg, 42))
+}
+
+fn tree() -> VerificationTree {
+    let t = VerificationTree::new(vec![usize::MAX, 0, 0, 1, 1, 2], vec![0, 0, 1, 0, 1, 0]);
+    t.validate().unwrap();
+    t
+}
+
+/// Decode a fixed workload, applying each scheduled `(step, ratio)` swap at
+/// its step boundary; returns one token trace per prompt.
+fn run_with_swaps(
+    engine: &mut ExecEngine,
+    prompts: &[&[u32]],
+    max_new: usize,
+    tree: &VerificationTree,
+    swaps: &[(usize, f64)],
+) -> Vec<Vec<u32>> {
+    let cfg = engine.cfg().clone();
+    let mut caches = BatchKvCache::new(&cfg, prompts.len());
+    let mut dec = BatchedDecoder::new(8, 4);
+    for (i, p) in prompts.iter().enumerate() {
+        let lane = caches.alloc().unwrap();
+        dec.admit(engine, i as u64, p.to_vec(), max_new, tree.clone(), lane, &caches).unwrap();
+    }
+    let mut results: Vec<Option<Vec<u32>>> = vec![None; prompts.len()];
+    let mut step = 0usize;
+    while dec.active() > 0 {
+        for &(at, ratio) in swaps {
+            if at == step {
+                assert!(engine.retune_ratio(ratio), "engine refused the mid-stream re-tune");
+                assert_eq!(engine.current_ratio(), Some(ratio), "swap not applied");
+            }
+        }
+        for f in dec.step(engine, &mut caches).unwrap() {
+            caches.release(f.lane);
+            results[f.id as usize] = Some(f.outcome.tokens);
+        }
+        step += 1;
+        assert!(step < 1000, "batch failed to drain");
+    }
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+#[test]
+fn midstream_ratio_swap_is_bitwise_lossless_b1() {
+    let tree = tree();
+    let prompt: [&[u32]; 1] = [&[1, 5, 7, 2]];
+    let mut seq = ExecEngine::sequential(model());
+    let want = run_with_swaps(&mut seq, &prompt, 12, &tree, &[]);
+
+    // a forced swap at step 3 (and a second at step 6), across several
+    // before/after ratio pairs including the all-or-nothing boundaries
+    for (r0, r1) in [(0.8, 0.2), (0.5, 0.25), (0.0, 1.0), (1.0, 0.35)] {
+        let mut par = ExecEngine::parallel(model(), &PartitionPlan::hcmp(r0), 3, 2).unwrap();
+        let got = run_with_swaps(&mut par, &prompt, 12, &tree, &[(3, r1), (6, r0)]);
+        assert_eq!(got, want, "B=1 trace diverged across re-tune {r0} -> {r1} -> {r0}");
+    }
+}
+
+#[test]
+fn midstream_ratio_swap_is_bitwise_lossless_b4() {
+    let tree = tree();
+    let prompts: [&[u32]; 4] = [&[1, 5, 7, 2], &[3, 1], &[9, 8, 7, 6, 5], &[2, 2, 4]];
+    let mut seq = ExecEngine::sequential(model());
+    let want = run_with_swaps(&mut seq, &prompts, 10, &tree, &[]);
+
+    let mut par = ExecEngine::parallel(model(), &PartitionPlan::hcmp(0.5), 2, 2).unwrap();
+    let got = run_with_swaps(&mut par, &prompts, 10, &tree, &[(2, 0.15), (5, 0.9)]);
+    assert_eq!(got, want, "B=4 trace diverged across mid-stream re-tunes");
+}
+
+#[test]
+fn sequential_engine_declines_retune() {
+    let mut seq = ExecEngine::sequential(model());
+    assert!(!seq.retune_ratio(0.5), "single-unit engine has no partition plan to re-tune");
+    assert_eq!(seq.current_ratio(), None);
+    // the parallel engine also declines out-of-range ratios without
+    // clobbering its plan
+    let mut par = ExecEngine::parallel(model(), &PartitionPlan::hcmp(0.4), 2, 2).unwrap();
+    assert!(!par.retune_ratio(1.5));
+    assert_eq!(par.current_ratio(), Some(0.4));
+}

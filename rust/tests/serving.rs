@@ -9,6 +9,8 @@ use std::sync::{mpsc, Arc, Barrier};
 
 use ghidorah::coordinator::server::Client;
 use ghidorah::coordinator::{EngineChoice, Request, Scheduler, Server};
+use ghidorah::exec::ExecEngine;
+use ghidorah::hcmp::PartitionPlan;
 use ghidorah::model::forward::RustModel;
 use ghidorah::model::weights::Weights;
 use ghidorah::model::ModelConfig;
@@ -19,10 +21,33 @@ const N_CLIENTS: usize = 8;
 const MAX_NEW: usize = 32;
 const SEED: u64 = 42;
 
+/// The CI matrix exports `GHIDORAH_PARALLEL` (seq | hcmp[:RATIO]) so this
+/// suite exercises the serving stack over both pure-Rust engines; both are
+/// bitwise identical, so every assertion below is engine-independent. An
+/// unrecognized value is an error (not a silent default) — a matrix typo
+/// must fail the job, not quietly test the wrong engine.
+fn engine_from_env(model: RustModel) -> anyhow::Result<ExecEngine> {
+    match std::env::var("GHIDORAH_PARALLEL") {
+        Err(_) => Ok(ExecEngine::sequential(model)),
+        Ok(v) => match v.as_str() {
+            "" | "seq" | "sequential" => Ok(ExecEngine::sequential(model)),
+            "hcmp" => ExecEngine::parallel(model, &PartitionPlan::hcmp(0.5), 2, 2),
+            other => {
+                let ratio = other
+                    .strip_prefix("hcmp:")
+                    .and_then(|r| r.parse::<f64>().ok())
+                    .filter(|r| (0.0..=1.0).contains(r))
+                    .ok_or_else(|| anyhow::anyhow!("bad GHIDORAH_PARALLEL '{other}'"))?;
+                ExecEngine::parallel(model, &PartitionPlan::hcmp(ratio), 2, 2)
+            }
+        },
+    }
+}
+
 fn scheduler() -> Scheduler {
     let cfg = ModelConfig::tiny(); // byte tokenizer needs the 512 vocab
     let model = RustModel::new(cfg.clone(), Weights::random(&cfg, SEED));
-    Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4)
+    Scheduler::spawn(move || engine_from_env(model), VerificationTree::chain(3), 8, 4)
 }
 
 fn workload() -> Vec<(String, &'static str)> {
