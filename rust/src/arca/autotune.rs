@@ -238,6 +238,11 @@ pub struct HostProfile {
     pub fit_rms_rel_err: f64,
     /// (unit name, sample) pairs recorded during calibration.
     pub probes: Vec<(String, ProbeSample)>,
+    /// Dense context-split fraction tuned on this host's calibrated
+    /// simulator (`tune_plan_dyn` at autotune time). `None` until a
+    /// dynamic-split tune has run; persisted so `--parallel hcmp:dyn`
+    /// can start from the tuned cut without re-tuning.
+    pub dyn_split: Option<f64>,
 }
 
 impl HostProfile {
@@ -313,6 +318,19 @@ impl HostProfile {
         crate::arca::contention::tune_plan(&self.simulator(), cfg, width, ctx, pattern, false)
     }
 
+    /// Tune the partition plan *with* the dynamic attention split armed:
+    /// the hill-climb additionally moves `dense_gpu_frac`, pricing the
+    /// fractional context cut the `hcmp:dyn` engine executes for real.
+    pub fn tune_plan_dyn(
+        &self,
+        cfg: &ModelConfig,
+        width: usize,
+        ctx: usize,
+        pattern: Option<&CooPattern>,
+    ) -> (PartitionPlan, f64) {
+        crate::arca::contention::tune_plan(&self.simulator(), cfg, width, ctx, pattern, true)
+    }
+
     // ---- persistence (the host-profile JSON, see README) ------------------
 
     pub fn to_json(&self) -> Json {
@@ -328,6 +346,10 @@ impl HostProfile {
             (
                 "probes",
                 Json::arr(self.probes.iter().map(|(u, p)| p.to_json(u)).collect()),
+            ),
+            (
+                "dyn_split",
+                self.dyn_split.map(Json::num).unwrap_or(Json::Null),
             ),
         ])
     }
@@ -360,6 +382,13 @@ impl HostProfile {
                 .ok_or_else(|| anyhow::anyhow!("host profile missing 'narrow_threads'"))?,
             fit_rms_rel_err: j.get("fit_rms_rel_err").and_then(Json::as_f64).unwrap_or(0.0),
             probes,
+            // optional (older profiles predate the dynamic split) and
+            // validated: a hand-edited non-finite value must not arm a
+            // NaN cut
+            dyn_split: j
+                .get("dyn_split")
+                .and_then(Json::as_f64)
+                .filter(|f| f.is_finite() && (0.0..=1.0).contains(f)),
         })
     }
 
@@ -635,6 +664,7 @@ pub fn calibrate(
         narrow_threads,
         fit_rms_rel_err: fit_err,
         probes,
+        dyn_split: None,
     }
 }
 
@@ -659,6 +689,18 @@ pub struct RetuneConfig {
 impl Default for RetuneConfig {
     fn default() -> Self {
         Self { window: 24, max_step: 0.06, deadband: 0.08, min_ratio: 0.02, max_ratio: 0.98 }
+    }
+}
+
+impl RetuneConfig {
+    /// Knobs for re-tuning the dynamic context-split fraction
+    /// (`hcmp:dyn`). A longer window than the column-ratio retuner so the
+    /// two do not fight over the same balance signal, and the fraction's
+    /// own clamp range — `[0.1, 1.0]`, matching the hill-climb in
+    /// `arca::contention::tune_plan` (1.0 = the whole span back on the
+    /// wide unit is a legitimate resting point at short context).
+    pub fn dense_split() -> Self {
+        Self { window: 48, max_step: 0.08, deadband: 0.08, min_ratio: 0.1, max_ratio: 1.0 }
     }
 }
 
@@ -709,11 +751,15 @@ impl OnlineRetuner {
         self.window.reset_epoch();
         let (w, n) = self.window.busy();
         let hi = w.max(n);
-        if hi <= 0.0 {
+        // `hi <= 0.0` is false for NaN, so guard finiteness explicitly:
+        // a poisoned window must not nudge the engine's ratio (the window
+        // itself clamps non-finite samples, but the retuner is the last
+        // line before `set_ratio`)
+        if !hi.is_finite() || hi <= 0.0 {
             return None;
         }
         let balance = w.min(n) / hi;
-        if balance >= 1.0 - self.cfg.deadband {
+        if !balance.is_finite() || balance >= 1.0 - self.cfg.deadband {
             return None;
         }
         // shed columns from the busier pool, proportionally to how lopsided
@@ -722,7 +768,7 @@ impl OnlineRetuner {
         let next =
             (if w > n { self.ratio - delta } else { self.ratio + delta })
                 .clamp(self.cfg.min_ratio, self.cfg.max_ratio);
-        if (next - self.ratio).abs() < 1e-4 {
+        if !next.is_finite() || (next - self.ratio).abs() < 1e-4 {
             return None;
         }
         self.ratio = next;
@@ -916,6 +962,7 @@ mod tests {
                 "wide".into(),
                 ProbeSample { width: 16, flops: 1e6, bytes: 2e5, secs: 1e-4, sparse: false },
             )],
+            dyn_split: Some(0.65),
         };
         let text = p.to_json().dump();
         let back = HostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -926,6 +973,14 @@ mod tests {
         assert_eq!((back.wide_threads, back.narrow_threads), (4, 2));
         assert_eq!(back.probes, p.probes);
         assert!((back.fit_rms_rel_err - 0.07).abs() < 1e-12);
+        assert_eq!(back.dyn_split, Some(0.65));
+        // profiles predating the split (no key) parse with None
+        let legacy = {
+            let mut q = p.clone();
+            q.dyn_split = None;
+            HostProfile::from_json(&Json::parse(&q.to_json().dump()).unwrap()).unwrap()
+        };
+        assert_eq!(legacy.dyn_split, None);
     }
 
     #[test]
@@ -943,6 +998,7 @@ mod tests {
             narrow_threads: 2,
             fit_rms_rel_err: 0.0,
             probes: vec![],
+            dyn_split: None,
         };
         let cfg = ModelConfig::tiny();
         let tree = VerificationTree::chain(8);
@@ -990,6 +1046,34 @@ mod tests {
             r.observe_step(10.0, 0.1);
         }
         assert!(r.ratio() >= cfg.min_ratio);
+    }
+
+    #[test]
+    fn online_retuner_never_emits_non_finite_ratio() {
+        // regression: NaN/inf busy deltas (a zero-duration division, a
+        // clock glitch) must never reach `set_ratio` as a non-finite nudge
+        let cfg = RetuneConfig { window: 2, deadband: 0.0, ..Default::default() };
+        let mut r = OnlineRetuner::new(0.5, cfg);
+        for (w, n) in [
+            (f64::NAN, f64::NAN),
+            (f64::NAN, 1.0),
+            (1.0, f64::NAN),
+            (f64::INFINITY, 1.0),
+            (f64::INFINITY, f64::INFINITY),
+            (0.0, 0.0),
+            (2.0, 1.0),
+            (2.0, 1.0),
+        ] {
+            if let Some(next) = r.observe_step(w, n) {
+                assert!(next.is_finite(), "non-finite ratio from ({w}, {n})");
+                assert!((0.0..=1.0).contains(&next));
+            }
+            assert!(r.ratio().is_finite());
+        }
+        // dense-split knobs follow the hill-climb's clamp range
+        let ds = RetuneConfig::dense_split();
+        assert!((ds.min_ratio, ds.max_ratio) == (0.1, 1.0));
+        assert!(ds.window > RetuneConfig::default().window);
     }
 
     #[test]

@@ -411,6 +411,22 @@ pub struct MeasuredRow {
     pub warmup_steps: u64,
 }
 
+/// Affinity vs dynamic-context-split attention at the long-context point:
+/// the same batched forward on `HcmpParallelExecutor::new` (bitwise
+/// per-head affinity) vs `new_dyn` (fractional context split + merged
+/// online-softmax partials).
+#[derive(Clone, Debug)]
+pub struct DynCompare {
+    pub ctx: usize,
+    pub width: usize,
+    pub t_affinity_ms: f64,
+    pub t_dyn_ms: f64,
+    /// Affinity/dyn step-time ratio (> 1: the fractional split wins).
+    pub dyn_x: f64,
+    /// The context-split fraction the dyn engine ran.
+    pub frac: f64,
+}
+
 pub struct MeasuredOutcome {
     pub text: String,
     pub rows: Vec<MeasuredRow>,
@@ -421,6 +437,8 @@ pub struct MeasuredOutcome {
     pub residual_uncal: f64,
     /// Same residual for the host-calibrated model (None without one).
     pub residual_cal: Option<f64>,
+    /// Affinity-vs-dynamic attention comparison at the long-context point.
+    pub dyn_compare: DynCompare,
 }
 
 /// Measured decode-step wall-clock, sequential engine vs HCMP-parallel
@@ -592,6 +610,54 @@ pub fn measured_sweep(
         }
     }
     let balance = par.timings().balance();
+
+    // affinity vs dynamic context split at the long-context point (largest
+    // width, smallest batch — the dense span dominates there, which is the
+    // regime the fractional split targets)
+    let dyn_compare = {
+        let tree = build_tree(&heads, *widths.iter().max().unwrap());
+        let w = tree.width();
+        let pattern = tree.pattern();
+        let pos = tree.positions(cache_long.len());
+        let batch = batches[0].max(1);
+        let drafts: Vec<Vec<u32>> = (0..batch)
+            .map(|_| (0..w).map(|_| rng.below(cfg.vocab) as u32).collect())
+            .collect();
+        let segs: Vec<SegmentInput<'_>> = drafts
+            .iter()
+            .map(|d| SegmentInput {
+                tokens: d,
+                pos: &pos,
+                pattern: &pattern,
+                cache: &cache_long,
+            })
+            .collect();
+        let frac = 0.5;
+        let dyn_plan = PartitionPlan::hcmp_dyn(plan.linear_ratio, frac);
+        let mut dyn_par =
+            HcmpParallelExecutor::new_dyn(&dyn_plan, wide, narrow).expect("dyn plan executable");
+        let bench = |exec: &mut dyn StepExecutor| -> f64 {
+            for _ in 0..warmup {
+                std::hint::black_box(exec.forward(&model, &segs));
+            }
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(exec.forward(&model, &segs));
+            }
+            t0.elapsed().as_secs_f64() / reps as f64
+        };
+        let t_aff = bench(&mut par);
+        let t_dyn = bench(&mut dyn_par);
+        DynCompare {
+            ctx: ctx_long,
+            width: w,
+            t_affinity_ms: t_aff * 1e3,
+            t_dyn_ms: t_dyn * 1e3,
+            dyn_x: t_aff / t_dyn,
+            frac,
+        }
+    };
+
     let residual_uncal =
         rows.iter().map(|r| (r.sim_x - r.measured_x).abs()).sum::<f64>() / rows.len() as f64;
     let residual_cal = host.map(|_| {
@@ -614,7 +680,18 @@ pub fn measured_sweep(
         Some(rc) => text.push_str(&format!(", calibrated {rc:.2}\n")),
         None => text.push_str(" (run with --autotune for the calibrated column)\n"),
     }
-    MeasuredOutcome { text, rows, balance, residual_uncal, residual_cal }
+    text.push_str(&format!(
+        "affinity vs dynamic context split (hcmp:dyn, frac {:.2}) at B={} ctx={} w={}: \
+         affinity {:.2} ms, dyn {:.2} ms ({:.2}x)\n",
+        dyn_compare.frac,
+        batches[0].max(1),
+        dyn_compare.ctx,
+        dyn_compare.width,
+        dyn_compare.t_affinity_ms,
+        dyn_compare.t_dyn_ms,
+        dyn_compare.dyn_x,
+    ));
+    MeasuredOutcome { text, rows, balance, residual_uncal, residual_cal, dyn_compare }
 }
 
 #[cfg(test)]
@@ -712,6 +789,19 @@ mod tests {
         }
         let ctxs: std::collections::BTreeSet<usize> = out.rows.iter().map(|r| r.ctx).collect();
         assert!(ctxs.len() >= 2, "long-context point missing: {ctxs:?}");
+    }
+
+    #[test]
+    fn measured_reports_affinity_vs_dynamic_at_long_context() {
+        let out = measured_sweep(1, None, &[1], &[2, 4]);
+        let d = &out.dyn_compare;
+        assert!(d.t_affinity_ms > 0.0 && d.t_dyn_ms > 0.0, "{d:?}: non-positive timing");
+        assert!(d.dyn_x > 0.0 && d.dyn_x.is_finite());
+        assert!((0.0..=1.0).contains(&d.frac));
+        // pinned to the long-context point at the largest swept width
+        assert_eq!(d.ctx, out.rows.iter().map(|r| r.ctx).max().unwrap());
+        assert_eq!(d.width, out.rows.iter().map(|r| r.width).max().unwrap());
+        assert!(out.text.contains("dynamic context split"), "comparison row not printed");
     }
 
     #[test]

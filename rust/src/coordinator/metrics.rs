@@ -45,6 +45,9 @@ struct Inner {
     current_ratio: Option<f64>,
     /// Draft-tree width used for new admissions.
     current_width: Option<u64>,
+    /// The dynamic context-split fraction currently executing (None: the
+    /// engine runs the bitwise affinity attention path, not `hcmp:dyn`).
+    current_dense_split: Option<f64>,
     /// The calibrated cost model's predicted wide/narrow balance for the
     /// deployed plan; `stats` reports |predicted - measured| as the
     /// prediction residual.
@@ -126,6 +129,27 @@ impl Metrics {
         m.current_ratio = ratio;
         m.current_width = Some(width as u64);
         m.predicted_balance = predicted_balance;
+    }
+
+    /// Record the dynamic context-split fraction deployed at startup
+    /// (None when the engine runs the bitwise affinity path).
+    pub fn set_dense_split(&self, frac: Option<f64>) {
+        self.inner.lock().unwrap().current_dense_split = frac;
+    }
+
+    /// Record an applied online dense-split re-tune (a plan swap — starts a
+    /// new measurement era like ratio/width swaps do).
+    pub fn record_dense_split_retune(&self, new_frac: f64) {
+        let mut m = self.inner.lock().unwrap();
+        m.retune_count += 1;
+        m.current_dense_split = Some(new_frac);
+        m.era_wide_busy_s = 0.0;
+        m.era_narrow_busy_s = 0.0;
+    }
+
+    /// The currently executing dynamic context-split fraction, if any.
+    pub fn current_dense_split(&self) -> Option<f64> {
+        self.inner.lock().unwrap().current_dense_split
     }
 
     /// Record an applied online ratio re-tune. Starts a new measurement
@@ -228,6 +252,7 @@ impl Metrics {
             ("retune_count", Json::num(m.retune_count as f64)),
             ("current_ratio", opt(m.current_ratio)),
             ("current_width", opt(m.current_width.map(|w| w as f64))),
+            ("current_dense_split", opt(m.current_dense_split)),
             ("predicted_balance", opt(m.predicted_balance)),
             ("prediction_residual", residual),
         ])
@@ -306,6 +331,24 @@ mod tests {
         assert_eq!(j.get("current_width").unwrap().as_usize(), Some(8));
         let res = j.get("prediction_residual").unwrap().as_f64().unwrap();
         assert!((res - (0.9f64 - 0.6).abs()).abs() < 1e-9, "residual {res}");
+    }
+
+    #[test]
+    fn dense_split_surface_tracks_retunes() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().get("current_dense_split"), Some(&Json::Null));
+        m.set_dense_split(Some(0.5));
+        m.record_unit_busy(1.0, 1.0);
+        m.record_dense_split_retune(0.42);
+        assert_eq!(m.retunes(), 1, "dense-split swap counts as a retune");
+        assert_eq!(m.current_dense_split(), Some(0.42));
+        let j = m.snapshot();
+        let f = j.get("current_dense_split").unwrap().as_f64().unwrap();
+        assert!((f - 0.42).abs() < 1e-12);
+        // the swap started a new measurement era: with no busy time
+        // measured under the new plan yet, the residual reports null
+        m.set_predicted_balance(0.9);
+        assert_eq!(m.snapshot().get("prediction_residual"), Some(&Json::Null));
     }
 
     #[test]

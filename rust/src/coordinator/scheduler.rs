@@ -46,6 +46,12 @@ pub const DEFAULT_MAX_BATCH: usize = 8;
 pub struct RetunePolicy {
     /// Nudges the executable linear column ratio from measured balance.
     pub ratio: Option<OnlineRetuner>,
+    /// Nudges the dynamic attention context-split fraction (`hcmp:dyn`
+    /// engines only) from the same measured balance. Unlike ratio swaps
+    /// this moves *where the softmax is cut*, so it changes f32 rounding —
+    /// committed tokens stay identical on golden traces, logits move by at
+    /// most the documented merge-tree bound.
+    pub dense_split: Option<OnlineRetuner>,
     /// Swaps the ARCA tree for future admissions from measured acceptance.
     pub width: Option<WidthRetuner>,
     /// The calibrated cost model's predicted balance for the deployed
@@ -220,6 +226,15 @@ impl Scheduler {
                         policy.ratio = None;
                     }
                 }
+                // same deal for the dynamic context split: an engine built
+                // without `hcmp:dyn` rejects the initial fraction, so the
+                // retuner is dropped rather than left tracking a phantom
+                if let Some(rt) = &policy.dense_split {
+                    if !engine.retune_dense_split(rt.ratio()) {
+                        policy.dense_split = None;
+                    }
+                }
+                metrics_w.set_dense_split(engine.dense_split());
                 metrics_w.set_plan(
                     policy.ratio.as_ref().map(|r| r.ratio()),
                     tree.width(),
@@ -320,6 +335,21 @@ impl Scheduler {
                                             .set_predicted_balance(f(new_ratio, tree.width())),
                                         None => metrics_w.clear_predicted_balance(),
                                     }
+                                }
+                            }
+                        }
+                        // dynamic context-split re-tuning: same measured
+                        // balance signal, same step-boundary application —
+                        // the merge tree only reshapes on the next forward.
+                        if let Some(rt) = policy.dense_split.as_mut() {
+                            if let Some(new_frac) = rt.observe_step(dw, dn) {
+                                if engine.retune_dense_split(new_frac) {
+                                    metrics_w.record_dense_split_retune(new_frac);
+                                    // the calibrated predictor prices the
+                                    // (ratio, width) plan only; after a
+                                    // split move it no longer describes the
+                                    // executing merge tree
+                                    metrics_w.clear_predicted_balance();
                                 }
                             }
                         }
@@ -659,6 +689,87 @@ mod tests {
             stats.get("retune_count").unwrap().as_usize().unwrap() as u64,
             s.metrics.retunes()
         );
+    }
+
+    #[test]
+    fn dyn_scheduler_retunes_the_split_and_commits_same_tokens() {
+        use crate::arca::autotune::{OnlineRetuner, RetuneConfig};
+        use crate::exec::ExecEngine;
+        use crate::hcmp::PartitionPlan;
+
+        let want = sched()
+            .submit(Request {
+                id: 0,
+                prompt: "dyn me".into(),
+                max_new: 12,
+                engine: EngineChoice::Ghidorah,
+            })
+            .unwrap()
+            .text;
+
+        // lopsided on both axes: the wide pool is far busier, so the split
+        // retuner must keep cutting the wide sub-span down
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let start = 0.95;
+        let policy = RetunePolicy {
+            dense_split: Some(OnlineRetuner::new(
+                start,
+                RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
+            )),
+            ..Default::default()
+        };
+        let s = Scheduler::spawn_tuned(
+            move || ExecEngine::parallel_dyn(model, &PartitionPlan::hcmp_dyn(start, start), 2, 2),
+            VerificationTree::chain(3),
+            8,
+            4,
+            DEFAULT_MAX_BATCH,
+            policy,
+        );
+        for id in 1..=3 {
+            let got = s
+                .submit(Request {
+                    id,
+                    prompt: "dyn me".into(),
+                    max_new: 12,
+                    engine: EngineChoice::Ghidorah,
+                })
+                .unwrap();
+            assert_eq!(got.text, want, "dyn engine diverged on request {id}");
+        }
+        assert!(s.metrics.retunes() > 0, "lopsided split never re-tuned");
+        let frac = s.metrics.current_dense_split().expect("split surfaced");
+        assert!(frac < start, "split should move toward the idle pool: {frac}");
+    }
+
+    #[test]
+    fn dense_split_retuner_is_dropped_on_affinity_engines() {
+        use crate::arca::autotune::OnlineRetuner;
+        use crate::exec::ExecEngine;
+        use crate::hcmp::PartitionPlan;
+
+        // an affinity (non-dyn) engine rejects the initial fraction, so the
+        // policy's split retuner is dropped and stats never report one
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let policy = RetunePolicy {
+            dense_split: Some(OnlineRetuner::new(0.5, Default::default())),
+            ..Default::default()
+        };
+        let s = Scheduler::spawn_tuned(
+            move || ExecEngine::parallel(model, &PartitionPlan::hcmp(0.5), 2, 2),
+            VerificationTree::chain(3),
+            8,
+            4,
+            DEFAULT_MAX_BATCH,
+            policy,
+        );
+        let r = s
+            .submit(Request { id: 1, prompt: "hi".into(), max_new: 4, engine: EngineChoice::Ghidorah })
+            .unwrap();
+        assert_eq!(r.tokens, 4);
+        assert_eq!(s.metrics.current_dense_split(), None);
     }
 
     #[test]

@@ -42,6 +42,17 @@ pub trait StepExecutor: Send {
     fn current_ratio(&self) -> Option<f64> {
         None
     }
+    /// Swap the dynamic context-split cut fraction for subsequent forwards
+    /// (only valid between steps). Returns false for executors without the
+    /// dynamic split armed (the default) — an engine running the bitwise
+    /// affinity path must never silently go approximate.
+    fn retune_dense_split(&mut self, _frac: f64) -> bool {
+        false
+    }
+    /// The currently executing dynamic context-split fraction, if any.
+    fn dense_split(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// Measured execution-side timings, the wall-clock counterpart of the
@@ -63,12 +74,21 @@ pub struct ExecTimings {
 impl ExecTimings {
     /// Measured load-balance quality: idler / busier unit occupancy
     /// (1.0 = perfectly balanced; same definition as `SimReport::balance`).
+    /// Guarded against all-idle and non-finite inputs: `hi <= 0.0` is
+    /// *false* for NaN, so the naive guard would leak NaN into the
+    /// retuner's ratio nudges and the `predicted_balance` stats — any
+    /// degenerate window reports the neutral 1.0 instead.
     pub fn balance(&self) -> f64 {
         let hi = self.wide_busy_s.max(self.narrow_busy_s);
-        if hi <= 0.0 {
+        if !hi.is_finite() || hi <= 0.0 {
             return 1.0;
         }
-        self.wide_busy_s.min(self.narrow_busy_s) / hi
+        let b = self.wide_busy_s.min(self.narrow_busy_s) / hi;
+        if b.is_finite() {
+            b
+        } else {
+            1.0
+        }
     }
 
     /// Average per-step report in the simulator's shape, so measured and
@@ -107,9 +127,14 @@ impl BalanceWindow {
         Self { cap: capacity.max(1), ring: Vec::new(), next: 0, pushed: 0 }
     }
 
-    /// Record one step's measured per-unit busy delta.
+    /// Record one step's measured per-unit busy delta. Negative deltas
+    /// (engine counter reset) and non-finite samples (NaN from a
+    /// zero-duration division, inf from a clock glitch) clamp to zero —
+    /// one bad step must not poison every windowed balance for the next
+    /// `capacity` steps.
     pub fn push(&mut self, wide_s: f64, narrow_s: f64) {
-        let sample = (wide_s.max(0.0), narrow_s.max(0.0));
+        let clamp = |x: f64| if x.is_finite() && x > 0.0 { x } else { 0.0 };
+        let sample = (clamp(wide_s), clamp(narrow_s));
         if self.ring.len() < self.cap {
             self.ring.push(sample);
         } else {
@@ -151,14 +176,11 @@ impl BalanceWindow {
     }
 
     /// Windowed load balance: idler / busier unit occupancy, 1.0 when
-    /// balanced or empty (same definition as [`ExecTimings::balance`]).
+    /// balanced, empty, or all-idle (same definition — and the same
+    /// NaN-proof guard — as [`ExecTimings::balance`]).
     pub fn balance(&self) -> f64 {
         let (w, n) = self.busy();
-        let hi = w.max(n);
-        if hi <= 0.0 {
-            return 1.0;
-        }
-        w.min(n) / hi
+        ExecTimings { steps: 0, total_s: 0.0, wide_busy_s: w, narrow_busy_s: n }.balance()
     }
 }
 
@@ -187,6 +209,21 @@ impl ExecEngine {
         Ok(Self { model, exec: Box::new(exec) })
     }
 
+    /// HCMP-parallel engine with the dynamic context split armed
+    /// (`--parallel hcmp:dyn`): executes the plan's fractional
+    /// `dense_gpu_frac` via the online-softmax merge tree, trading bitwise
+    /// parity for the documented deviation bound
+    /// (`parallel::DYN_SPLIT_LOGIT_TOL`).
+    pub fn parallel_dyn(
+        model: RustModel,
+        plan: &PartitionPlan,
+        wide_threads: usize,
+        narrow_threads: usize,
+    ) -> anyhow::Result<Self> {
+        let exec = HcmpParallelExecutor::new_dyn(plan, wide_threads, narrow_threads)?;
+        Ok(Self { model, exec: Box::new(exec) })
+    }
+
     pub fn executor_name(&self) -> &'static str {
         self.exec.name()
     }
@@ -204,6 +241,17 @@ impl ExecEngine {
     /// The currently executing wide-unit column ratio, if any.
     pub fn current_ratio(&self) -> Option<f64> {
         self.exec.current_ratio()
+    }
+
+    /// Swap the dynamic context-split cut between steps; false when the
+    /// underlying executor runs the bitwise affinity path.
+    pub fn retune_dense_split(&mut self, frac: f64) -> bool {
+        self.exec.retune_dense_split(frac)
+    }
+
+    /// The currently executing dynamic context-split fraction, if any.
+    pub fn dense_split(&self) -> Option<f64> {
+        self.exec.dense_split()
     }
 
     pub fn model(&self) -> &RustModel {
@@ -233,6 +281,14 @@ impl BatchedStepExecutor for ExecEngine {
 
     fn retune_ratio(&mut self, ratio: f64) -> bool {
         ExecEngine::retune_ratio(self, ratio)
+    }
+
+    fn retune_dense_split(&mut self, frac: f64) -> bool {
+        ExecEngine::retune_dense_split(self, frac)
+    }
+
+    fn dense_split(&self) -> Option<f64> {
+        ExecEngine::dense_split(self)
     }
 }
 
@@ -276,5 +332,36 @@ mod tests {
         w.push(-1.0, 1.0);
         assert_eq!(w.busy(), (0.0, 1.0));
         assert_eq!(w.balance(), 0.0);
+    }
+
+    #[test]
+    fn balance_never_yields_nan() {
+        // all-idle timings: neutral, not 0/0
+        let idle = ExecTimings { steps: 3, total_s: 1.0, wide_busy_s: 0.0, narrow_busy_s: 0.0 };
+        assert_eq!(idle.balance(), 1.0);
+        // NaN busy times (zero-duration division upstream) must not leak:
+        // `hi <= 0.0` is false for NaN, so the naive guard passed NaN on
+        for (w, n) in [(f64::NAN, f64::NAN), (f64::NAN, 1.0), (1.0, f64::NAN)] {
+            let t = ExecTimings { steps: 1, total_s: 1.0, wide_busy_s: w, narrow_busy_s: n };
+            assert!(t.balance().is_finite(), "balance({w}, {n}) not finite");
+        }
+        let inf = ExecTimings {
+            steps: 1,
+            total_s: 1.0,
+            wide_busy_s: f64::INFINITY,
+            narrow_busy_s: f64::INFINITY,
+        };
+        assert_eq!(inf.balance(), 1.0);
+    }
+
+    #[test]
+    fn balance_window_rejects_non_finite_samples() {
+        let mut w = BalanceWindow::new(4);
+        w.push(f64::NAN, f64::INFINITY);
+        assert_eq!(w.busy(), (0.0, 0.0), "non-finite samples must clamp to zero");
+        assert_eq!(w.balance(), 1.0, "all-idle window reports neutral balance");
+        w.push(2.0, 1.0);
+        assert!((w.balance() - 0.5).abs() < 1e-12);
+        assert!(w.balance().is_finite());
     }
 }

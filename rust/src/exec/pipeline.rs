@@ -16,7 +16,7 @@
 
 use crate::model::forward::{rmsnorm, rope_inplace, RustModel, SegmentInput, StepOutput};
 use crate::model::ModelConfig;
-use crate::sparse::{attention_sparse_opt, merge_partials, Partials};
+use crate::sparse::{attention_dense_span, attention_sparse_opt, merge_partials, Partials};
 use crate::tensor::{gemm, Tensor};
 use crate::util::mathx::silu;
 
@@ -203,6 +203,9 @@ pub(crate) fn head_cols(x: &Tensor, head: usize, dh: usize) -> Tensor {
 /// Row-local: every output row depends only on its own query row, so a
 /// row-range call is bitwise identical to the same rows of the full call —
 /// the wide pool shards the span across threads with no per-chunk copies.
+/// Thin whole-context delegate to [`attention_dense_span`], the
+/// context-windowed kernel the dynamic split executes sub-spans through;
+/// `(c_lo, c_hi) = (0, len)` keeps this path op-for-op what it always was.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn dense_span(
     q: &Tensor,
@@ -216,42 +219,5 @@ pub(crate) fn dense_span(
     lo: usize,
     hi: usize,
 ) -> Partials {
-    assert!(lo <= hi && hi <= q.shape()[0]);
-    let w = hi - lo;
-    let stride = hn * dh;
-    let mut o = Tensor::zeros(&[w, dh]);
-    let mut ms = vec![f32::NEG_INFINITY; w];
-    let mut ls = vec![0.0f32; w];
-    if len == 0 {
-        return Partials { o, m: ms, l: ls };
-    }
-    let mut scores = vec![0.0f32; len];
-    for i in lo..hi {
-        let qrow = q.row(i);
-        for (j, s) in scores.iter_mut().enumerate() {
-            let krow = &kc[j * stride + head * dh..j * stride + (head + 1) * dh];
-            let mut acc = 0.0f32;
-            for d in 0..dh {
-                acc += qrow[d] * krow[d];
-            }
-            *s = acc * scale;
-        }
-        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut l = 0.0f32;
-        for s in scores.iter_mut() {
-            *s = (*s - m).exp();
-            l += *s;
-        }
-        let orow = o.row_mut(i - lo);
-        for (j, p) in scores.iter().enumerate() {
-            let vrow = &vc[j * stride + head * dh..j * stride + (head + 1) * dh];
-            let pw = p / l;
-            for d in 0..dh {
-                orow[d] += pw * vrow[d];
-            }
-        }
-        ms[i - lo] = m;
-        ls[i - lo] = l;
-    }
-    Partials { o, m: ms, l: ls }
+    attention_dense_span(q, kc, vc, head, hn, dh, scale, lo, hi, 0, len)
 }

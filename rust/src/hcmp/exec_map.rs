@@ -2,20 +2,29 @@
 //! plan for the real parallel engine (`exec::HcmpParallelExecutor`).
 //!
 //! The cost model prices fractional splits of everything; the executor
-//! realizes the subset that preserves the bitwise-parity guarantee:
+//! realizes them at two opt-in fidelity levels:
 //!
 //! * `linear_ratio` maps exactly — output columns `[0, ratio*n)` of every
 //!   linear go to the wide-unit pool, the rest to the narrow-unit pool
-//!   (column partitioning never reorders any element's accumulation).
-//! * The attention split maps to pure **affinity**: the whole dense span
-//!   on the wide unit, the whole sparse span on the narrow unit.
-//!   Fractional `dense_gpu_frac` / `sparse_cpu_frac` refinements stay
-//!   simulator-only — executing them would split a span's softmax into a
-//!   different online-softmax merge order and perturb the f32 result.
-//! * Megatron-style plans are **rejected**: they need an all-reduce
-//!   between partial sums, which both changes the math (summation order)
-//!   and is the overhead HCMP exists to avoid; they remain cost-model
-//!   baselines only.
+//!   (column partitioning never reorders any element's accumulation), so
+//!   the default [`plan_to_exec`] mapping is **bitwise identical** to the
+//!   sequential engine. Its attention split is pure **affinity**: the
+//!   whole dense span on the wide unit, the whole sparse span on the
+//!   narrow unit.
+//! * [`plan_to_exec_dyn`] additionally executes the plan's fractional
+//!   `dense_gpu_frac` (the paper's *dynamic* context split, Fig 10a):
+//!   each dense span's context columns are cut at `round(ctx * frac)` and
+//!   the two sub-spans run as independent online-softmax partials on the
+//!   wide and narrow units. Splitting a span's softmax changes the f32
+//!   summation order, so this mapping intentionally trades bitwise parity
+//!   for a documented ULP-scale deviation bound
+//!   (`exec::parallel::DYN_SPLIT_LOGIT_TOL`); `--parallel hcmp:dyn` is
+//!   the only way to opt in. `sparse_cpu_frac` refinements remain
+//!   simulator-only.
+//! * Megatron-style plans are **rejected** by both mappings: they need an
+//!   all-reduce between partial sums, which both changes the math
+//!   (summation order) and is the overhead HCMP exists to avoid; they
+//!   remain cost-model baselines only.
 
 use super::partition::PartitionPlan;
 
@@ -28,6 +37,15 @@ pub struct ExecPlan {
     pub wide_threads: usize,
     /// Threads in the narrow-unit pool (CPU analogue).
     pub narrow_threads: usize,
+    /// Dynamic context split: fraction of each dense span's context
+    /// columns the wide unit computes, the rest going to the narrow unit
+    /// as an independent online-softmax partial. `None` (the default
+    /// affinity mapping) keeps the whole span on the wide unit and the
+    /// engine bitwise; `Some(f)` opts in to the merge-tree path with its
+    /// documented deviation bound. `Some(0.0)` / `Some(1.0)` degenerate
+    /// to whole-span execution (on the narrow / wide unit respectively)
+    /// and stay bitwise.
+    pub dense_split: Option<f64>,
 }
 
 impl ExecPlan {
@@ -47,6 +65,33 @@ impl ExecPlan {
             "linear_ratio {ratio} outside [0, 1]"
         );
         self.linear_ratio = ratio;
+        Ok(())
+    }
+
+    /// Number of context columns (of `ctx`) the wide unit computes of one
+    /// dense span under the dynamic split; `ctx` (the whole span) when the
+    /// split is off.
+    pub fn wide_ctx(&self, ctx: usize) -> usize {
+        match self.dense_split {
+            Some(f) => (((ctx as f64) * f).round() as usize).min(ctx),
+            None => ctx,
+        }
+    }
+
+    /// Re-point the dynamic context-split fraction (ARCA online
+    /// re-tuning, step boundaries only). Errors on a non-finite or
+    /// out-of-range fraction, and on engines built without the dynamic
+    /// split — an affinity engine must never silently go approximate.
+    pub fn set_dense_split(&mut self, frac: f64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.dense_split.is_some(),
+            "engine was built without the dynamic context split (hcmp:dyn)"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&frac) && frac.is_finite(),
+            "dense_split {frac} outside [0, 1]"
+        );
+        self.dense_split = Some(frac);
         Ok(())
     }
 }
@@ -72,7 +117,28 @@ pub fn plan_to_exec(
         linear_ratio: plan.linear_ratio,
         wide_threads: wide_threads.max(1),
         narrow_threads: narrow_threads.max(1),
+        dense_split: None,
     })
+}
+
+/// Map a partition plan onto pools *with* the dynamic context split armed:
+/// the plan's `attention.dense_gpu_frac` becomes the executable cut
+/// fraction. Same rejection rules as [`plan_to_exec`], plus validation of
+/// the fraction itself. Opting in relaxes bitwise parity to the documented
+/// deviation bound (see module docs).
+pub fn plan_to_exec_dyn(
+    plan: &PartitionPlan,
+    wide_threads: usize,
+    narrow_threads: usize,
+) -> anyhow::Result<ExecPlan> {
+    let frac = plan.attention.dense_gpu_frac;
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&frac) && frac.is_finite(),
+        "dense_gpu_frac {frac} outside [0, 1]"
+    );
+    let mut exec = plan_to_exec(plan, wide_threads, narrow_threads)?;
+    exec.dense_split = Some(frac);
+    Ok(exec)
 }
 
 /// Default pool sizes for this host: roughly two thirds of the cores to
@@ -121,9 +187,39 @@ mod tests {
     #[test]
     fn megatron_rejected_pools_clamped() {
         assert!(plan_to_exec(&PartitionPlan::megatron(0.5), 2, 2).is_err());
+        assert!(plan_to_exec_dyn(&PartitionPlan::megatron(0.5), 2, 2).is_err());
         let p = plan_to_exec(&PartitionPlan::hcmp(0.5), 0, 0).unwrap();
         assert_eq!((p.wide_threads, p.narrow_threads), (1, 1));
         let (w, n) = auto_pool_sizes();
         assert!(w >= 1 && n >= 1);
+    }
+
+    #[test]
+    fn dyn_mapping_arms_the_context_split() {
+        let affinity = plan_to_exec(&PartitionPlan::hcmp(0.5), 2, 2).unwrap();
+        assert_eq!(affinity.dense_split, None);
+        assert_eq!(affinity.wide_ctx(100), 100, "affinity keeps the whole span");
+
+        let p = plan_to_exec_dyn(&PartitionPlan::hcmp_dyn(0.5, 0.7), 2, 2).unwrap();
+        assert_eq!(p.dense_split, Some(0.7));
+        assert_eq!(p.wide_ctx(100), 70);
+        assert_eq!(p.wide_ctx(0), 0);
+
+        let mut bad = PartitionPlan::hcmp(0.5);
+        bad.attention.dense_gpu_frac = f64::NAN;
+        assert!(plan_to_exec_dyn(&bad, 2, 2).is_err());
+    }
+
+    #[test]
+    fn set_dense_split_validates_and_respects_opt_in() {
+        let mut affinity = plan_to_exec(&PartitionPlan::hcmp(0.5), 2, 2).unwrap();
+        assert!(affinity.set_dense_split(0.5).is_err(), "affinity must not go approximate");
+
+        let mut p = plan_to_exec_dyn(&PartitionPlan::hcmp_dyn(0.5, 1.0), 2, 2).unwrap();
+        p.set_dense_split(0.25).unwrap();
+        assert_eq!(p.wide_ctx(64), 16);
+        assert!(p.set_dense_split(1.5).is_err());
+        assert!(p.set_dense_split(f64::NAN).is_err());
+        assert_eq!(p.dense_split, Some(0.25), "failed set must not clobber the fraction");
     }
 }

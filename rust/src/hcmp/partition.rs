@@ -58,6 +58,18 @@ impl PartitionPlan {
         Self { linear_ratio, attention: AttentionSplit::static_affinity(), megatron_style: false }
     }
 
+    /// HCMP plan with the dynamic context split (Fig 10a): the dense span
+    /// is cut at `dense_gpu_frac` of its context columns between the
+    /// units. Executable via `hcmp::plan_to_exec_dyn` / `--parallel
+    /// hcmp:dyn`; the sparse span stays whole on the CPU analogue.
+    pub fn hcmp_dyn(linear_ratio: f64, dense_gpu_frac: f64) -> Self {
+        Self {
+            linear_ratio,
+            attention: AttentionSplit { dense_gpu_frac, sparse_cpu_frac: 1.0 },
+            megatron_style: false,
+        }
+    }
+
     /// Medusa+EM baseline: Megatron TP partitioning + zero-copy, ratio from
     /// isolated execution times (EdgeNN-style), draft span as masked dense.
     pub fn megatron(linear_ratio: f64) -> Self {

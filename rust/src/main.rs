@@ -54,10 +54,10 @@ fn usage() -> ! {
 
 USAGE:
   ghidorah serve    [--addr 127.0.0.1:7331] [--width 16] [--topk 4] [--batch 8]
-                    [--parallel hcmp[:RATIO]|seq] [--wide N] [--narrow M]
+                    [--parallel hcmp[:RATIO]|hcmp:dyn[:RATIO]|seq] [--wide N] [--narrow M]
                     [--autotune] [--host-profile PATH]
   ghidorah generate --prompt TEXT [--max-new 32] [--engine ghidorah|sequential] [--width 16]
-                    [--parallel hcmp[:RATIO]|seq] [--wide N] [--narrow M]
+                    [--parallel hcmp[:RATIO]|hcmp:dyn[:RATIO]|seq] [--wide N] [--narrow M]
                     [--autotune] [--host-profile PATH]
   ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256] [--host-profile PATH]
   ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|all
@@ -67,9 +67,14 @@ USAGE:
   --parallel selects the pure-Rust execution engine: `hcmp[:RATIO]` runs the
   HCMP plan (wide-unit column ratio RATIO, default 0.5) concurrently on two
   worker pools sized --wide/--narrow (default: derived from the core count);
-  `seq` runs the single-threaded engine. Without --parallel the PJRT/AOT
-  runtime serves (requires the `pjrt` feature + artifacts). The env var
-  GHIDORAH_PARALLEL supplies the default when the flag is absent.
+  `hcmp:dyn[:RATIO]` additionally splits each attention span's context
+  columns fractionally across the pools, merging the online-softmax
+  partials (committed tokens match the affinity engine on golden traces;
+  raw logits may differ within an ULP-scale merge bound, see
+  exec::parallel::DYN_SPLIT_LOGIT_TOL); `seq` runs the single-threaded
+  engine. Without --parallel the PJRT/AOT runtime serves (requires the
+  `pjrt` feature + artifacts). The env var GHIDORAH_PARALLEL supplies the
+  default when the flag is absent.
 
   --autotune calibrates the ARCA cost model to THIS host (micro-benchmarks
   on the real worker pools), picks the initial hcmp ratio from the
@@ -139,6 +144,10 @@ enum ParallelMode {
         /// True when the user pinned the ratio (`hcmp:RATIO`) — autotune
         /// then leaves the initial ratio alone.
         explicit: bool,
+        /// True for `hcmp:dyn[:RATIO]`: execute the fractional context
+        /// split in attention (online-softmax merge tree) instead of the
+        /// bitwise per-head affinity path.
+        dynamic: bool,
     },
 }
 
@@ -156,20 +165,41 @@ fn parse_parallel(flags: &BTreeMap<String, String>) -> anyhow::Result<Option<Par
             _ => return Ok(None),
         },
     };
+    let ratio_in = |r: &str| r.parse::<f64>().ok().filter(|r| (0.0..=1.0).contains(r));
     match s {
         "seq" | "sequential" => Ok(Some(ParallelMode::Seq)),
-        "hcmp" | "true" => {
-            Ok(Some(ParallelMode::Hcmp { plan: PartitionPlan::hcmp(0.5), explicit: false }))
-        }
+        "hcmp" | "true" => Ok(Some(ParallelMode::Hcmp {
+            plan: PartitionPlan::hcmp(0.5),
+            explicit: false,
+            dynamic: false,
+        })),
+        "hcmp:dyn" => Ok(Some(ParallelMode::Hcmp {
+            plan: PartitionPlan::hcmp_dyn(0.5, 0.5),
+            explicit: false,
+            dynamic: true,
+        })),
         other => {
-            let ratio = other
-                .strip_prefix("hcmp:")
-                .and_then(|r| r.parse::<f64>().ok())
-                .filter(|r| (0.0..=1.0).contains(r))
-                .ok_or_else(|| {
-                    anyhow::anyhow!("bad --parallel '{other}' (want hcmp, hcmp:RATIO, or seq)")
-                })?;
-            Ok(Some(ParallelMode::Hcmp { plan: PartitionPlan::hcmp(ratio), explicit: true }))
+            let bad = || {
+                anyhow::anyhow!(
+                    "bad --parallel '{other}' (want hcmp, hcmp:RATIO, hcmp:dyn[:RATIO], or seq)"
+                )
+            };
+            if let Some(r) = other.strip_prefix("hcmp:dyn:") {
+                // RATIO pins both the linear column ratio and the initial
+                // attention context split
+                let ratio = ratio_in(r).ok_or_else(bad)?;
+                return Ok(Some(ParallelMode::Hcmp {
+                    plan: PartitionPlan::hcmp_dyn(ratio, ratio),
+                    explicit: true,
+                    dynamic: true,
+                }));
+            }
+            let ratio = other.strip_prefix("hcmp:").and_then(ratio_in).ok_or_else(bad)?;
+            Ok(Some(ParallelMode::Hcmp {
+                plan: PartitionPlan::hcmp(ratio),
+                explicit: true,
+                dynamic: false,
+            }))
         }
     }
 }
@@ -215,13 +245,24 @@ fn apply_autotune(
     tree: &VerificationTree,
     heads: &[Vec<f64>],
 ) -> (ParallelMode, RetunePolicy) {
-    let (Some(p), ParallelMode::Hcmp { plan, explicit }) = (profile, mode) else {
+    let (Some(p), ParallelMode::Hcmp { plan, explicit, dynamic }) = (profile, mode) else {
         return (mode, RetunePolicy::none());
     };
     let pattern = tree.pattern();
     let ctx = 64usize.min(cfg.max_ctx / 2); // representative serving context
     let plan = if explicit {
         plan
+    } else if dynamic {
+        // hill-climb ratio AND attention split on the calibrated simulator;
+        // a split already persisted in the profile wins over a fresh climb
+        let (tuned, _t) = p.tune_plan_dyn(cfg, tree.width(), ctx, Some(&pattern));
+        let frac = p.dyn_split.unwrap_or(tuned.attention.dense_gpu_frac);
+        eprintln!(
+            "ghidorah: autotune initial ratio {:.2}, context split {:.2} \
+             (host-calibrated tune_plan_dyn)",
+            tuned.linear_ratio, frac
+        );
+        PartitionPlan::hcmp_dyn(tuned.linear_ratio, frac)
     } else {
         let (tuned, _t) = p.tune_plan(cfg, tree.width(), ctx, Some(&pattern));
         eprintln!(
@@ -246,6 +287,11 @@ fn apply_autotune(
     let (p2, cfg2, heads2) = (p.clone(), cfg.clone(), heads.to_vec());
     let policy = RetunePolicy {
         ratio: Some(OnlineRetuner::new(plan.linear_ratio, RetuneConfig::default())),
+        // dyn engines also re-tune where the attention softmax is cut, on a
+        // slower clock than the ratio retuner so the two don't fight
+        dense_split: dynamic.then(|| {
+            OnlineRetuner::new(plan.attention.dense_gpu_frac, RetuneConfig::dense_split())
+        }),
         width: Some(WidthRetuner::new(heads, &widths, tree.width())),
         predicted_balance: Some(predicted),
         predict_balance: Some(Box::new(move |r, w| {
@@ -260,7 +306,7 @@ fn apply_autotune(
             )
         })),
     };
-    (ParallelMode::Hcmp { plan, explicit: true }, policy)
+    (ParallelMode::Hcmp { plan, explicit: true, dynamic }, policy)
 }
 
 /// The shared `--autotune` wiring of serve/generate: resolve the host
@@ -280,6 +326,27 @@ fn autotune_wiring(
         ParallelMode::Seq => None,
     };
     let (wide, narrow) = reconcile_pools(flags, profile.as_ref(), wide, narrow);
+    // dyn engines: tune the context-split fraction on the calibrated
+    // simulator once and expose it in the host profile, so a saved profile
+    // reproduces the same split on later runs
+    let mut profile = profile;
+    if let (Some(p), ParallelMode::Hcmp { dynamic: true, .. }) = (profile.as_mut(), mode) {
+        if p.dyn_split.is_none() {
+            let pattern = tree.pattern();
+            let ctx = 64usize.min(cfg.max_ctx / 2);
+            let (tuned, _t) = p.tune_plan_dyn(cfg, tree.width(), ctx, Some(&pattern));
+            p.dyn_split = Some(tuned.attention.dense_gpu_frac);
+            if flags.get("autotune").is_some() {
+                if let Some(path) = flags.get("host-profile") {
+                    p.save(&PathBuf::from(path))?;
+                    eprintln!(
+                        "ghidorah: host profile updated with context split {:.2}",
+                        tuned.attention.dense_gpu_frac
+                    );
+                }
+            }
+        }
+    }
     let (mode, policy) = apply_autotune(mode, profile.as_ref(), cfg, tree, heads);
     Ok((mode, wide, narrow, policy))
 }
@@ -346,7 +413,15 @@ fn rust_engine_factory(
         let model = RustModel::new(cfg, weights);
         match mode {
             ParallelMode::Seq => Ok(ExecEngine::sequential(model)),
-            ParallelMode::Hcmp { plan, .. } => {
+            ParallelMode::Hcmp { plan, dynamic: true, .. } => {
+                eprintln!(
+                    "ghidorah: HCMP parallel engine (ratio {:.2}, dynamic context split {:.2}, \
+                     pools {wide}+{narrow})",
+                    plan.linear_ratio, plan.attention.dense_gpu_frac
+                );
+                ExecEngine::parallel_dyn(model, &plan, wide, narrow)
+            }
+            ParallelMode::Hcmp { plan, dynamic: false, .. } => {
                 eprintln!(
                     "ghidorah: HCMP parallel engine (ratio {:.2}, pools {wide}+{narrow})",
                     plan.linear_ratio

@@ -1,0 +1,157 @@
+//! Context-bounded dense-span attention partials — the kernel behind both
+//! the affinity split (whole span) and the opt-in dynamic context split
+//! (`--parallel hcmp:dyn`), where the committed-context columns of one
+//! (segment, head) span are divided between the wide and narrow units at
+//! `round(ctx * dense_gpu_frac)` and each unit computes its sub-span as an
+//! independent online-softmax partial (paper Fig 10a; Dovetail makes the
+//! same case for CPU/GPU co-execution of attention).
+//!
+//! Row-local *and* context-windowed: every output row depends only on its
+//! own query row and the `[c_lo, c_hi)` cache columns, so
+//! * a row-range call is bitwise identical to the same rows of the full
+//!   call (the wide pool's thread sharding), and
+//! * a full-context call `(0, len)` is bitwise identical to the legacy
+//!   whole-span kernel — the affinity path stays exact; only genuinely
+//!   split contexts go through a [`merge_partials_pair`] and pick up
+//!   ULP-scale rounding (see `DYN_SPLIT_LOGIT_TOL` in `exec::parallel`).
+//!
+//! [`merge_partials_pair`]: crate::sparse::merge_partials_pair
+
+use crate::tensor::Tensor;
+
+use super::Partials;
+
+/// Online-softmax partials of one head's dense span against cache columns
+/// `[c_lo, c_hi)`, for query rows `[lo, hi)` of `q`. `kc`/`vc` are flat
+/// `[C, H, Dh]` cache layers. An empty context range yields the identity
+/// partial (`m = -inf`, `l = 0` per row), which any merge absorbs.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_dense_span(
+    q: &Tensor,
+    kc: &[f32],
+    vc: &[f32],
+    head: usize,
+    hn: usize,
+    dh: usize,
+    scale: f32,
+    lo: usize,
+    hi: usize,
+    c_lo: usize,
+    c_hi: usize,
+) -> Partials {
+    assert!(lo <= hi && hi <= q.shape()[0]);
+    assert!(c_lo <= c_hi);
+    let w = hi - lo;
+    let ctx = c_hi - c_lo;
+    let stride = hn * dh;
+    let mut o = Tensor::zeros(&[w, dh]);
+    let mut ms = vec![f32::NEG_INFINITY; w];
+    let mut ls = vec![0.0f32; w];
+    if ctx == 0 {
+        return Partials { o, m: ms, l: ls };
+    }
+    let mut scores = vec![0.0f32; ctx];
+    for i in lo..hi {
+        let qrow = q.row(i);
+        for (jj, s) in scores.iter_mut().enumerate() {
+            let j = c_lo + jj;
+            let krow = &kc[j * stride + head * dh..j * stride + (head + 1) * dh];
+            let mut acc = 0.0f32;
+            for d in 0..dh {
+                acc += qrow[d] * krow[d];
+            }
+            *s = acc * scale;
+        }
+        let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut l = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            l += *s;
+        }
+        let orow = o.row_mut(i - lo);
+        for (jj, p) in scores.iter().enumerate() {
+            let j = c_lo + jj;
+            let vrow = &vc[j * stride + head * dh..j * stride + (head + 1) * dh];
+            let pw = p / l;
+            for d in 0..dh {
+                orow[d] += pw * vrow[d];
+            }
+        }
+        ms[i - lo] = m;
+        ls[i - lo] = l;
+    }
+    Partials { o, m: ms, l: ls }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::merge_partials_pair;
+    use crate::util::rng::Rng;
+
+    fn setup(ctx: usize, w: usize, dh: usize) -> (Tensor, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(11);
+        let hn = 2;
+        let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let kc: Vec<f32> = (0..ctx * hn * dh).map(|_| rng.normal() as f32).collect();
+        let vc: Vec<f32> = (0..ctx * hn * dh).map(|_| rng.normal() as f32).collect();
+        (q, kc, vc)
+    }
+
+    #[test]
+    fn split_context_merge_matches_whole_span() {
+        let (ctx, w, dh, hn) = (24usize, 5usize, 8usize, 2usize);
+        let (q, kc, vc) = setup(ctx, w, dh);
+        let scale = (dh as f32).powf(-0.5);
+        for head in 0..hn {
+            let whole = attention_dense_span(&q, &kc, &vc, head, hn, dh, scale, 0, w, 0, ctx);
+            for cut in [1, 7, 12, 23] {
+                let a = attention_dense_span(&q, &kc, &vc, head, hn, dh, scale, 0, w, 0, cut);
+                let b = attention_dense_span(&q, &kc, &vc, head, hn, dh, scale, 0, w, cut, ctx);
+                let merged = merge_partials_pair(&a, &b);
+                for (x, y) in merged.o.data().iter().zip(whole.o.data()) {
+                    assert!((x - y).abs() < 1e-5, "cut {cut}: {x} vs {y}");
+                }
+                for i in 0..w {
+                    assert!((merged.m[i] - whole.m[i]).abs() < 1e-6);
+                    assert!((merged.l[i] - whole.l[i]).abs() / whole.l[i] < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_context_range_is_identity_partial() {
+        let (ctx, w, dh) = (10usize, 3usize, 4usize);
+        let (q, kc, vc) = setup(ctx, w, dh);
+        let scale = (dh as f32).powf(-0.5);
+        let empty = attention_dense_span(&q, &kc, &vc, 0, 2, dh, scale, 0, w, 5, 5);
+        assert!(empty.m.iter().all(|&m| m == f32::NEG_INFINITY));
+        assert!(empty.l.iter().all(|&l| l == 0.0));
+        assert!(empty.o.data().iter().all(|&x| x == 0.0));
+        // merging the identity in never perturbs the other side
+        let whole = attention_dense_span(&q, &kc, &vc, 0, 2, dh, scale, 0, w, 0, ctx);
+        let merged = merge_partials_pair(&whole, &empty);
+        assert_eq!(merged.o.data(), whole.o.data());
+        assert_eq!(merged.m, whole.m);
+        assert_eq!(merged.l, whole.l);
+    }
+
+    #[test]
+    fn row_range_call_matches_full_call_bitwise() {
+        let (ctx, w, dh) = (16usize, 6usize, 8usize);
+        let (q, kc, vc) = setup(ctx, w, dh);
+        let scale = (dh as f32).powf(-0.5);
+        let full = attention_dense_span(&q, &kc, &vc, 1, 2, dh, scale, 0, w, 3, 13);
+        let a = attention_dense_span(&q, &kc, &vc, 1, 2, dh, scale, 0, 2, 3, 13);
+        let b = attention_dense_span(&q, &kc, &vc, 1, 2, dh, scale, 2, w, 3, 13);
+        for i in 0..2 {
+            assert_eq!(a.o.row(i), full.o.row(i));
+            assert_eq!((a.m[i], a.l[i]), (full.m[i], full.l[i]));
+        }
+        for i in 2..w {
+            assert_eq!(b.o.row(i - 2), full.o.row(i));
+            assert_eq!((b.m[i - 2], b.l[i - 2]), (full.m[i], full.l[i]));
+        }
+    }
+}

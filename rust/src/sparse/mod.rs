@@ -16,11 +16,13 @@
 
 mod coo;
 mod dense_ref;
+mod dense_span;
 mod spmm_naive;
 mod spmm_opt;
 
 pub use coo::CooPattern;
 pub use dense_ref::{attention_dense_masked, qkt_dense_masked, softmax_masked_rows, av_dense};
+pub use dense_span::attention_dense_span;
 pub use spmm_naive::{qkt_coo_naive, av_coo_naive};
 pub use spmm_opt::{qkt_coo_opt, av_coo_opt, attention_sparse_opt, attention_sparse_opt_rows};
 
@@ -35,6 +37,55 @@ pub struct Partials {
     pub m: Vec<f32>,
     /// Row partition sums, [W].
     pub l: Vec<f32>,
+}
+
+/// Merge two online-softmax partials into a *partial* (not a finished
+/// tensor): the result carries the combined row maxima and partition sums,
+/// so it is a valid input to a further merge — the building block of the
+/// dynamic context split's deterministic left-to-right merge tree
+/// (`--parallel hcmp:dyn`). Associative up to f32 rounding: each merge
+/// perturbs the exact result by at most a few ULP per element, which is
+/// why the dynamic engine documents a deviation bound instead of bitwise
+/// parity. An identity partial (`m = -inf`, `l = 0` — an empty span) is
+/// absorbed exactly; two identity partials merge to the identity (the
+/// `denom > 0` guard keeps `exp(-inf - -inf)` from minting NaN).
+pub fn merge_partials_pair(a: &Partials, b: &Partials) -> Partials {
+    let w = a.m.len();
+    assert_eq!(b.m.len(), w);
+    let dh = a.o.shape()[1];
+    let mut o = Tensor::zeros(&[w, dh]);
+    let mut ms = vec![f32::NEG_INFINITY; w];
+    let mut ls = vec![0.0f32; w];
+    for i in 0..w {
+        // an empty side (l = 0) is absorbed verbatim — exactly, not via
+        // the general formula, whose (x * w) / w round-trip can flip ULPs
+        if b.l[i] == 0.0 {
+            o.row_mut(i).copy_from_slice(a.o.row(i));
+            ms[i] = a.m[i];
+            ls[i] = a.l[i];
+            continue;
+        }
+        if a.l[i] == 0.0 {
+            o.row_mut(i).copy_from_slice(b.o.row(i));
+            ms[i] = b.m[i];
+            ls[i] = b.l[i];
+            continue;
+        }
+        let m = a.m[i].max(b.m[i]);
+        let wa = (a.m[i] - m).exp() * a.l[i];
+        let wb = (b.m[i] - m).exp() * b.l[i];
+        let denom = wa + wb;
+        if denom > 0.0 {
+            let (oa, ob) = (a.o.row(i), b.o.row(i));
+            let orow = o.row_mut(i);
+            for d in 0..dh {
+                orow[d] = (oa[d] * wa + ob[d] * wb) / denom;
+            }
+            ms[i] = m;
+            ls[i] = denom;
+        }
+    }
+    Partials { o, m: ms, l: ls }
 }
 
 /// Merge two online-softmax partials (the HCMP end-of-attention scaling).
@@ -104,6 +155,18 @@ mod tests {
         let merged = merge_partials(&a, &b);
         for (x, y) in merged.data().iter().zip(joint.o.data()) {
             assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+
+        // a left-to-right pair-merge tree over three chunks agrees too,
+        // and its combined (m, l) match the joint softmax's
+        let t =
+            merge_partials_pair(&merge_partials_pair(&part(0, 5), &part(5, 13)), &part(13, span));
+        for (x, y) in t.o.data().iter().zip(joint.o.data()) {
+            assert!((x - y).abs() < 1e-5, "tree {x} vs joint {y}");
+        }
+        for i in 0..w {
+            assert!((t.m[i] - joint.m[i]).abs() < 1e-6);
+            assert!((t.l[i] - joint.l[i]).abs() / joint.l[i] < 1e-5);
         }
     }
 }

@@ -72,6 +72,22 @@ pub trait BatchedStepExecutor {
     fn retune_ratio(&mut self, _ratio: f64) -> bool {
         false
     }
+
+    /// Move the dynamic context-split fraction for subsequent steps (ARCA
+    /// online re-tuning of the `hcmp:dyn` engine). Like `retune_ratio`,
+    /// only meaningful **between** `decode_batch` calls. Returns false for
+    /// engines without the dynamic split armed (the default) — those run
+    /// the bitwise affinity attention path and have nothing to move.
+    fn retune_dense_split(&mut self, _frac: f64) -> bool {
+        false
+    }
+
+    /// The dynamic context-split fraction currently executing, if the
+    /// engine was built with `hcmp:dyn`; `None` on affinity/sequential
+    /// engines.
+    fn dense_split(&self) -> Option<f64> {
+        None
+    }
 }
 
 impl BatchedStepExecutor for RustModel {

@@ -82,7 +82,15 @@ impl Samples {
         Self::default()
     }
 
+    /// Record one sample. Non-finite values (a NaN from a zero-duration
+    /// timing division, an inf from a clock glitch) are skipped: a single
+    /// NaN used to panic `percentile`'s `partial_cmp().unwrap()` sort —
+    /// taking the whole `stats` endpoint down with it — and would corrupt
+    /// every mean either way.
     pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
         self.xs.push(x);
         self.sorted = false;
     }
@@ -108,7 +116,9 @@ impl Samples {
             return 0.0;
         }
         if !self.sorted {
-            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            // total order sort: never panics, even if a non-finite value
+            // slips in through a future code path
+            self.xs.sort_by(f64::total_cmp);
             self.sorted = true;
         }
         let rank = p / 100.0 * (self.xs.len() - 1) as f64;
@@ -171,6 +181,22 @@ mod tests {
         a.merge(&b);
         assert!((a.mean() - all.mean()).abs() < 1e-9);
         assert!((a.var() - all.var()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nan_sample_does_not_panic_percentile() {
+        // regression: a single NaN sample made `percentile` panic inside
+        // `partial_cmp().unwrap()`, killing the `stats` endpoint
+        let mut s = Samples::new();
+        s.push(1.0);
+        s.push(f64::NAN);
+        s.push(f64::INFINITY);
+        s.push(f64::NEG_INFINITY);
+        s.push(3.0);
+        assert_eq!(s.len(), 2, "non-finite samples are skipped");
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        assert!((s.p50() - 2.0).abs() < 1e-12);
+        assert!(s.p99().is_finite());
     }
 
     #[test]

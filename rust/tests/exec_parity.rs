@@ -96,6 +96,124 @@ fn parallel_engine_matches_sequential_b4() {
     }
 }
 
+/// The dynamic-context-split engine (`hcmp:dyn`) relaxes bitwise parity to
+/// a documented deviation bound — but the *committed token stream* must
+/// still match the sequential engine on the golden traces, for B=1 and
+/// B=4, across interior cut fractions.
+#[test]
+fn dyn_engine_commits_identical_tokens_b1() {
+    let tree = tree();
+    let prompt: [&[u32]; 1] = [&[1, 5, 7, 2]];
+    let mut seq = ExecEngine::sequential(model());
+    let want = run_batched(&mut seq, &prompt, 12, &tree);
+
+    for frac in [0.0, 0.3, 0.5, 0.7, 1.0] {
+        let plan = PartitionPlan::hcmp_dyn(0.5, frac);
+        let mut par = ExecEngine::parallel_dyn(model(), &plan, 3, 2).unwrap();
+        let got = run_batched(&mut par, &prompt, 12, &tree);
+        assert_eq!(got, want, "B=1 committed tokens diverged under dyn frac {frac}");
+    }
+}
+
+#[test]
+fn dyn_engine_commits_identical_tokens_b4() {
+    let tree = tree();
+    let prompts: [&[u32]; 4] = [&[1, 5, 7, 2], &[3, 1], &[9, 8, 7, 6, 5], &[2, 2, 4]];
+    let mut seq = ExecEngine::sequential(model());
+    let want = run_batched(&mut seq, &prompts, 10, &tree);
+
+    for (frac, wide, narrow) in [(0.5, 1usize, 1usize), (0.3, 4, 2), (0.7, 2, 3)] {
+        let plan = PartitionPlan::hcmp_dyn(0.5, frac);
+        let mut par = ExecEngine::parallel_dyn(model(), &plan, wide, narrow).unwrap();
+        let got = run_batched(&mut par, &prompts, 10, &tree);
+        assert_eq!(
+            got, want,
+            "B=4 committed tokens diverged (dyn frac {frac}, pools {wide}/{narrow})"
+        );
+    }
+}
+
+/// Mid-stream split moves (what the online retuner does at step
+/// boundaries) must also leave the committed token stream pinned.
+#[test]
+fn dyn_engine_survives_midstream_split_retunes() {
+    let tree = tree();
+    let prompts: [&[u32]; 2] = [&[1, 5, 7, 2], &[9, 8, 7]];
+    let mut seq = ExecEngine::sequential(model());
+    let want = run_batched(&mut seq, &prompts, 10, &tree);
+
+    let cfg = ModelConfig::test_small();
+    let mut par =
+        ExecEngine::parallel_dyn(model(), &PartitionPlan::hcmp_dyn(0.5, 0.2), 2, 2).unwrap();
+    let mut caches = BatchKvCache::new(&cfg, prompts.len());
+    let mut dec = BatchedDecoder::new(8, 4);
+    for (i, p) in prompts.iter().enumerate() {
+        let lane = caches.alloc().unwrap();
+        dec.admit(&par, i as u64, p.to_vec(), 10, tree.clone(), lane, &caches).unwrap();
+    }
+    let mut results: Vec<Option<Vec<u32>>> = vec![None; prompts.len()];
+    let fracs = [0.8, 0.4, 0.6, 1.0, 0.0, 0.5];
+    let mut step = 0usize;
+    while dec.active() > 0 {
+        for f in dec.step(&mut par, &mut caches).unwrap() {
+            caches.release(f.lane);
+            results[f.id as usize] = Some(f.outcome.tokens);
+        }
+        // move the cut every step, like the online retuner would
+        assert!(par.retune_dense_split(fracs[step % fracs.len()]));
+        step += 1;
+    }
+    let got: Vec<Vec<u32>> = results.into_iter().map(|r| r.unwrap()).collect();
+    assert_eq!(got, want, "mid-stream split retunes broke the committed token stream");
+}
+
+/// The deviation bound itself: one direct forward through the dyn engine
+/// vs the sequential engine, max-abs logit deviation under
+/// `DYN_SPLIT_LOGIT_TOL` (the affinity engine stays at exactly 0).
+#[test]
+fn dyn_engine_logit_deviation_is_bounded() {
+    use ghidorah::exec::parallel::DYN_SPLIT_LOGIT_TOL;
+    use ghidorah::exec::{HcmpParallelExecutor, SequentialExecutor, StepExecutor};
+    use ghidorah::model::forward::SegmentInput;
+    use ghidorah::model::kv_cache::KvCache;
+    use ghidorah::sparse::CooPattern;
+
+    let model = model();
+    let cfg = model.cfg.clone();
+    let mut cache = KvCache::new(&cfg);
+    let committed: Vec<u32> = vec![3, 7, 1, 5, 2, 9, 4, 8];
+    let pos0: Vec<usize> = (0..committed.len()).collect();
+    let pattern0 = CooPattern::causal(committed.len());
+    let o = model.decode_step(&committed, &pos0, &pattern0, &cache);
+    cache.commit_prefix(&o.k_new, &o.v_new, committed.len(), committed.len());
+
+    let t = tree();
+    let pattern = t.pattern();
+    let pos = t.positions(cache.len());
+    let tokens: Vec<u32> = (0..t.width() as u32).collect();
+    let seg = SegmentInput { tokens: &tokens, pos: &pos, pattern: &pattern, cache: &cache };
+
+    let mut seq = SequentialExecutor::new();
+    let want = seq.forward(&model, std::slice::from_ref(&seg));
+    for frac in [0.25, 0.5, 0.75] {
+        let mut par =
+            HcmpParallelExecutor::new_dyn(&PartitionPlan::hcmp_dyn(0.5, frac), 2, 2).unwrap();
+        let got = par.forward(&model, std::slice::from_ref(&seg));
+        let max_dev = got[0]
+            .logits
+            .data()
+            .iter()
+            .zip(want[0].logits.data())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(
+            max_dev <= DYN_SPLIT_LOGIT_TOL,
+            "frac {frac}: max logit deviation {max_dev:e} exceeds the documented \
+             bound {DYN_SPLIT_LOGIT_TOL:e}"
+        );
+    }
+}
+
 #[test]
 fn parallel_engine_matches_raw_model_and_reports_timings() {
     // the ExecEngine wrapper must agree with calling the model directly,

@@ -2,12 +2,12 @@
 //! not vendorable offline). Each property runs over deterministic generated
 //! cases with seed-reporting on failure.
 
-use ghidorah::exec::parallel::{chunk_bounds, shard_bounds};
+use ghidorah::exec::parallel::{chunk_bounds, dense_sub_spans, shard_bounds, DYN_SPLIT_LOGIT_TOL};
 use ghidorah::model::kv_cache::{BatchKvCache, KvCache};
 use ghidorah::model::ModelConfig;
 use ghidorah::sparse::{
-    attention_dense_masked, attention_sparse_opt, attention_sparse_opt_rows, merge_partials,
-    CooPattern,
+    attention_dense_masked, attention_dense_span, attention_sparse_opt, attention_sparse_opt_rows,
+    merge_partials, merge_partials_pair, CooPattern,
 };
 use ghidorah::spec::drafter::AccuracyProfile;
 use ghidorah::spec::tree::VerificationTree;
@@ -118,6 +118,63 @@ fn prop_online_softmax_split_invariant() {
         for (x, y) in merged.data().iter().zip(joint.o.data()) {
             if (x - y).abs() > 1e-4 {
                 return Err(format!("merge mismatch {x} vs {y} (cut {cut}/{span})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The dynamic context split (`hcmp:dyn`): for random (ctx, heads, width,
+/// frac, head-dim) draws, evaluating the engine's own `dense_sub_spans`
+/// selection and folding the partials left-to-right with
+/// `merge_partials_pair` stays within `DYN_SPLIT_LOGIT_TOL` of the
+/// whole-span kernel — and frac ∈ {0.0, 1.0} (cut at 0 / ctx) degenerates
+/// to a single span that is **bitwise** identical to the affinity path.
+#[test]
+fn prop_dense_split_merge_bounded_and_degenerate_bitwise() {
+    check("dense-split-merge", 80, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let hn = rng.range(1, 4);
+        let dh = [4usize, 8, 16][rng.below(3)];
+        let w = rng.range(1, 9);
+        let ctx = rng.range(1, 48);
+        let frac = [0.0, 1.0, rng.f32() as f64, 0.5][rng.below(4)];
+        let cut = (((ctx as f64) * frac).round() as usize).min(ctx);
+        let head = rng.below(hn);
+        let scale = (dh as f32).powf(-0.5);
+        let q = Tensor::randn(&[w, dh], 1.0, &mut rng);
+        let kc: Vec<f32> = (0..ctx * hn * dh).map(|_| rng.normal() as f32).collect();
+        let vc: Vec<f32> = (0..ctx * hn * dh).map(|_| rng.normal() as f32).collect();
+
+        let whole = attention_dense_span(&q, &kc, &vc, head, hn, dh, scale, 0, w, 0, ctx);
+        let spans = dense_sub_spans(ctx, cut);
+        if spans.is_empty() {
+            return Err("nonempty context produced no sub-spans".into());
+        }
+        let parts: Vec<_> = spans
+            .iter()
+            .map(|&(c_lo, c_hi, _)| {
+                attention_dense_span(&q, &kc, &vc, head, hn, dh, scale, 0, w, c_lo, c_hi)
+            })
+            .collect();
+        let merged = parts[1..].iter().fold(parts[0].clone(), |acc, p| merge_partials_pair(&acc, p));
+
+        if spans.len() == 1 {
+            // degenerate cut: the affinity path, which must stay bitwise
+            if merged.o.data() != whole.o.data() || merged.m != whole.m || merged.l != whole.l {
+                return Err(format!(
+                    "degenerate cut {cut}/{ctx} (frac {frac}) not bitwise (w={w}, dh={dh})"
+                ));
+            }
+            return Ok(());
+        }
+        for (x, y) in merged.o.data().iter().zip(whole.o.data()) {
+            if (x - y).abs() > DYN_SPLIT_LOGIT_TOL {
+                return Err(format!(
+                    "merge deviation {} > {DYN_SPLIT_LOGIT_TOL} at cut {cut}/{ctx} \
+                     (w={w}, dh={dh}, hn={hn})",
+                    (x - y).abs()
+                ));
             }
         }
         Ok(())

@@ -21,22 +21,30 @@ const N_CLIENTS: usize = 8;
 const MAX_NEW: usize = 32;
 const SEED: u64 = 42;
 
-/// The CI matrix exports `GHIDORAH_PARALLEL` (seq | hcmp[:RATIO]) so this
-/// suite exercises the serving stack over both pure-Rust engines; both are
-/// bitwise identical, so every assertion below is engine-independent. An
-/// unrecognized value is an error (not a silent default) — a matrix typo
-/// must fail the job, not quietly test the wrong engine.
+/// The CI matrix exports `GHIDORAH_PARALLEL` (seq | hcmp[:RATIO] |
+/// hcmp:dyn[:RATIO]) so this suite exercises the serving stack over the
+/// pure-Rust engines. seq and hcmp are bitwise identical; hcmp:dyn keeps
+/// committed tokens pinned (logits within the documented merge bound), so
+/// every assertion below is engine-independent. An unrecognized value is
+/// an error (not a silent default) — a matrix typo must fail the job, not
+/// quietly test the wrong engine.
 fn engine_from_env(model: RustModel) -> anyhow::Result<ExecEngine> {
+    fn ratio_in(r: &str) -> Option<f64> {
+        r.parse::<f64>().ok().filter(|r| (0.0..=1.0).contains(r))
+    }
     match std::env::var("GHIDORAH_PARALLEL") {
         Err(_) => Ok(ExecEngine::sequential(model)),
         Ok(v) => match v.as_str() {
             "" | "seq" | "sequential" => Ok(ExecEngine::sequential(model)),
             "hcmp" => ExecEngine::parallel(model, &PartitionPlan::hcmp(0.5), 2, 2),
+            "hcmp:dyn" => ExecEngine::parallel_dyn(model, &PartitionPlan::hcmp_dyn(0.5, 0.5), 2, 2),
             other => {
+                if let Some(r) = other.strip_prefix("hcmp:dyn:").and_then(ratio_in) {
+                    return ExecEngine::parallel_dyn(model, &PartitionPlan::hcmp_dyn(r, r), 2, 2);
+                }
                 let ratio = other
                     .strip_prefix("hcmp:")
-                    .and_then(|r| r.parse::<f64>().ok())
-                    .filter(|r| (0.0..=1.0).contains(r))
+                    .and_then(ratio_in)
                     .ok_or_else(|| anyhow::anyhow!("bad GHIDORAH_PARALLEL '{other}'"))?;
                 ExecEngine::parallel(model, &PartitionPlan::hcmp(ratio), 2, 2)
             }
