@@ -9,8 +9,10 @@
 //!
 //! 1. **Offline calibration** ([`calibrate`]): short sharded-GEMM and
 //!    sparse-attention micro-benchmarks run on the *real* wide/narrow
-//!    thread pools (the exact kernels + fork/join barrier the HCMP engine
-//!    executes), and [`fit_unit`] least-squares-fits a [`UnitSpec`] per
+//!    thread pools (the exact packed register-tiled kernels + fork/join
+//!    barrier the HCMP engine executes, on pools pinned to the same
+//!    disjoint core sets when the `core-pinning` feature is on), and
+//!    [`fit_unit`] least-squares-fits a [`UnitSpec`] per
 //!    pool — peak FLOP rate, efficiency tiers (sweet spot + per-doubling
 //!    decay over probe widths), achievable bandwidth, dispatch overhead,
 //!    and the sparse-gather efficiency. The result is a [`HostProfile`],
@@ -32,7 +34,7 @@
 
 use std::time::Instant;
 
-use crate::exec::parallel::chunk_bounds;
+use crate::exec::parallel::{chunk_bounds, panel_chunk_bounds};
 use crate::hcmp::cost::Op;
 use crate::hcmp::schedule::{build_batched_step, EngineKind};
 use crate::hcmp::simulator::Simulator;
@@ -41,10 +43,10 @@ use crate::hcmp::PartitionPlan;
 use crate::model::ModelConfig;
 use crate::sparse::{attention_sparse_opt_rows, CooPattern};
 use crate::spec::tree::VerificationTree;
-use crate::tensor::{gemm_into_cols, split_cols_mut, Tensor};
+use crate::tensor::{gemm_packed_into_cols, split_cols_mut, PackedB, Tensor};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
-use crate::util::threadpool::{scoped_run_on, ScopedJob, ThreadPool};
+use crate::util::threadpool::{hetero_pools, scoped_run_on, ScopedJob, ThreadPool};
 
 // ---------------------------------------------------------------------------
 // Probes
@@ -458,18 +460,20 @@ fn time_probe(reps: usize, mut run: impl FnMut()) -> f64 {
     t0.elapsed().as_secs_f64() / reps.max(1) as f64
 }
 
-/// Column-shard jobs of one `[m, k] x [k, n]` GEMM across `threads` —
-/// exactly the engine's shard layout, borrowed for one barrier.
+/// Column-shard jobs of one `[m, k] x [k, n]` packed GEMM across
+/// `threads` — exactly the engine's panel-aligned shard layout, borrowed
+/// for one barrier. B is pre-packed by the caller (outside timing), as the
+/// engine packs at weight load.
 fn gemm_jobs<'a>(
     ad: &'a [f32],
-    bd: &'a [f32],
+    bp: &'a PackedB,
     c: &'a mut Tensor,
     k: usize,
     n: usize,
     threads: usize,
 ) -> Vec<ScopedJob<'a>> {
     let m = c.shape()[0];
-    let chunks = chunk_bounds(0, n, threads);
+    let chunks = panel_chunk_bounds(0, n, threads);
     let mut bounds: Vec<usize> = chunks.iter().map(|ch| ch.0).collect();
     bounds.push(n);
     split_cols_mut(c.data_mut(), m, n, &bounds)
@@ -477,7 +481,7 @@ fn gemm_jobs<'a>(
         .zip(chunks)
         .map(|(mut rows, (lo, hi))| {
             let job: ScopedJob<'a> =
-                Box::new(move || gemm_into_cols(ad, bd, &mut rows, k, n, lo, hi));
+                Box::new(move || gemm_packed_into_cols(ad, bp, &mut rows, k, lo, hi));
             job
         })
         .collect()
@@ -486,8 +490,8 @@ fn gemm_jobs<'a>(
 /// One sharded-GEMM execution across `pool` (all output columns on this
 /// pool, split over its threads) — the engine's column-shard kernel plus
 /// its fork/join barrier.
-fn pool_gemm(pool: &ThreadPool, a: &Tensor, b: &Tensor, c: &mut Tensor, k: usize, n: usize) {
-    let jobs = gemm_jobs(a.data(), b.data(), c, k, n, pool.threads());
+fn pool_gemm(pool: &ThreadPool, a: &Tensor, bp: &PackedB, c: &mut Tensor, k: usize, n: usize) {
+    let jobs = gemm_jobs(a.data(), bp, c, k, n, pool.threads());
     scoped_run_on(vec![(pool, jobs)]);
 }
 
@@ -502,14 +506,14 @@ fn gemm_probes(
     let mut out = Vec::with_capacity(cal.widths.len());
     for &m in &cal.widths {
         let a = Tensor::randn(&[m, k], 1.0, rng);
-        let b = Tensor::randn(&[k, n], 1.0, rng);
+        let bp = PackedB::pack(&Tensor::randn(&[k, n], 1.0, rng));
         let mut c = Tensor::zeros(&[m, n]);
         let secs = time_probe(cal.reps, || match pool {
-            Some(p) => pool_gemm(p, &a, &b, &mut c, k, n),
+            Some(p) => pool_gemm(p, &a, &bp, &mut c, k, n),
             None => {
                 let bounds = [0, n];
                 let mut shards = split_cols_mut(c.data_mut(), m, n, &bounds);
-                gemm_into_cols(a.data(), b.data(), &mut shards[0], k, n, 0, n);
+                gemm_packed_into_cols(a.data(), &bp, &mut shards[0], k, 0, n);
             }
         });
         let op = Op::Gemm { m, k, n };
@@ -583,8 +587,9 @@ pub fn calibrate(
     assert!(cal.widths.contains(&1), "calibration widths must include 1 (bandwidth fit)");
     let wide_threads = wide_threads.max(1);
     let narrow_threads = narrow_threads.max(1);
-    let wide_pool = ThreadPool::new(wide_threads);
-    let narrow_pool = ThreadPool::new(narrow_threads);
+    // the exact pool construction the engine uses: disjoint pinned core
+    // sets under `--features core-pinning`, plain pools otherwise
+    let (wide_pool, narrow_pool) = hetero_pools(wide_threads, narrow_threads);
     let mut rng = Rng::new(0xA07071);
 
     let launch = barrier_overhead(&wide_pool, &narrow_pool, cal.reps * 4);
@@ -620,20 +625,20 @@ pub fn calibrate(
     let m = *cal.widths.iter().filter(|&&w| w >= 8).min().unwrap_or(&8);
     let (k, n) = (cal.gemm_k, cal.gemm_n);
     let a = Tensor::randn(&[m, k], 1.0, &mut rng);
-    let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+    let bp = PackedB::pack(&Tensor::randn(&[k, n], 1.0, &mut rng));
     let t_wide = time_probe(cal.reps, || {
         let mut c = Tensor::zeros(&[m, n]);
-        pool_gemm(&wide_pool, &a, &b, &mut c, k, n);
+        pool_gemm(&wide_pool, &a, &bp, &mut c, k, n);
     });
     let t_narrow = time_probe(cal.reps, || {
         let mut c = Tensor::zeros(&[m, n]);
-        pool_gemm(&narrow_pool, &a, &b, &mut c, k, n);
+        pool_gemm(&narrow_pool, &a, &bp, &mut c, k, n);
     });
     let t_conc = time_probe(cal.reps, || {
         let mut cw = Tensor::zeros(&[m, n]);
         let mut cn = Tensor::zeros(&[m, n]);
-        let wj = gemm_jobs(a.data(), b.data(), &mut cw, k, n, wide_threads);
-        let nj = gemm_jobs(a.data(), b.data(), &mut cn, k, n, narrow_threads);
+        let wj = gemm_jobs(a.data(), &bp, &mut cw, k, n, wide_threads);
+        let nj = gemm_jobs(a.data(), &bp, &mut cn, k, n, narrow_threads);
         scoped_run_on(vec![(&wide_pool, wj), (&narrow_pool, nj)]);
     });
     let alone = t_wide.max(t_narrow).max(1e-12);

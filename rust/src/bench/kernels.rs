@@ -1,0 +1,102 @@
+//! `bench kernels` — GFLOP/s of the scalar blocked GEMM vs the packed
+//! register-tiled microkernel (and the transposed-B `gemm_nt` kernel) at
+//! the decode path's real shapes: the tiny model's linear `(k, n)` pairs
+//! across verification-tree widths 1–16. B is packed / transposed outside
+//! the timed region, exactly as the engine packs weights once at load.
+
+use std::time::Instant;
+
+use crate::model::ModelConfig;
+use crate::tensor::{gemm, gemm_nt, gemm_packed, PackedB, Tensor};
+use crate::util::rng::Rng;
+
+use super::table::TablePrinter;
+
+pub struct KernelsOutcome {
+    pub text: String,
+    /// (m, k, n, scalar GFLOP/s, packed GFLOP/s, gemm_nt GFLOP/s)
+    pub rows: Vec<(usize, usize, usize, f64, f64, f64)>,
+}
+
+/// Packed-vs-scalar decode-GEMM throughput. `reps` timed executions per
+/// cell, after one warmup execution.
+pub fn kernels(reps: usize) -> KernelsOutcome {
+    let cfg = ModelConfig::tiny();
+    let qkv = cfg.n_heads * cfg.head_dim;
+    // qkv projection, FFN up, FFN down, LM head — the decode path's shapes
+    let shapes = [
+        (cfg.d_model, qkv),
+        (cfg.d_model, cfg.ffn),
+        (cfg.ffn, cfg.d_model),
+        (cfg.d_model, cfg.vocab),
+    ];
+    let widths = [1usize, 2, 4, 8, 16];
+    let reps = reps.max(1);
+    let mut rng = Rng::new(0xBE7C);
+
+    let bench = |f: &mut dyn FnMut()| -> f64 {
+        f(); // warmup
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            f();
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+
+    let mut printer = TablePrinter::new(&[
+        "m", "k", "n", "scalar GF/s", "packed GF/s", "gemm_nt GF/s", "packed/scalar",
+    ]);
+    let mut rows = Vec::new();
+    for (k, n) in shapes {
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bp = PackedB::pack(&b);
+        let bt = b.t();
+        for m in widths {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let gflops = |secs: f64| 2.0 * (m * k * n) as f64 / secs.max(1e-12) / 1e9;
+            let t_scalar = bench(&mut || {
+                std::hint::black_box(gemm(&a, &b));
+            });
+            let t_packed = bench(&mut || {
+                std::hint::black_box(gemm_packed(&a, &bp));
+            });
+            let t_nt = bench(&mut || {
+                std::hint::black_box(gemm_nt(&a, &bt));
+            });
+            let (gs, gp, gn) = (gflops(t_scalar), gflops(t_packed), gflops(t_nt));
+            printer.row(vec![
+                m.to_string(),
+                k.to_string(),
+                n.to_string(),
+                format!("{gs:.2}"),
+                format!("{gp:.2}"),
+                format!("{gn:.2}"),
+                format!("{:.2}x", gp / gs.max(1e-12)),
+            ]);
+            rows.push((m, k, n, gs, gp, gn));
+        }
+    }
+    let mut text = String::from(
+        "Kernels — GFLOP/s at decode shapes (scalar blocked vs packed register-tiled)\n\n",
+    );
+    text.push_str(&printer.render());
+    KernelsOutcome { text, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernels_bench_covers_all_shapes_with_finite_rates() {
+        let out = kernels(1);
+        assert_eq!(out.rows.len(), 20, "4 shapes x 5 widths");
+        for &(m, k, n, gs, gp, gn) in &out.rows {
+            assert!(m >= 1 && k > 0 && n > 0);
+            for g in [gs, gp, gn] {
+                assert!(g.is_finite() && g > 0.0, "({m},{k},{n}) rate {g}");
+            }
+        }
+        assert!(out.text.contains("packed GF/s"));
+    }
+}

@@ -4,8 +4,10 @@
 
 pub mod ablation;
 pub mod experiments;
+pub mod kernels;
 pub mod table;
 
 pub use ablation::ablation;
 pub use experiments::{fig10a, fig10b, fig9, measured, measured_sweep, measured_with, table1};
+pub use kernels::kernels;
 pub use table::TablePrinter;

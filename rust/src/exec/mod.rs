@@ -53,6 +53,12 @@ pub trait StepExecutor: Send {
     fn dense_split(&self) -> Option<f64> {
         None
     }
+    /// Arm profile-guided `(n_cols, wide_frac)` shard-width overrides from
+    /// a calibrated host profile (`hcmp::profile_width_fracs`). Returns
+    /// false for executors without a column shard to guide (the default).
+    fn set_width_fracs(&mut self, _fracs: Vec<(usize, f64)>) -> bool {
+        false
+    }
 }
 
 /// Measured execution-side timings, the wall-clock counterpart of the
@@ -252,6 +258,12 @@ impl ExecEngine {
     /// The currently executing dynamic context-split fraction, if any.
     pub fn dense_split(&self) -> Option<f64> {
         self.exec.dense_split()
+    }
+
+    /// Arm profile-guided per-width shard overrides; false when the
+    /// underlying executor has no column shard to guide.
+    pub fn set_width_fracs(&mut self, fracs: Vec<(usize, f64)>) -> bool {
+        self.exec.set_width_fracs(fracs)
     }
 
     pub fn model(&self) -> &RustModel {

@@ -6,10 +6,15 @@
 //! sparse, irregular work). One fork/join barrier per partitioned op
 //! mirrors the simulator's phase semantics.
 //!
-//! * Every linear is a **column-sharded GEMM**: each unit (and each thread
-//!   within it) computes a disjoint output-column range of the *same*
-//!   activation buffer via [`gemm_into_cols`] + [`split_cols_mut`] — zero
-//!   extra allocation, no all-reduce (§III-B.1).
+//! * Every linear is a **column-sharded packed GEMM**: each unit (and each
+//!   thread within it) computes a disjoint output-column range of the
+//!   *same* activation buffer via [`gemm_packed_into_cols`] +
+//!   [`split_cols_mut`] — zero extra allocation, no all-reduce (§III-B.1).
+//!   Shard boundaries sit on packed-panel multiples ([`NR`]), the grain at
+//!   which the register-tiled microkernel keeps column shards bitwise
+//!   identical to the unsharded GEMM; shard *widths* come from the
+//!   calibrated host profile when one is loaded (`set_width_fracs`),
+//!   otherwise from the plan's uniform ratio.
 //! * Attention executes the **affinity split** (§III-B.2) by default: the
 //!   dense span runs on the wide pool, the sparse COO span on the narrow
 //!   pool via row-range-parallel [`attention_sparse_opt_rows`], merged
@@ -48,8 +53,8 @@ use crate::model::ModelConfig;
 use crate::sparse::{
     attention_dense_span, attention_sparse_opt_rows, merge_partials, merge_partials_pair, Partials,
 };
-use crate::tensor::{gemm_into_cols, split_cols_mut, Tensor};
-use crate::util::threadpool::{scoped_run_on, ScopedJob, ThreadPool};
+use crate::tensor::{gemm_packed_into_cols, split_cols_mut, NR, PackedB, Tensor};
+use crate::util::threadpool::{hetero_pools, scoped_run_on, ScopedJob, ThreadPool};
 
 /// Documented deviation bound of the dynamic context split: max-abs logit
 /// deviation of the `hcmp:dyn` engine vs. the sequential reference on the
@@ -118,10 +123,49 @@ pub fn shard_bounds(
     (all, n_wide_chunks)
 }
 
+/// Like [`chunk_bounds`] but every interior boundary lands on a multiple
+/// of the packed panel width [`NR`] — the sharding grain of the packed
+/// microkernel. Chunks the *panel indices* near-equally (no empty chunk;
+/// only the last may be ragged when `hi` itself is).
+pub fn panel_chunk_bounds(lo: usize, hi: usize, parts: usize) -> Vec<(usize, usize)> {
+    if hi <= lo {
+        return Vec::new();
+    }
+    debug_assert_eq!(lo % NR, 0, "chunk start {lo} off the panel grid");
+    chunk_bounds(lo / NR, hi.div_ceil(NR), parts)
+        .into_iter()
+        .map(|(a, b)| (a * NR, (b * NR).min(hi)))
+        .collect()
+}
+
+/// Panel-aligned analogue of [`shard_bounds`]: the wide unit's
+/// `[0, n_wide)` shard panel-chunked across its threads, then the narrow
+/// unit's remainder across its threads. `n_wide` must sit on the panel
+/// grid (or be 0 / `n`) — [`ExecPlan::wide_cols`] and the profile-guided
+/// splitter both guarantee it, which is what keeps every shard bitwise
+/// identical to the unsharded packed GEMM.
+pub fn panel_shard_bounds(
+    n: usize,
+    n_wide: usize,
+    wide_parts: usize,
+    narrow_parts: usize,
+) -> (Vec<(usize, usize)>, usize) {
+    let wide = panel_chunk_bounds(0, n_wide, wide_parts);
+    let n_wide_chunks = wide.len();
+    let all: Vec<(usize, usize)> =
+        wide.into_iter().chain(panel_chunk_bounds(n_wide, n, narrow_parts)).collect();
+    (all, n_wide_chunks)
+}
+
 pub struct HcmpParallelExecutor {
     plan: ExecPlan,
     wide: ThreadPool,
     narrow: ThreadPool,
+    /// Profile-guided `(n, wide_frac)` overrides: for a linear of exactly
+    /// `n` output columns, the wide unit takes `ratio_cols(frac, n)`
+    /// columns instead of the plan's uniform ratio. Empty until a
+    /// calibrated host profile arms it via `set_width_fracs`.
+    width_fracs: Vec<(usize, f64)>,
     /// Busy core-nanoseconds aggregated across each pool's threads.
     wide_busy_ns: AtomicU64,
     narrow_busy_ns: AtomicU64,
@@ -139,10 +183,12 @@ impl HcmpParallelExecutor {
         narrow_threads: usize,
     ) -> anyhow::Result<Self> {
         let plan = crate::hcmp::plan_to_exec(plan, wide_threads, narrow_threads)?;
+        let (wide, narrow) = hetero_pools(plan.wide_threads, plan.narrow_threads);
         Ok(Self {
-            wide: ThreadPool::new(plan.wide_threads),
-            narrow: ThreadPool::new(plan.narrow_threads),
+            wide,
+            narrow,
             plan,
+            width_fracs: Vec::new(),
             wide_busy_ns: AtomicU64::new(0),
             narrow_busy_ns: AtomicU64::new(0),
             steps: 0,
@@ -161,10 +207,12 @@ impl HcmpParallelExecutor {
         narrow_threads: usize,
     ) -> anyhow::Result<Self> {
         let plan = crate::hcmp::plan_to_exec_dyn(plan, wide_threads, narrow_threads)?;
+        let (wide, narrow) = hetero_pools(plan.wide_threads, plan.narrow_threads);
         Ok(Self {
-            wide: ThreadPool::new(plan.wide_threads),
-            narrow: ThreadPool::new(plan.narrow_threads),
+            wide,
+            narrow,
             plan,
+            width_fracs: Vec::new(),
             wide_busy_ns: AtomicU64::new(0),
             narrow_busy_ns: AtomicU64::new(0),
             steps: 0,
@@ -193,6 +241,7 @@ impl StepExecutor for HcmpParallelExecutor {
         let out = {
             let mut ops = ParallelOps {
                 plan: &self.plan,
+                width_fracs: &self.width_fracs,
                 wide: &self.wide,
                 narrow: &self.narrow,
                 wide_busy: &self.wide_busy_ns,
@@ -227,7 +276,17 @@ impl StepExecutor for HcmpParallelExecutor {
     /// pools persist; only the shard split changes, which preserves the
     /// bitwise guarantee across the swap (`tests/retune_parity.rs`).
     fn retune_ratio(&mut self, ratio: f64) -> bool {
-        self.plan.set_ratio(ratio).is_ok()
+        let old = self.plan.linear_ratio;
+        if self.plan.set_ratio(ratio).is_err() {
+            return false;
+        }
+        // shift the per-width overrides by the same delta so the online
+        // retuner moves the profile-guided cuts, not just the fallback
+        let delta = self.plan.linear_ratio - old;
+        for (_, frac) in self.width_fracs.iter_mut() {
+            *frac = (*frac + delta).clamp(0.0, 1.0);
+        }
+        true
     }
 
     fn current_ratio(&self) -> Option<f64> {
@@ -244,32 +303,60 @@ impl StepExecutor for HcmpParallelExecutor {
     fn dense_split(&self) -> Option<f64> {
         self.plan.dense_split
     }
+
+    /// Arm the profile-guided per-width shard overrides (from
+    /// `hcmp::profile_width_fracs` on a calibrated host profile). Rejects
+    /// non-finite or out-of-range fractions wholesale rather than arming
+    /// a poisoned table.
+    fn set_width_fracs(&mut self, fracs: Vec<(usize, f64)>) -> bool {
+        if fracs.iter().any(|&(_, f)| !f.is_finite() || !(0.0..=1.0).contains(&f)) {
+            return false;
+        }
+        self.width_fracs = fracs;
+        true
+    }
 }
 
 struct ParallelOps<'e> {
     plan: &'e ExecPlan,
+    width_fracs: &'e [(usize, f64)],
     wide: &'e ThreadPool,
     narrow: &'e ThreadPool,
     wide_busy: &'e AtomicU64,
     narrow_busy: &'e AtomicU64,
 }
 
+impl ParallelOps<'_> {
+    /// Wide-unit column count for an `n`-column linear: the calibrated
+    /// per-width override when the profile priced exactly this width,
+    /// else the plan's uniform ratio — both panel-rounded.
+    fn wide_cols_for(&self, n: usize) -> usize {
+        self.width_fracs
+            .iter()
+            .find(|&&(w, _)| w == n)
+            .map(|&(_, f)| crate::hcmp::ratio_cols(f, n))
+            .unwrap_or_else(|| self.plan.wide_cols(n))
+    }
+}
+
 impl ForwardOps for ParallelOps<'_> {
-    /// Column-sharded GEMM: the wide unit takes output columns
-    /// `[0, ratio*n)`, the narrow unit the rest; each unit further splits
-    /// its shard across its threads. All shards write disjoint column
-    /// ranges of one preallocated output — zero-copy composition.
-    fn linear(&mut self, x: &Tensor, w: &Tensor) -> Tensor {
+    /// Column-sharded packed GEMM: the wide unit takes output columns
+    /// `[0, n_wide)` (profile-guided when calibrated, else `ratio * n`,
+    /// always panel-rounded), the narrow unit the rest; each unit further
+    /// panel-chunks its shard across its threads. All shards write
+    /// disjoint column ranges of one preallocated output — zero-copy
+    /// composition, bitwise identical to the unsharded packed GEMM.
+    fn linear(&mut self, x: &Tensor, w: &PackedB) -> Tensor {
         let (m, kdim) = (x.shape()[0], x.shape()[1]);
-        let n = w.shape()[1];
+        let n = w.n();
         let mut c = Tensor::zeros(&[m, n]);
-        let n_wide = self.plan.wide_cols(n);
+        let n_wide = self.wide_cols_for(n);
         let (all, n_wide_chunks) =
-            shard_bounds(n, n_wide, self.plan.wide_threads, self.plan.narrow_threads);
+            panel_shard_bounds(n, n_wide, self.plan.wide_threads, self.plan.narrow_threads);
         let mut bounds: Vec<usize> = all.iter().map(|c| c.0).collect();
         bounds.push(n);
         {
-            let (xd, wd) = (x.data(), w.data());
+            let xd = x.data();
             let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
             let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::with_capacity(n_wide_chunks);
             let mut narrow_jobs: Vec<ScopedJob<'_>> =
@@ -278,7 +365,7 @@ impl ForwardOps for ParallelOps<'_> {
                 let busy = if idx < n_wide_chunks { self.wide_busy } else { self.narrow_busy };
                 let job: ScopedJob<'_> = Box::new(move || {
                     let t = Instant::now();
-                    gemm_into_cols(xd, wd, &mut rows, kdim, n, lo, hi);
+                    gemm_packed_into_cols(xd, w, &mut rows, kdim, lo, hi);
                     busy.fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 });
                 if idx < n_wide_chunks {
@@ -507,6 +594,67 @@ mod tests {
             assert!(chunks.windows(2).all(|w| w[0].1 == w[1].0));
             assert!(chunks.iter().all(|c| c.0 < c.1));
         }
+    }
+
+    #[test]
+    fn panel_chunk_bounds_land_on_the_panel_grid() {
+        assert_eq!(panel_chunk_bounds(0, 0, 3), vec![]);
+        assert_eq!(panel_chunk_bounds(0, 8, 4), vec![(0, 8)]); // one panel: one chunk
+        assert_eq!(panel_chunk_bounds(0, 37, 2), vec![(0, 24), (24, 37)]);
+        for (lo, hi, parts) in [(0usize, 64usize, 3usize), (8, 37, 4), (16, 16, 2), (0, 100, 7)] {
+            let chunks = panel_chunk_bounds(lo, hi, parts);
+            if lo == hi {
+                assert!(chunks.is_empty());
+                continue;
+            }
+            assert_eq!(chunks[0].0, lo);
+            assert_eq!(chunks.last().unwrap().1, hi);
+            assert!(chunks.windows(2).all(|w| w[0].1 == w[1].0));
+            for &(a, b) in &chunks {
+                assert!(a < b, "empty chunk ({a}, {b})");
+                assert_eq!(a % NR, 0, "interior bound {a} off the panel grid");
+                assert!(b % NR == 0 || b == hi, "interior bound {b} off the panel grid");
+            }
+        }
+    }
+
+    #[test]
+    fn panel_shard_bounds_respect_the_profile_guided_cut() {
+        // a non-uniform (profile-guided) wide shard of 24/56 columns: both
+        // units' chunks stay on the grid and tile [0, n)
+        let (all, n_wide_chunks) = panel_shard_bounds(56, 24, 2, 3);
+        assert_eq!(&all[..n_wide_chunks], &[(0, 16), (16, 24)]);
+        assert_eq!(&all[n_wide_chunks..], &[(24, 40), (40, 48), (48, 56)]);
+        // degenerate all-narrow / all-wide
+        assert_eq!(panel_shard_bounds(16, 0, 4, 1), (vec![(0, 16)], 0));
+        assert_eq!(panel_shard_bounds(16, 16, 1, 4), (vec![(0, 16)], 1));
+    }
+
+    #[test]
+    fn width_frac_overrides_apply_per_width_and_survive_retunes() {
+        let mut par = HcmpParallelExecutor::new(&PartitionPlan::hcmp(0.5), 1, 1).unwrap();
+        assert!(par.set_width_fracs(vec![(48, 0.25), (64, 1.0)]));
+        assert!(
+            !par.set_width_fracs(vec![(48, f64::NAN)]),
+            "non-finite fracs must be rejected wholesale"
+        );
+        {
+            let ops = ParallelOps {
+                plan: &par.plan,
+                width_fracs: &par.width_fracs,
+                wide: &par.wide,
+                narrow: &par.narrow,
+                wide_busy: &par.wide_busy_ns,
+                narrow_busy: &par.narrow_busy_ns,
+            };
+            assert_eq!(ops.wide_cols_for(48), 16, "0.25 of 48 panel-rounds to 16");
+            assert_eq!(ops.wide_cols_for(64), 64, "frac 1.0 keeps the whole width");
+            assert_eq!(ops.wide_cols_for(32), 16, "unlisted width falls back to the plan ratio");
+        }
+        // retuning the uniform ratio shifts the overrides by the same delta
+        assert!(par.retune_ratio(0.75));
+        assert!((par.width_fracs[0].1 - 0.5).abs() < 1e-12);
+        assert!((par.width_fracs[1].1 - 1.0).abs() < 1e-12, "override clamps at 1.0");
     }
 
     #[test]

@@ -17,13 +17,14 @@
 use crate::model::forward::{rmsnorm, rope_inplace, RustModel, SegmentInput, StepOutput};
 use crate::model::ModelConfig;
 use crate::sparse::{attention_dense_span, attention_sparse_opt, merge_partials, Partials};
-use crate::tensor::{gemm, Tensor};
+use crate::tensor::{gemm_packed, PackedB, Tensor};
 use crate::util::mathx::silu;
 
 /// The op-level backend a step executor plugs into the pipeline.
 pub trait ForwardOps {
-    /// `out = x @ w` — must equal [`gemm`] bitwise.
-    fn linear(&mut self, x: &Tensor, w: &Tensor) -> Tensor;
+    /// `out = x @ w` over the pre-packed weight — must equal
+    /// [`gemm_packed`] bitwise.
+    fn linear(&mut self, x: &Tensor, w: &PackedB) -> Tensor;
 
     /// Per-layer attention over all segments: returns the merged per-head
     /// outputs `[wt, H*Dh]`. Must equal the sequential reference bitwise.
@@ -82,35 +83,35 @@ pub(crate) fn forward_segments(
 
     for layer in 0..cfg.n_layers {
         let h = rmsnorm(&x, model.weights.get(&format!("l{layer}_attn_norm")).data());
-        let mut q = ops.linear(&h, model.weights.get(&format!("l{layer}_wq")));
-        let mut k = ops.linear(&h, model.weights.get(&format!("l{layer}_wk")));
-        let v = ops.linear(&h, model.weights.get(&format!("l{layer}_wv")));
+        let mut q = ops.linear(&h, model.weights.linear(&format!("l{layer}_wq")));
+        let mut k = ops.linear(&h, model.weights.linear(&format!("l{layer}_wk")));
+        let v = ops.linear(&h, model.weights.linear(&format!("l{layer}_wv")));
         rope_inplace(&mut q, &pos_all, hn, dh, cfg.rope_base);
         rope_inplace(&mut k, &pos_all, hn, dh, cfg.rope_base);
         k_new.extend_from_slice(k.data());
         v_new.extend_from_slice(v.data());
 
         let o = ops.attention(&q, &k, &v, layer, segs, &offsets, &widths, cfg);
-        let attn_out = ops.linear(&o, model.weights.get(&format!("l{layer}_wo")));
+        let attn_out = ops.linear(&o, model.weights.linear(&format!("l{layer}_wo")));
         x.add_assign(&attn_out);
 
         // MLP (SiLU-gated)
         let h2 = rmsnorm(&x, model.weights.get(&format!("l{layer}_mlp_norm")).data());
-        let mut gate = ops.linear(&h2, model.weights.get(&format!("l{layer}_w_gate")));
-        let up = ops.linear(&h2, model.weights.get(&format!("l{layer}_w_up")));
+        let mut gate = ops.linear(&h2, model.weights.linear(&format!("l{layer}_w_gate")));
+        let up = ops.linear(&h2, model.weights.linear(&format!("l{layer}_w_up")));
         for (g, u) in gate.data_mut().iter_mut().zip(up.data()) {
             *g = silu(*g) * u;
         }
-        let down = ops.linear(&gate, model.weights.get(&format!("l{layer}_w_down")));
+        let down = ops.linear(&gate, model.weights.linear(&format!("l{layer}_w_down")));
         x.add_assign(&down);
     }
 
     let xf = rmsnorm(&x, model.weights.get("final_norm").data());
-    let w_lm = model.weights.get("w_lm");
+    let w_lm = model.weights.linear("w_lm");
     let logits = ops.linear(&xf, w_lm);
     let mut medusa_logits = Vec::with_capacity(cfg.n_medusa);
     for head in 0..cfg.n_medusa {
-        let wm = model.weights.get(&format!("medusa{head}_w"));
+        let wm = model.weights.linear(&format!("medusa{head}_w"));
         let mut res = ops.linear(&xf, wm);
         for (r, &base) in res.data_mut().iter_mut().zip(xf.data()) {
             *r = base + silu(*r);
@@ -143,8 +144,8 @@ pub(crate) fn forward_segments(
 pub(crate) struct SequentialOps;
 
 impl ForwardOps for SequentialOps {
-    fn linear(&mut self, x: &Tensor, w: &Tensor) -> Tensor {
-        gemm(x, w)
+    fn linear(&mut self, x: &Tensor, w: &PackedB) -> Tensor {
+        gemm_packed(x, w)
     }
 
     fn attention(

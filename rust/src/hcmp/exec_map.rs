@@ -27,6 +27,85 @@
 //!   remain cost-model baselines only.
 
 use super::partition::PartitionPlan;
+use super::unit::UnitSpec;
+use crate::tensor::NR;
+
+/// Round a column count onto the packed-panel grid ([`NR`]): nearest
+/// panel multiple, capped at `n`. The endpoints pass through exactly —
+/// 0 and `n` stay all-or-nothing — because the packed microkernel's
+/// sharding contract only constrains *interior* cuts.
+pub fn align_cols(cols: usize, n: usize) -> usize {
+    let cols = cols.min(n);
+    if cols == 0 || cols == n {
+        return cols;
+    }
+    (((cols as f64) / (NR as f64)).round() as usize * NR).min(n)
+}
+
+/// Columns (of `n`) a fractional split hands the wide unit, panel-rounded
+/// so the resulting shard boundary is executable by the packed kernels.
+pub fn ratio_cols(ratio: f64, n: usize) -> usize {
+    align_cols((((n as f64) * ratio).round() as usize).min(n), n)
+}
+
+/// Profile-guided shard width for one `m×k×n` linear: price every
+/// panel-aligned cut on the two calibrated units (roofline: compute at
+/// the unit's width-`m` effective rate vs. memory at its solo bandwidth,
+/// plus its dispatch overhead) and take the cut minimizing the slower
+/// side — the fork/join barrier closes on the max. The result is always
+/// executable: 0, `n`, or a multiple of [`NR`].
+pub fn profile_guided_cut(
+    wide: &UnitSpec,
+    narrow: &UnitSpec,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> usize {
+    let time = |unit: &UnitSpec, cols: usize| -> f64 {
+        if cols == 0 {
+            return 0.0;
+        }
+        let flops = 2.0 * (m * k * cols) as f64;
+        let bytes = 4.0 * (m * k + k * cols + m * cols) as f64;
+        unit.launch_overhead + (flops / unit.effective_flops(m)).max(bytes / unit.solo_bw)
+    };
+    let mut best = (0usize, f64::INFINITY);
+    let mut c = 0usize;
+    loop {
+        let cut = c.min(n);
+        let t = time(wide, cut).max(time(narrow, n - cut));
+        if t < best.1 {
+            best = (cut, t);
+        }
+        if cut == n {
+            break;
+        }
+        c += NR;
+    }
+    best.0
+}
+
+/// Per-width profile-guided wide fractions for the decode path's distinct
+/// linear shapes: `(n, cut/n)` pairs the parallel executor looks up per
+/// GEMM (`StepExecutor::set_width_fracs`). `shapes` are `(k, n)` pairs;
+/// a duplicated `n` keeps its first entry, `m` is the representative row
+/// count (the verification-tree width).
+pub fn profile_width_fracs(
+    wide: &UnitSpec,
+    narrow: &UnitSpec,
+    shapes: &[(usize, usize)],
+    m: usize,
+) -> Vec<(usize, f64)> {
+    let mut out: Vec<(usize, f64)> = Vec::with_capacity(shapes.len());
+    for &(k, n) in shapes {
+        if n == 0 || out.iter().any(|&(w, _)| w == n) {
+            continue;
+        }
+        let cut = profile_guided_cut(wide, narrow, m.max(1), k, n);
+        out.push((n, cut as f64 / n as f64));
+    }
+    out
+}
 
 /// Concrete executable realization of a `PartitionPlan`.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -49,9 +128,11 @@ pub struct ExecPlan {
 }
 
 impl ExecPlan {
-    /// Number of output columns (of `n`) the wide unit computes.
+    /// Number of output columns (of `n`) the wide unit computes —
+    /// panel-rounded ([`ratio_cols`]) so the shard boundary always sits
+    /// where the packed microkernel's bitwise sharding contract holds.
     pub fn wide_cols(&self, n: usize) -> usize {
-        (((n as f64) * self.linear_ratio).round() as usize).min(n)
+        ratio_cols(self.linear_ratio, n)
     }
 
     /// Re-point the wide/narrow column boundary (ARCA online re-tuning).
@@ -162,7 +243,9 @@ mod tests {
         let p = plan_to_exec(&PartitionPlan::hcmp(0.6), 4, 2).unwrap();
         assert_eq!(p.linear_ratio, 0.6);
         assert_eq!((p.wide_threads, p.narrow_threads), (4, 2));
-        assert_eq!(p.wide_cols(100), 60);
+        // 0.6 * 100 = 60 columns, panel-rounded onto the NR = 8 grid -> 64
+        assert_eq!(p.wide_cols(100), 64);
+        assert_eq!(p.wide_cols(100) % NR, 0);
         assert_eq!(p.wide_cols(0), 0);
     }
 
@@ -178,7 +261,8 @@ mod tests {
     fn set_ratio_moves_boundary_and_validates() {
         let mut p = plan_to_exec(&PartitionPlan::hcmp(0.5), 2, 2).unwrap();
         p.set_ratio(0.25).unwrap();
-        assert_eq!(p.wide_cols(100), 25);
+        // 25 columns panel-rounds down to 24 (nearest NR = 8 multiple)
+        assert_eq!(p.wide_cols(100), 24);
         assert!(p.set_ratio(1.5).is_err());
         assert!(p.set_ratio(f64::NAN).is_err());
         assert_eq!(p.linear_ratio, 0.25, "failed set must not clobber the ratio");
@@ -221,5 +305,65 @@ mod tests {
         assert!(p.set_dense_split(1.5).is_err());
         assert!(p.set_dense_split(f64::NAN).is_err());
         assert_eq!(p.dense_split, Some(0.25), "failed set must not clobber the fraction");
+    }
+
+    fn unit(name: &str, peak: f64) -> UnitSpec {
+        UnitSpec {
+            name: name.into(),
+            peak_flops: peak,
+            solo_bw: peak / 2.0,
+            launch_overhead: 0.0,
+            wave: 1,
+            sweet_spot: 16,
+            decay_per_doubling: 1.0,
+            sparse_eff: 0.5,
+        }
+    }
+
+    #[test]
+    fn ratio_cols_rounds_to_panels_and_keeps_endpoints() {
+        assert_eq!(ratio_cols(0.0, 37), 0);
+        assert_eq!(ratio_cols(1.0, 37), 37);
+        assert_eq!(ratio_cols(0.5, 64), 32);
+        assert_eq!(ratio_cols(0.5, 100), 48); // round(50 / 8) = 6 panels
+        assert_eq!(ratio_cols(0.6, 100), 64);
+        for n in [1usize, 7, 8, 37, 100] {
+            for r in [0.1, 0.3, 0.5, 0.9] {
+                let c = ratio_cols(r, n);
+                assert!(c == 0 || c == n || c % NR == 0, "ratio_cols({r}, {n}) = {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn profile_guided_cut_balances_calibrated_rates() {
+        // equal units: the barrier closes fastest at the even panel cut
+        let eq = profile_guided_cut(&unit("w", 1e9), &unit("n", 1e9), 8, 64, 64);
+        assert_eq!(eq, 32);
+        // a 3x-faster wide unit should take ~3/4 of the columns
+        let skew = profile_guided_cut(&unit("w", 3e9), &unit("n", 1e9), 8, 64, 64);
+        assert_eq!(skew, 48);
+        // a vastly faster narrow unit: handing the wide pool anything loses
+        let none = profile_guided_cut(&unit("w", 1e3), &unit("n", 1e12), 8, 64, 64);
+        assert_eq!(none, 0);
+        // every choice must be executable: 0, n, or a panel multiple
+        for (m, k, n) in [(1usize, 256usize, 256usize), (4, 256, 512), (16, 512, 37)] {
+            let c = profile_guided_cut(&unit("w", 2e9), &unit("n", 1e9), m, k, n);
+            assert!(c == 0 || c == n || c % NR == 0, "cut {c} of {n} not executable");
+        }
+    }
+
+    #[test]
+    fn profile_width_fracs_dedup_and_range() {
+        let shapes = [(256usize, 256usize), (256, 512), (512, 256), (256, 0)];
+        let fracs = profile_width_fracs(&unit("w", 2e9), &unit("n", 1e9), &shapes, 8);
+        assert_eq!(fracs.len(), 2, "duplicate and zero widths must collapse: {fracs:?}");
+        assert!(fracs.iter().any(|&(n, _)| n == 256));
+        assert!(fracs.iter().any(|&(n, _)| n == 512));
+        for &(n, f) in &fracs {
+            assert!((0.0..=1.0).contains(&f), "frac {f} for width {n} out of range");
+            let cols = ratio_cols(f, n);
+            assert!(cols == 0 || cols == n || cols % NR == 0);
+        }
     }
 }

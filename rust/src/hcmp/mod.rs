@@ -22,7 +22,10 @@ pub mod simulator;
 pub mod unit;
 
 pub use cost::Op;
-pub use exec_map::{auto_pool_sizes, plan_to_exec, plan_to_exec_dyn, ExecPlan};
+pub use exec_map::{
+    align_cols, auto_pool_sizes, plan_to_exec, plan_to_exec_dyn, profile_guided_cut,
+    profile_width_fracs, ratio_cols, ExecPlan,
+};
 pub use partition::{AttentionSplit, PartitionPlan};
 pub use schedule::{build_batched_step, build_step, EngineKind, StepSchedule};
 pub use simulator::{SimReport, Simulator};

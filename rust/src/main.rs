@@ -4,7 +4,7 @@
 //!   serve   [--addr HOST:PORT] [--width W] [--parallel hcmp[:R]|seq]  start the TCP server
 //!   generate --prompt TEXT [--max-new N] [--engine seq|ghidorah]
 //!   arca    [--dataset NAME] [--ctx N]            run the ARCA preprocessing pass
-//!   bench   table1|fig9|fig10a|fig10b|measured    regenerate a paper artifact
+//!   bench   table1|fig9|fig10a|fig10b|measured|kernels  regenerate a paper artifact
 //!   info                                          artifact + model summary
 
 use std::collections::BTreeMap;
@@ -20,7 +20,7 @@ use ghidorah::bench;
 use ghidorah::coordinator::{EngineChoice, Request, RetunePolicy, Scheduler, Server};
 use ghidorah::exec::ExecEngine;
 use ghidorah::hcmp::simulator::Simulator;
-use ghidorah::hcmp::{auto_pool_sizes, PartitionPlan};
+use ghidorah::hcmp::{auto_pool_sizes, profile_width_fracs, PartitionPlan};
 use ghidorah::model::forward::RustModel;
 use ghidorah::model::weights::Weights;
 use ghidorah::model::ModelConfig;
@@ -60,8 +60,9 @@ USAGE:
                     [--parallel hcmp[:RATIO]|hcmp:dyn[:RATIO]|seq] [--wide N] [--narrow M]
                     [--autotune] [--host-profile PATH]
   ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256] [--host-profile PATH]
-  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|all
-                    (measured also takes [--autotune] [--host-profile PATH])
+  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|kernels|all
+                    (measured also takes [--autotune] [--host-profile PATH];
+                     kernels prints scalar vs packed GEMM GFLOP/s, takes [--reps N])
   ghidorah info
 
   --parallel selects the pure-Rust execution engine: `hcmp[:RATIO]` runs the
@@ -319,7 +320,7 @@ fn autotune_wiring(
     cfg: &ModelConfig,
     tree: &VerificationTree,
     heads: &[Vec<f64>],
-) -> anyhow::Result<(ParallelMode, usize, usize, RetunePolicy)> {
+) -> anyhow::Result<(ParallelMode, usize, usize, RetunePolicy, Vec<(usize, f64)>)> {
     let (wide, narrow) = pool_sizes(flags)?;
     let profile = match mode {
         ParallelMode::Hcmp { .. } => resolve_host_profile(flags, wide, narrow)?,
@@ -348,7 +349,27 @@ fn autotune_wiring(
         }
     }
     let (mode, policy) = apply_autotune(mode, profile.as_ref(), cfg, tree, heads);
-    Ok((mode, wide, narrow, policy))
+    let fracs = match (&profile, mode) {
+        (Some(p), ParallelMode::Hcmp { .. }) => decode_width_fracs(p, cfg, tree.width()),
+        _ => Vec::new(),
+    };
+    Ok((mode, wide, narrow, policy, fracs))
+}
+
+/// Profile-guided per-width shard fractions for the decode path's distinct
+/// linear shapes — the non-uniform split the parallel executor applies per
+/// GEMM output width (always panel-rounded), overriding the plan's single
+/// uniform ratio wherever calibration says the even-rate cut is elsewhere.
+fn decode_width_fracs(p: &HostProfile, cfg: &ModelConfig, m: usize) -> Vec<(usize, f64)> {
+    let qkv = cfg.n_heads * cfg.head_dim;
+    let shapes = [
+        (cfg.d_model, qkv),
+        (qkv, cfg.d_model),
+        (cfg.d_model, cfg.ffn),
+        (cfg.ffn, cfg.d_model),
+        (cfg.d_model, cfg.vocab),
+    ];
+    profile_width_fracs(&p.wide, &p.narrow, &shapes, m)
 }
 
 /// Pool sizes from --wide/--narrow, defaulting to the host-derived split.
@@ -398,6 +419,7 @@ fn rust_engine_factory(
     mode: ParallelMode,
     wide: usize,
     narrow: usize,
+    fracs: Vec<(usize, f64)>,
 ) -> impl FnOnce() -> anyhow::Result<ExecEngine> + Send + 'static {
     move || {
         let weights_path = Artifacts::default_dir().join("weights.npz");
@@ -413,20 +435,31 @@ fn rust_engine_factory(
         let model = RustModel::new(cfg, weights);
         match mode {
             ParallelMode::Seq => Ok(ExecEngine::sequential(model)),
-            ParallelMode::Hcmp { plan, dynamic: true, .. } => {
-                eprintln!(
-                    "ghidorah: HCMP parallel engine (ratio {:.2}, dynamic context split {:.2}, \
-                     pools {wide}+{narrow})",
-                    plan.linear_ratio, plan.attention.dense_gpu_frac
-                );
-                ExecEngine::parallel_dyn(model, &plan, wide, narrow)
-            }
-            ParallelMode::Hcmp { plan, dynamic: false, .. } => {
-                eprintln!(
-                    "ghidorah: HCMP parallel engine (ratio {:.2}, pools {wide}+{narrow})",
-                    plan.linear_ratio
-                );
-                ExecEngine::parallel(model, &plan, wide, narrow)
+            ParallelMode::Hcmp { plan, dynamic, .. } => {
+                let mut engine = if dynamic {
+                    eprintln!(
+                        "ghidorah: HCMP parallel engine (ratio {:.2}, dynamic context split \
+                         {:.2}, pools {wide}+{narrow})",
+                        plan.linear_ratio, plan.attention.dense_gpu_frac
+                    );
+                    ExecEngine::parallel_dyn(model, &plan, wide, narrow)?
+                } else {
+                    eprintln!(
+                        "ghidorah: HCMP parallel engine (ratio {:.2}, pools {wide}+{narrow})",
+                        plan.linear_ratio
+                    );
+                    ExecEngine::parallel(model, &plan, wide, narrow)?
+                };
+                if !fracs.is_empty() {
+                    let widths = fracs.len();
+                    if engine.set_width_fracs(fracs) {
+                        eprintln!(
+                            "ghidorah: profile-guided shard widths armed for \
+                             {widths} linear widths"
+                        );
+                    }
+                }
+                Ok(engine)
             }
         }
     }
@@ -459,9 +492,10 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     );
     let sched = match parallel {
         Some(mode) => {
-            let (mode, wide, narrow, policy) = autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
+            let (mode, wide, narrow, policy, fracs) =
+                autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
             Scheduler::spawn_tuned(
-                rust_engine_factory(cfg, mode, wide, narrow),
+                rust_engine_factory(cfg, mode, wide, narrow, fracs),
                 tree,
                 64,
                 top_k,
@@ -504,9 +538,10 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let (tree, heads) = serving_tree(&cfg, width);
     let sched = match parallel {
         Some(mode) => {
-            let (mode, wide, narrow, policy) = autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
+            let (mode, wide, narrow, policy, fracs) =
+                autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
             Scheduler::spawn_tuned(
-                rust_engine_factory(cfg, mode, wide, narrow),
+                rust_engine_factory(cfg, mode, wide, narrow, fracs),
                 tree,
                 64,
                 4,
@@ -598,6 +633,10 @@ fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()
             println!("{}", bench::fig10b(reps).text);
         }
         "ablation" => println!("{}", bench::ablation().text),
+        "kernels" => {
+            let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(40);
+            println!("{}", bench::kernels(reps).text);
+        }
         "measured" => {
             let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(20);
             let (wide, narrow) = pool_sizes(flags)?;
@@ -610,6 +649,7 @@ fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()
             println!("{}", bench::fig10a().text);
             println!("{}", bench::fig10b(200).text);
             println!("{}", bench::ablation().text);
+            println!("{}", bench::kernels(40).text);
             println!("{}", bench::measured(20).text);
         }
         _ => usage(),

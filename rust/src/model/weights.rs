@@ -11,13 +11,26 @@ use anyhow::{anyhow, Context};
 use xla::FromRawBytes;
 
 use super::ModelConfig;
-use crate::tensor::Tensor;
+use crate::tensor::{PackedB, Tensor};
 use crate::util::rng::Rng;
 
-/// Name-indexed parameter set (host copies, f32).
+/// Name-indexed parameter set (host copies, f32). Every 2-D linear weight
+/// is additionally pre-packed once at load time into the `NR`-wide column
+/// panels the register-tiled microkernel streams (`tensor::PackedB`) —
+/// the decode path never re-reads the row-major copy.
 #[derive(Clone, Debug)]
 pub struct Weights {
     map: BTreeMap<String, Tensor>,
+    packed: BTreeMap<String, PackedB>,
+}
+
+/// Pre-pack the linear (GEMM right-hand-side) weights. The embedding
+/// table is row-gathered and the norm gains are 1-D, so neither packs.
+fn pack_linears(map: &BTreeMap<String, Tensor>) -> BTreeMap<String, PackedB> {
+    map.iter()
+        .filter(|(name, t)| t.ndim() == 2 && name.as_str() != "tok_emb" && !name.ends_with("norm"))
+        .map(|(name, t)| (name.clone(), PackedB::pack(t)))
+        .collect()
 }
 
 impl Weights {
@@ -35,7 +48,8 @@ impl Weights {
             let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
             map.insert(name, Tensor::from_vec(&dims, data));
         }
-        let w = Self { map };
+        let packed = pack_linears(&map);
+        let w = Self { map, packed };
         w.validate(cfg)?;
         Ok(w)
     }
@@ -62,13 +76,22 @@ impl Weights {
             };
             map.insert(name, t);
         }
-        Self { map }
+        let packed = pack_linears(&map);
+        Self { map, packed }
     }
 
     pub fn get(&self, name: &str) -> &Tensor {
         self.map
             .get(name)
             .unwrap_or_else(|| panic!("missing weight '{name}'"))
+    }
+
+    /// The packed-panel copy of a linear weight — what every decode-path
+    /// GEMM streams.
+    pub fn linear(&self, name: &str) -> &PackedB {
+        self.packed
+            .get(name)
+            .unwrap_or_else(|| panic!("weight '{name}' has no packed copy (not a linear?)"))
     }
 
     pub fn names(&self) -> impl Iterator<Item = &String> {
@@ -113,6 +136,25 @@ mod tests {
         let cfg = ModelConfig::test_small();
         let w = Weights::random(&cfg, 2);
         assert!(w.get("l0_attn_norm").data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn linears_are_packed_at_load() {
+        let cfg = ModelConfig::test_small();
+        let w = Weights::random(&cfg, 3);
+        for name in ["l0_wq", "l1_w_down", "w_lm", "medusa0_w"] {
+            let t = w.get(name);
+            let p = w.linear(name);
+            assert_eq!((p.k(), p.n()), (t.shape()[0], t.shape()[1]), "{name}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no packed copy")]
+    fn embedding_has_no_packed_copy() {
+        let cfg = ModelConfig::test_small();
+        let w = Weights::random(&cfg, 4);
+        w.linear("tok_emb");
     }
 
     #[test]

@@ -18,43 +18,22 @@ pub fn gemm(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// C = A @ B + bias (bias broadcast over rows); bias may be empty.
+/// C = A @ B + bias (bias broadcast over rows); bias may be empty. The
+/// bias is folded into the GEMM epilogue: C rows start from the broadcast
+/// bias and the multiply accumulates on top — one pass over C, no
+/// separate add sweep.
 pub fn gemm_bias(a: &Tensor, b: &Tensor, bias: &[f32]) -> Tensor {
-    let mut c = gemm(a, b);
-    if !bias.is_empty() {
-        let n = c.shape()[1];
-        assert_eq!(bias.len(), n);
-        for i in 0..c.shape()[0] {
-            for (x, bv) in c.row_mut(i).iter_mut().zip(bias) {
-                *x += bv;
-            }
-        }
-    }
-    c
-}
-
-/// C = A @ B[:, lo..hi] — computes only an output-column slice, reading the
-/// full A (the HCMP column-split primitive: every unit reads the full input
-/// activation from unified memory and writes its own disjoint slice).
-pub fn matmul_cols(a: &Tensor, b: &Tensor, lo: usize, hi: usize) -> Tensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.shape()[0], b.shape()[1]);
-    assert_eq!(k, k2);
-    assert!(lo <= hi && hi <= n);
-    let w = hi - lo;
-    let mut c = Tensor::zeros(&[m, w]);
-    let (ad, bd, cd) = (a.data(), b.data(), c.data_mut());
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut cd[i * w..(i + 1) * w];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &bd[p * n + lo..p * n + hi];
-            axpy(av, brow, crow);
+    assert_eq!(k, k2, "gemm_bias inner dims: {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    if !bias.is_empty() {
+        assert_eq!(bias.len(), n);
+        for i in 0..m {
+            c.row_mut(i).copy_from_slice(bias);
         }
     }
+    gemm_into(a.data(), b.data(), c.data_mut(), m, k, n);
     c
 }
 
@@ -276,15 +255,17 @@ mod tests {
     #[test]
     fn column_slice_matches_full() {
         let mut rng = Rng::new(12);
-        let a = Tensor::randn(&[4, 32], 1.0, &mut rng);
-        let b = Tensor::randn(&[32, 20], 1.0, &mut rng);
+        let (m, k, n) = (4usize, 32usize, 20usize);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
         let full = gemm(&a, &b);
-        let left = matmul_cols(&a, &b, 0, 8);
-        let right = matmul_cols(&a, &b, 8, 20);
-        let joined = Tensor::concat_cols(&[&left, &right]);
-        for (x, y) in joined.data().iter().zip(full.data()) {
-            assert!((x - y).abs() < 1e-4);
+        let mut c = Tensor::zeros(&[m, n]);
+        let bounds = [0usize, 8, n];
+        let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+        for (mut rows, w) in shards.into_iter().zip(bounds.windows(2)) {
+            gemm_into_cols(a.data(), b.data(), &mut rows, k, n, w[0], w[1]);
         }
+        assert_eq!(c.data(), full.data());
     }
 
     #[test]

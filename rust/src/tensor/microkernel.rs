@@ -1,0 +1,222 @@
+//! Register-tiled GEMM microkernel over the packed panel layout
+//! ([`super::pack`]) — the paper's §III-B.3 hand-shaped CPU kernel. An
+//! `MR × NR` accumulator tile lives in registers while the inner loop
+//! streams one contiguous `NR`-wide packed row of B per k step
+//! (NEON/SSE-shaped, like `gemm_nt`'s 2x2 dot-product tile but for the
+//! row-major activation-times-weight case).
+//!
+//! Bitwise contract: every output element accumulates in a single
+//! register slot in ascending-k order, so the per-element float sequence
+//! is independent of both the row tiling and any panel-aligned column
+//! shard. `gemm_packed_into_cols` on `NR`-multiple bounds is therefore
+//! **bitwise identical** to the unsharded [`gemm_packed`] — the HCMP
+//! §III-B.1 losslessness guarantee at kernel level.
+
+use super::pack::{NR, PackedB};
+use super::Tensor;
+
+/// Register-tile height (rows of A per accumulator tile).
+pub const MR: usize = 4;
+
+/// Compute output columns `[lo, hi)` into per-row destination slices
+/// (`rows[i]` has width `hi - lo`). `lo`/`hi` are panel-aligned by the
+/// public callers; `bias` (full-width, indexed by absolute column) seeds
+/// the accumulators before the k loop — the fused epilogue.
+fn run_panels(
+    a: &[f32],
+    bp: &PackedB,
+    rows: &mut [&mut [f32]],
+    k: usize,
+    lo: usize,
+    hi: usize,
+    bias: Option<&[f32]>,
+) {
+    let m = rows.len();
+    let n = bp.n();
+    for p in lo / NR..hi.div_ceil(NR) {
+        let col0 = p * NR;
+        let w = NR.min(n - col0);
+        let off = col0 - lo;
+        let panel = bp.panel(p);
+        let mut i = 0usize;
+        while i + MR <= m {
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let a2 = &a[(i + 2) * k..(i + 3) * k];
+            let a3 = &a[(i + 3) * k..(i + 4) * k];
+            let mut acc = [[0f32; NR]; MR];
+            if let Some(bias) = bias {
+                for t in 0..MR {
+                    acc[t][..w].copy_from_slice(&bias[col0..col0 + w]);
+                }
+            }
+            for (r, brow) in panel.chunks_exact(NR).enumerate() {
+                let (v0, v1, v2, v3) = (a0[r], a1[r], a2[r], a3[r]);
+                for j in 0..NR {
+                    acc[0][j] += v0 * brow[j];
+                    acc[1][j] += v1 * brow[j];
+                    acc[2][j] += v2 * brow[j];
+                    acc[3][j] += v3 * brow[j];
+                }
+            }
+            for t in 0..MR {
+                rows[i + t][off..off + w].copy_from_slice(&acc[t][..w]);
+            }
+            i += MR;
+        }
+        // remainder rows: same single-register ascending-k accumulation,
+        // so the tile boundary never changes any element's float sequence
+        while i < m {
+            let ar = &a[i * k..(i + 1) * k];
+            let mut acc = [0f32; NR];
+            if let Some(bias) = bias {
+                acc[..w].copy_from_slice(&bias[col0..col0 + w]);
+            }
+            for (r, brow) in panel.chunks_exact(NR).enumerate() {
+                let v = ar[r];
+                for j in 0..NR {
+                    acc[j] += v * brow[j];
+                }
+            }
+            rows[i][off..off + w].copy_from_slice(&acc[..w]);
+            i += 1;
+        }
+    }
+}
+
+/// C = A @ B over a pre-packed B.
+pub fn gemm_packed(a: &Tensor, bp: &PackedB) -> Tensor {
+    assert_eq!(a.ndim(), 2, "gemm_packed wants a 2-D activation");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, bp.k(), "gemm_packed inner dims: {k} vs {}", bp.k());
+    let n = bp.n();
+    let mut c = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let mut rows: Vec<&mut [f32]> = c.data_mut().chunks_mut(n).collect();
+    run_panels(a.data(), bp, &mut rows, k, 0, n, None);
+    c
+}
+
+/// C = A @ B + bias (broadcast over rows), bias fused into the epilogue:
+/// accumulators start from the bias instead of zero, so C is written in
+/// one pass. With an all-zero bias this is bitwise [`gemm_packed`].
+pub fn gemm_packed_bias(a: &Tensor, bp: &PackedB, bias: &[f32]) -> Tensor {
+    assert_eq!(a.ndim(), 2, "gemm_packed_bias wants a 2-D activation");
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, bp.k(), "gemm_packed_bias inner dims: {k} vs {}", bp.k());
+    let n = bp.n();
+    assert_eq!(bias.len(), n, "bias length {} vs n {n}", bias.len());
+    let mut c = Tensor::zeros(&[m, n]);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let mut rows: Vec<&mut [f32]> = c.data_mut().chunks_mut(n).collect();
+    run_panels(a.data(), bp, &mut rows, k, 0, n, Some(bias));
+    c
+}
+
+/// Compute the output-column shard `C[:, lo..hi)` of `C = A @ B` into
+/// per-row destination slices (from [`super::split_cols_mut`]). Bounds
+/// must sit on panel boundaries (`lo % NR == 0`; `hi % NR == 0` or
+/// `hi == n`) — that is the sharding contract that keeps the partitioned
+/// result bitwise identical to the unsharded [`gemm_packed`].
+pub fn gemm_packed_into_cols(
+    a: &[f32],
+    bp: &PackedB,
+    rows: &mut [&mut [f32]],
+    k: usize,
+    lo: usize,
+    hi: usize,
+) {
+    let n = bp.n();
+    assert_eq!(k, bp.k(), "gemm_packed_into_cols inner dims: {k} vs {}", bp.k());
+    assert!(lo < hi && hi <= n, "bad column shard [{lo}, {hi}) of {n}");
+    assert_eq!(lo % NR, 0, "shard start {lo} off the panel grid (NR = {NR})");
+    assert!(hi == n || hi % NR == 0, "shard end {hi} off the panel grid (NR = {NR})");
+    assert_eq!(a.len(), rows.len() * k, "A shape mismatch");
+    debug_assert!(rows.iter().all(|r| r.len() == hi - lo), "shard row width mismatch");
+    run_panels(a, bp, rows, k, lo, hi, None);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{gemm, gemm_bias, split_cols_mut};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn packed_matches_blocked_gemm() {
+        let mut rng = Rng::new(31);
+        // ragged everything: m % MR != 0, n % NR != 0, k past one panel row
+        let shapes = [(1, 1, 1), (3, 5, 2), (4, 8, 8), (16, 96, 24), (7, 130, 9), (5, 64, 33)];
+        for (m, k, n) in shapes {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let want = gemm(&a, &b);
+            let got = gemm_packed(&a, &PackedB::pack(&b));
+            assert_eq!(got.shape(), want.shape());
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_bias_matches_two_pass_and_zero_bias_is_bitwise() {
+        let mut rng = Rng::new(32);
+        for (m, k, n) in [(1, 4, 3), (6, 33, 20), (9, 16, 13)] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let bp = PackedB::pack(&b);
+            let got = gemm_packed_bias(&a, &bp, &bias);
+            let want = gemm_bias(&a, &b, &bias);
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
+            }
+            let zeros = vec![0.0f32; n];
+            assert_eq!(
+                gemm_packed_bias(&a, &bp, &zeros).data(),
+                gemm_packed(&a, &bp).data(),
+                "zero bias must be bitwise the unbiased kernel"
+            );
+        }
+    }
+
+    #[test]
+    fn panel_aligned_shards_are_bitwise_identical() {
+        let mut rng = Rng::new(33);
+        for (m, k, n, bounds) in [
+            (5usize, 130usize, 40usize, vec![0usize, 8, 24, 40]),
+            (1, 3, 8, vec![0, 8]),
+            (9, 64, 37, vec![0, 16, 37]), // ragged full-width tail shard
+            (3, 65, 16, vec![0, 8, 16]),
+        ] {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bp = PackedB::pack(&b);
+            let full = gemm_packed(&a, &bp);
+            let mut c = Tensor::zeros(&[m, n]);
+            let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+            for (mut rows, w) in shards.into_iter().zip(bounds.windows(2)) {
+                gemm_packed_into_cols(a.data(), &bp, &mut rows, k, w[0], w[1]);
+            }
+            assert_eq!(c.data(), full.data(), "({m},{k},{n}) shards {bounds:?} not bitwise");
+        }
+    }
+
+    #[test]
+    fn empty_m_and_k_edges() {
+        let bp = PackedB::from_slice(&[], 0, 5);
+        let a = Tensor::zeros(&[3, 0]);
+        let c = gemm_packed(&a, &bp); // k == 0: all zeros
+        assert_eq!(c.data(), &[0.0; 15]);
+        let c2 = gemm_packed_bias(&a, &bp, &[1., 2., 3., 4., 5.]);
+        assert_eq!(c2.row(2), &[1., 2., 3., 4., 5.]);
+        let a0 = Tensor::zeros(&[0, 4]);
+        let bp2 = PackedB::from_slice(&[0.0; 12], 4, 3);
+        assert!(gemm_packed(&a0, &bp2).is_empty());
+    }
+}

@@ -7,8 +7,12 @@
 //! dedicated blocked kernels below / in `sparse::`.
 
 mod gemm;
+mod microkernel;
+mod pack;
 
-pub use gemm::{gemm, gemm_bias, gemm_into_cols, gemm_nt, matmul_cols, split_cols_mut};
+pub use gemm::{gemm, gemm_bias, gemm_into_cols, gemm_nt, split_cols_mut};
+pub use microkernel::{gemm_packed, gemm_packed_bias, gemm_packed_into_cols, MR};
+pub use pack::{NR, PackedB};
 
 use crate::util::rng::Rng;
 

@@ -1,0 +1,111 @@
+//! Packed column-panel layout for GEMM B operands (the decode-path
+//! weights). `B[k, n]` is re-laid once at load time into `ceil(n / NR)`
+//! panels of `NR` output columns each; within a panel the k rows are
+//! stored contiguously (`k × NR` floats, k-major), so the microkernel in
+//! [`super::microkernel`] streams one cache line per k step instead of
+//! striding across the full row of B. The ragged last panel is
+//! zero-padded to `NR` columns — padding lanes multiply into discarded
+//! accumulator slots and never reach C.
+
+use super::Tensor;
+
+/// Panel width in output columns — the register-tile width of the packed
+/// microkernel. This is the sharding grain of the whole engine: column
+/// shards of a packed GEMM are bitwise identical to the unsharded result
+/// only when every interior cut lands on a multiple of `NR`.
+pub const NR: usize = 8;
+
+/// A `[k, n]` matrix packed into `NR`-wide column panels.
+#[derive(Clone, Debug)]
+pub struct PackedB {
+    k: usize,
+    n: usize,
+    /// `n_panels × k × NR` floats; panel `p` occupies
+    /// `data[p * k * NR .. (p + 1) * k * NR]`, with row `r`'s `NR` values
+    /// contiguous at offset `r * NR` inside the panel.
+    data: Vec<f32>,
+}
+
+impl PackedB {
+    /// Pack a 2-D row-major tensor (the weight-loading entry point).
+    pub fn pack(w: &Tensor) -> Self {
+        assert_eq!(w.ndim(), 2, "PackedB::pack wants a 2-D weight, got {:?}", w.shape());
+        Self::from_slice(w.data(), w.shape()[0], w.shape()[1])
+    }
+
+    /// Pack a row-major `[k, n]` slice.
+    pub fn from_slice(b: &[f32], k: usize, n: usize) -> Self {
+        assert_eq!(b.len(), k * n, "B shape mismatch: {} vs {k}x{n}", b.len());
+        let n_panels = n.div_ceil(NR);
+        let mut data = vec![0.0f32; n_panels * k * NR];
+        for p in 0..n_panels {
+            let col0 = p * NR;
+            let w = NR.min(n - col0);
+            let panel = &mut data[p * k * NR..(p + 1) * k * NR];
+            for r in 0..k {
+                panel[r * NR..r * NR + w].copy_from_slice(&b[r * n + col0..r * n + col0 + w]);
+            }
+        }
+        Self { k, n, data }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical (unpadded) output-column count.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn n_panels(&self) -> usize {
+        self.n.div_ceil(NR)
+    }
+
+    /// Panel `p` as a `k × NR` k-major slice.
+    #[inline]
+    pub fn panel(&self, p: usize) -> &[f32] {
+        &self.data[p * self.k * NR..(p + 1) * self.k * NR]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pack_roundtrips_every_element() {
+        let mut rng = Rng::new(7);
+        for (k, n) in [(1usize, 1usize), (5, 8), (3, 17), (64, 48), (2, 7)] {
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let bp = PackedB::pack(&b);
+            assert_eq!((bp.k(), bp.n()), (k, n));
+            assert_eq!(bp.n_panels(), n.div_ceil(NR));
+            for r in 0..k {
+                for c in 0..n {
+                    let got = bp.panel(c / NR)[r * NR + c % NR];
+                    assert_eq!(got, b.at2(r, c), "({k},{n}) element ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_tail_panel_is_zero_padded() {
+        let mut rng = Rng::new(8);
+        let (k, n) = (6usize, 13usize); // last panel has 13 - 8 = 5 live lanes
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bp = PackedB::pack(&b);
+        let tail = bp.panel(bp.n_panels() - 1);
+        let live = n - (bp.n_panels() - 1) * NR;
+        for r in 0..k {
+            for j in live..NR {
+                assert_eq!(tail[r * NR + j], 0.0, "pad lane ({r},{j}) not zero");
+            }
+        }
+    }
+}

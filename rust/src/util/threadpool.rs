@@ -9,6 +9,37 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Pin the calling thread to one CPU core. Only real with the
+/// `core-pinning` cargo feature on Linux, where it issues a raw
+/// `sched_setaffinity(2)` (no libc dependency in this offline build);
+/// everywhere else it is a no-op returning `false`. Out-of-range cores
+/// (beyond the host's parallelism or the 1024-bit `cpu_set_t`) are
+/// skipped gracefully so a pool asking for more cores than the host has
+/// still runs — just unpinned.
+#[cfg(all(feature = "core-pinning", target_os = "linux"))]
+fn pin_current_thread(core: usize) -> bool {
+    #[repr(C)]
+    struct CpuSet {
+        bits: [u64; 16], // 1024 bits, matching glibc's cpu_set_t
+    }
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const CpuSet) -> i32;
+    }
+    let avail = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if core >= avail || core >= 1024 {
+        return false;
+    }
+    let mut set = CpuSet { bits: [0u64; 16] };
+    set.bits[core / 64] = 1u64 << (core % 64);
+    // SAFETY: pid 0 targets the calling thread; the mask outlives the call.
+    unsafe { sched_setaffinity(0, std::mem::size_of::<CpuSet>(), &set) == 0 }
+}
+
+#[cfg(not(all(feature = "core-pinning", target_os = "linux")))]
+fn pin_current_thread(_core: usize) -> bool {
+    false
+}
+
 /// A job that may borrow from the caller's stack frame; only runnable
 /// through [`scoped_run_on`], which blocks until every job has finished.
 pub type ScopedJob<'a> = Box<dyn FnOnce() + Send + 'a>;
@@ -21,22 +52,42 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Create a pool with `n` worker threads (n >= 1).
     pub fn new(n: usize) -> Self {
+        Self::with_affinity(n, None)
+    }
+
+    /// Create a pool whose workers are pinned to the given cores (worker
+    /// `i` to `cores[i % cores.len()]`), so the two HCMP pools occupy
+    /// disjoint core sets and `arca::autotune` measures genuine per-pool
+    /// rates instead of scheduler-migrated noise. Pinning is best-effort
+    /// ([`pin_current_thread`]): without the `core-pinning` feature, off
+    /// Linux, or for cores the host does not have, workers simply run
+    /// unpinned.
+    pub fn with_affinity(n: usize, cores: Option<&[usize]>) -> Self {
         let n = n.max(1);
         let (tx, rx) = mpsc::channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let workers = (0..n)
             .map(|i| {
                 let rx = Arc::clone(&rx);
+                let core = match cores {
+                    Some(cs) if !cs.is_empty() => Some(cs[i % cs.len()]),
+                    _ => None,
+                };
                 thread::Builder::new()
                     .name(format!("ghidorah-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // sender dropped: shut down
+                    .spawn(move || {
+                        if let Some(core) = core {
+                            pin_current_thread(core);
+                        }
+                        loop {
+                            let job = {
+                                let guard = rx.lock().unwrap();
+                                guard.recv()
+                            };
+                            match job {
+                                Ok(job) => job(),
+                                Err(_) => break, // sender dropped: shut down
+                            }
                         }
                     })
                     .expect("spawn worker")
@@ -129,6 +180,22 @@ pub fn scoped_run_on(batches: Vec<(&ThreadPool, Vec<ScopedJob<'_>>)>) {
     if let Some(p) = panic {
         std::panic::resume_unwind(p);
     }
+}
+
+/// Build the HCMP wide/narrow worker-pool pair on disjoint core sets:
+/// wide workers pin to cores `0..wide`, narrow workers to
+/// `wide..wide + narrow`. With the `core-pinning` feature off (or on a
+/// non-Linux host, or when the host has fewer cores) this degrades to two
+/// ordinary unpinned pools of the same sizes.
+pub fn hetero_pools(wide: usize, narrow: usize) -> (ThreadPool, ThreadPool) {
+    let wide = wide.max(1);
+    let narrow = narrow.max(1);
+    let wide_cores: Vec<usize> = (0..wide).collect();
+    let narrow_cores: Vec<usize> = (wide..wide + narrow).collect();
+    (
+        ThreadPool::with_affinity(wide, Some(&wide_cores)),
+        ThreadPool::with_affinity(narrow, Some(&narrow_cores)),
+    )
 }
 
 impl Drop for ThreadPool {
@@ -236,6 +303,46 @@ mod tests {
         })];
         scoped_run_on(vec![(&pool, jobs)]);
         assert_eq!(hit.load(Ordering::SeqCst), 1, "job lost on dead pool");
+    }
+
+    #[test]
+    fn affinity_pools_run_jobs_even_with_impossible_cores() {
+        // cores far beyond any host (and beyond the 1024-bit cpu_set_t):
+        // pinning must skip gracefully, never refuse to execute
+        let pool = ThreadPool::with_affinity(2, Some(&[5000, 9999]));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.scoped_run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn hetero_pools_have_requested_sizes_and_work() {
+        let (wide, narrow) = hetero_pools(3, 2);
+        assert_eq!((wide.threads(), narrow.threads()), (3, 2));
+        let hit = AtomicUsize::new(0);
+        let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::new();
+        let mut narrow_jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for i in 0..8 {
+            let h = &hit;
+            let job: ScopedJob<'_> = Box::new(move || {
+                h.fetch_add(1, Ordering::SeqCst);
+            });
+            if i % 2 == 0 {
+                wide_jobs.push(job);
+            } else {
+                narrow_jobs.push(job);
+            }
+        }
+        scoped_run_on(vec![(&wide, wide_jobs), (&narrow, narrow_jobs)]);
+        assert_eq!(hit.load(Ordering::SeqCst), 8);
     }
 
     #[test]

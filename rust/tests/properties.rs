@@ -12,7 +12,7 @@ use ghidorah::sparse::{
 use ghidorah::spec::drafter::AccuracyProfile;
 use ghidorah::spec::tree::VerificationTree;
 use ghidorah::spec::verify::verify_greedy;
-use ghidorah::tensor::{gemm, gemm_into_cols, gemm_nt, matmul_cols, split_cols_mut, Tensor};
+use ghidorah::tensor::{gemm, gemm_into_cols, gemm_nt, split_cols_mut, Tensor};
 use ghidorah::util::json::Json;
 use ghidorah::util::prop::{check, gens};
 use ghidorah::util::rng::Rng;
@@ -181,7 +181,9 @@ fn prop_dense_split_merge_bounded_and_degenerate_bitwise() {
     });
 }
 
-/// Column-split GEMM shards always compose to the full GEMM.
+/// Column-split GEMM shards always compose to the full GEMM — bitwise,
+/// since `gemm_into_cols` accumulates every element identically no matter
+/// where the shard bounds fall.
 #[test]
 fn prop_column_split_composes() {
     check("column-split", 60, |r| (r.range(1, 10), r.range(1, 40), r.range(2, 50), r.next_u64()), |&(m, k, n, seed)| {
@@ -189,14 +191,121 @@ fn prop_column_split_composes() {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let b = Tensor::randn(&[k, n], 1.0, &mut rng);
         let cut = rng.range(1, n);
-        let full = gemm(&a, &b);
-        let left = matmul_cols(&a, &b, 0, cut);
-        let right = matmul_cols(&a, &b, cut, n);
-        let joined = Tensor::concat_cols(&[&left, &right]);
-        for (x, y) in joined.data().iter().zip(full.data()) {
+        let full = {
+            let mut c = Tensor::zeros(&[m, n]);
+            let mut shards = split_cols_mut(c.data_mut(), m, n, &[0, n]);
+            gemm_into_cols(a.data(), b.data(), &mut shards[0], k, n, 0, n);
+            c
+        };
+        let mut c = Tensor::zeros(&[m, n]);
+        let shards = split_cols_mut(c.data_mut(), m, n, &[0, cut, n]);
+        for (mut rows, (lo, hi)) in shards.into_iter().zip([(0, cut), (cut, n)]) {
+            gemm_into_cols(a.data(), b.data(), &mut rows, k, n, lo, hi);
+        }
+        if c.data() != full.data() {
+            return Err(format!("not bitwise at cut {cut} (m={m}, k={k}, n={n})"));
+        }
+        Ok(())
+    });
+}
+
+/// The packed register-tiled GEMM matches the scalar blocked GEMM for
+/// random shapes (ragged row/panel tails included), and the fused bias
+/// epilogue matches the two-pass bias add.
+#[test]
+fn prop_packed_gemm_matches_naive() {
+    use ghidorah::tensor::{gemm_bias, gemm_packed, gemm_packed_bias, PackedB};
+
+    check("packed-gemm", 60, |r| (r.range(1, 14), r.range(1, 80), r.range(1, 70), r.next_u64()), |&(m, k, n, seed)| {
+        let mut rng = Rng::new(seed);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bias: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let bp = PackedB::pack(&b);
+        let got = gemm_packed(&a, &bp);
+        let want = gemm(&a, &b);
+        for (x, y) in got.data().iter().zip(want.data()) {
             if (x - y).abs() > 1e-3 {
-                return Err(format!("{x} vs {y} at cut {cut}"));
+                return Err(format!("{x} vs {y} (m={m}, k={k}, n={n})"));
             }
+        }
+        let got_b = gemm_packed_bias(&a, &bp, &bias);
+        let want_b = gemm_bias(&a, &b, &bias);
+        for (x, y) in got_b.data().iter().zip(want_b.data()) {
+            if (x - y).abs() > 1e-3 {
+                return Err(format!("bias: {x} vs {y} (m={m}, k={k}, n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Packed GEMM sharded at panel-aligned bounds — including non-uniform
+/// cuts from the profile-guided splitter over randomly skewed synthetic
+/// unit rates — and executed concurrently on two real worker pools is
+/// bitwise identical to the unsharded packed GEMM. Uses the engine's own
+/// `panel_shard_bounds` layout, so the property tests exactly what
+/// `HcmpParallelExecutor` runs.
+#[test]
+fn prop_packed_shards_bitwise_at_profile_guided_cuts() {
+    use ghidorah::exec::parallel::panel_shard_bounds;
+    use ghidorah::hcmp::profile_guided_cut;
+    use ghidorah::hcmp::unit::UnitSpec;
+    use ghidorah::tensor::{gemm_packed, gemm_packed_into_cols, PackedB};
+
+    check("packed-shards-bitwise", 30, |r| r.next_u64(), |&seed| {
+        let mut rng = Rng::new(seed);
+        let m = rng.range(1, 13);
+        let k = rng.range(1, 130);
+        let n = rng.range(1, 90);
+        let (wide_t, narrow_t) = (rng.range(1, 5), rng.range(1, 5));
+        let unit = |name: &str, peak: f64| UnitSpec {
+            name: name.into(),
+            peak_flops: peak,
+            solo_bw: peak / 2.0,
+            launch_overhead: 1e-6,
+            wave: 1,
+            sweet_spot: 16,
+            decay_per_doubling: 0.9,
+            sparse_eff: 0.5,
+        };
+        // randomly skewed calibrated rates drive a non-uniform cut
+        let wide_u = unit("wide", 1e9 * (1.0 + rng.f64() * 9.0));
+        let narrow_u = unit("narrow", 1e9 * (1.0 + rng.f64() * 9.0));
+        let n_wide = profile_guided_cut(&wide_u, &narrow_u, m, k, n);
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bp = PackedB::pack(&b);
+        let want = gemm_packed(&a, &bp);
+
+        let (all, n_wide_chunks) = panel_shard_bounds(n, n_wide, wide_t, narrow_t);
+        let mut bounds: Vec<usize> = all.iter().map(|c| c.0).collect();
+        bounds.push(n);
+
+        let wide = ThreadPool::new(wide_t);
+        let narrow = ThreadPool::new(narrow_t);
+        let mut c = Tensor::zeros(&[m, n]);
+        {
+            let (ad, bpr) = (a.data(), &bp);
+            let shards = split_cols_mut(c.data_mut(), m, n, &bounds);
+            let mut wide_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            let mut narrow_jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for (idx, (mut rows, (lo, hi))) in shards.into_iter().zip(all).enumerate() {
+                let job: ScopedJob<'_> = Box::new(move || {
+                    gemm_packed_into_cols(ad, bpr, &mut rows, k, lo, hi);
+                });
+                if idx < n_wide_chunks {
+                    wide_jobs.push(job);
+                } else {
+                    narrow_jobs.push(job);
+                }
+            }
+            scoped_run_on(vec![(&wide, wide_jobs), (&narrow, narrow_jobs)]);
+        }
+        if c.data() != want.data() {
+            return Err(format!(
+                "not bitwise: m={m} k={k} n={n} cut={n_wide} pools={wide_t}/{narrow_t}"
+            ));
         }
         Ok(())
     });
