@@ -32,6 +32,8 @@
 //!    never reorders accumulation — so token streams stay bitwise
 //!    identical (`tests/retune_parity.rs`).
 
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::exec::parallel::{chunk_bounds, panel_chunk_bounds};
@@ -221,6 +223,133 @@ pub fn fit_rms_rel_err(unit: &UnitSpec, probes: &[ProbeSample]) -> f64 {
 }
 
 // ---------------------------------------------------------------------------
+// Learned plans (persisted online re-tuning outcomes)
+// ---------------------------------------------------------------------------
+
+/// Power-of-two batch bucket a learned plan is keyed under (occupancy 3 and
+/// 4 share a weight-stream amortization regime; 1 and 8 do not).
+pub fn batch_bucket(batch: usize) -> usize {
+    batch.max(1).next_power_of_two()
+}
+
+/// Power-of-two context bucket (floored at 32 — below that the dense span
+/// is too small for the split to matter, so tiny contexts share a bucket).
+pub fn ctx_bucket(ctx: usize) -> usize {
+    ctx.max(32).next_power_of_two()
+}
+
+/// One converged serving plan, as the scheduler's online re-tuners left it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LearnedPlan {
+    /// Converged wide-unit column ratio.
+    pub linear_ratio: f64,
+    /// Converged dynamic context-split fraction (`None`: the bucket ran the
+    /// bitwise affinity attention path).
+    pub dense_split: Option<f64>,
+    /// Tree width the width re-tuner converged to (may differ from the
+    /// bucket's *configured* width key).
+    pub width: usize,
+    /// Retune epochs that contributed to this entry.
+    pub epochs: u64,
+}
+
+/// Learned plans keyed by (configured width, batch bucket, ctx bucket) —
+/// the durable output of online re-tuning, persisted inside the host
+/// profile so a restart warm-starts from the last converged plan instead
+/// of the offline fit.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LearnedPlans {
+    entries: BTreeMap<(usize, usize, usize), LearnedPlan>,
+}
+
+impl LearnedPlans {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The learned plan for a serving shape, if one was persisted under the
+    /// same (width, batch-bucket, ctx-bucket) key.
+    pub fn get(&self, width: usize, batch: usize, ctx: usize) -> Option<&LearnedPlan> {
+        self.entries.get(&(width, batch_bucket(batch), ctx_bucket(ctx)))
+    }
+
+    /// Insert/replace the bucket's plan. Non-finite or out-of-range values
+    /// are rejected outright (returns false) — a poisoned measurement must
+    /// never become a durable NaN that later arms a broken plan.
+    pub fn upsert(&mut self, width: usize, batch: usize, ctx: usize, plan: LearnedPlan) -> bool {
+        if !Self::valid(&plan) || width == 0 {
+            return false;
+        }
+        self.entries.insert((width, batch_bucket(batch), ctx_bucket(ctx)), plan);
+        true
+    }
+
+    fn valid(p: &LearnedPlan) -> bool {
+        let ratio_ok = p.linear_ratio.is_finite() && (0.0..=1.0).contains(&p.linear_ratio);
+        let split_ok = match p.dense_split {
+            Some(f) => f.is_finite() && (0.0..=1.0).contains(&f),
+            None => true,
+        };
+        ratio_ok && split_ok && p.width >= 1
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&(usize, usize, usize), &LearnedPlan)> {
+        self.entries.iter()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::arr(
+            self.entries
+                .iter()
+                .map(|(&(w, b, c), p)| {
+                    Json::obj(vec![
+                        ("width", Json::num(w as f64)),
+                        ("batch", Json::num(b as f64)),
+                        ("ctx", Json::num(c as f64)),
+                        ("linear_ratio", Json::num(p.linear_ratio)),
+                        ("dense_split", p.dense_split.map(Json::num).unwrap_or(Json::Null)),
+                        ("chosen_width", Json::num(p.width as f64)),
+                        ("epochs", Json::num(p.epochs as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// Lenient load: entries with missing keys, non-finite values, or
+    /// out-of-range ratios/splits (hand edits, older writers) are skipped
+    /// rather than failing the whole profile.
+    pub fn from_json(j: &Json) -> Self {
+        let mut out = Self::new();
+        let Some(arr) = j.as_arr() else { return out };
+        for e in arr {
+            let Some(width) = e.get("width").and_then(Json::as_usize) else { continue };
+            let Some(batch) = e.get("batch").and_then(Json::as_usize) else { continue };
+            let Some(ctx) = e.get("ctx").and_then(Json::as_usize) else { continue };
+            let Some(linear_ratio) = e.get("linear_ratio").and_then(Json::as_f64) else {
+                continue;
+            };
+            let plan = LearnedPlan {
+                linear_ratio,
+                dense_split: e.get("dense_split").and_then(Json::as_f64),
+                width: e.get("chosen_width").and_then(Json::as_usize).unwrap_or(width),
+                epochs: e.get("epochs").and_then(Json::as_usize).unwrap_or(0) as u64,
+            };
+            out.upsert(width, batch, ctx, plan);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Host profile
 // ---------------------------------------------------------------------------
 
@@ -245,6 +374,10 @@ pub struct HostProfile {
     /// dynamic-split tune has run; persisted so `--parallel hcmp:dyn`
     /// can start from the tuned cut without re-tuning.
     pub dyn_split: Option<f64>,
+    /// Converged online-retune outcomes per (width, batch, ctx) bucket —
+    /// written back by the scheduler at retune epochs, warm-started from
+    /// on the next process start.
+    pub learned: LearnedPlans,
 }
 
 impl HostProfile {
@@ -333,6 +466,27 @@ impl HostProfile {
         crate::arca::contention::tune_plan(&self.simulator(), cfg, width, ctx, pattern, true)
     }
 
+    /// The dense context-split fraction to arm for a serving shape: the
+    /// learned bucket's converged cut when one was persisted under the
+    /// same (width, batch, ctx) bucket, otherwise a fresh `tune_plan_dyn`
+    /// on the calibrated simulator. The legacy bare `dyn_split` field is
+    /// deliberately *not* consulted here — it carries no record of the
+    /// (width, ctx) it was tuned under, and arming it blindly reuses a
+    /// stale cut across shapes.
+    pub fn dyn_split_for(
+        &self,
+        cfg: &ModelConfig,
+        width: usize,
+        batch: usize,
+        ctx: usize,
+        pattern: Option<&CooPattern>,
+    ) -> f64 {
+        if let Some(split) = self.learned.get(width, batch, ctx).and_then(|lp| lp.dense_split) {
+            return split;
+        }
+        self.tune_plan_dyn(cfg, width, ctx, pattern).0.attention.dense_gpu_frac
+    }
+
     // ---- persistence (the host-profile JSON, see README) ------------------
 
     pub fn to_json(&self) -> Json {
@@ -353,6 +507,7 @@ impl HostProfile {
                 "dyn_split",
                 self.dyn_split.map(Json::num).unwrap_or(Json::Null),
             ),
+            ("learned", self.learned.to_json()),
         ])
     }
 
@@ -391,12 +546,20 @@ impl HostProfile {
                 .get("dyn_split")
                 .and_then(Json::as_f64)
                 .filter(|f| f.is_finite() && (0.0..=1.0).contains(f)),
+            // optional (older profiles predate learned plans)
+            learned: j.get("learned").map(LearnedPlans::from_json).unwrap_or_default(),
         })
     }
 
+    /// Atomic save: write-to-temp + rename, so a crash mid-write (or the
+    /// scheduler's debounced write-back racing a reader) never leaves a
+    /// truncated profile on disk.
     pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
-        std::fs::write(path, self.to_json().dump())
-            .map_err(|e| anyhow::anyhow!("writing host profile {}: {e}", path.display()))
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json().dump())
+            .map_err(|e| anyhow::anyhow!("writing host profile {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| anyhow::anyhow!("renaming host profile into {}: {e}", path.display()))
     }
 
     pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
@@ -670,6 +833,7 @@ pub fn calibrate(
         fit_rms_rel_err: fit_err,
         probes,
         dyn_split: None,
+        learned: LearnedPlans::new(),
     }
 }
 
@@ -805,6 +969,16 @@ pub struct WidthRetuner {
     pub lo_frac: f64,
     /// Width swaps decided so far.
     pub retunes: u64,
+    /// Calibrated step-time pricer: when set, a width step *up* is only
+    /// taken if priced throughput (acceptance / predicted step seconds)
+    /// improves too — acceptance saturating alone is not enough if the
+    /// wider tree's verification cost erases the gain on this host.
+    pricer: Option<StepPricer>,
+    /// Serving shape the pricer evaluates candidates at.
+    batch_hint: usize,
+    ctx_hint: usize,
+    /// Step-ups the pricer refused (acceptance said up, throughput said no).
+    pub refused_step_ups: u64,
 }
 
 impl WidthRetuner {
@@ -839,7 +1013,26 @@ impl WidthRetuner {
             hi_frac: 0.92,
             lo_frac: 0.55,
             retunes: 0,
+            pricer: None,
+            batch_hint: 1,
+            ctx_hint: 64,
+            refused_step_ups: 0,
         }
+    }
+
+    /// Arm a step-time pricer evaluated at the given serving shape.
+    pub fn with_pricer(mut self, pricer: StepPricer, batch: usize, ctx: usize) -> Self {
+        self.pricer = Some(pricer);
+        self.batch_hint = batch.max(1);
+        self.ctx_hint = ctx.max(1);
+        self
+    }
+
+    /// Update the serving shape the pricer evaluates candidates at (the
+    /// pricer's cache is keyed by bucket, so hint churn is cheap).
+    pub fn set_load_hint(&mut self, batch: usize, ctx: usize) {
+        self.batch_hint = batch.max(1);
+        self.ctx_hint = ctx.max(1);
     }
 
     pub fn width(&self) -> usize {
@@ -850,9 +1043,29 @@ impl WidthRetuner {
         &self.candidates[self.cur].1
     }
 
-    /// Feed one verification step's accepted length. Returns the new tree
-    /// for future admissions when a window closes on a width change.
+    /// Feed one verification step's accepted length, assuming it was
+    /// produced by the currently-armed tree. Prefer
+    /// [`observe_acceptance_from`] when the producing width is known.
     pub fn observe_acceptance(&mut self, accepted_len: f64) -> Option<&VerificationTree> {
+        let w = self.width();
+        self.observe_acceptance_from(w, accepted_len)
+    }
+
+    /// Feed one verification step's accepted length, tagged with the tree
+    /// width that produced it. Samples from a different width — in-flight
+    /// sequences admitted under the *previous* tree after a swap — are
+    /// dropped rather than mixed into the new tree's window, so the first
+    /// window after a swap cannot compare stale acceptance against the new
+    /// expectation and oscillate. Returns the new tree for future
+    /// admissions when a window closes on a width change.
+    pub fn observe_acceptance_from(
+        &mut self,
+        from_width: usize,
+        accepted_len: f64,
+    ) -> Option<&VerificationTree> {
+        if from_width != self.width() || !accepted_len.is_finite() {
+            return None;
+        }
         self.acc_sum += accepted_len;
         self.acc_n += 1;
         if self.acc_n < self.window {
@@ -864,8 +1077,16 @@ impl WidthRetuner {
         let expected = self.candidates[self.cur].2.max(1e-9);
         let realized = mean / expected;
         let next = if realized >= self.hi_frac && self.cur + 1 < self.candidates.len() {
-            self.cur + 1
+            let next = self.cur + 1;
+            if !self.priced_improves(self.cur, next, realized) {
+                self.refused_step_ups += 1;
+                return None;
+            }
+            next
         } else if realized < self.lo_frac && self.cur > 0 {
+            // down-steps stay ungated: the gate exists to stop paying more
+            // step time for marginal acceptance, and shrinking the tree
+            // never increases verification cost
             self.cur - 1
         } else {
             return None;
@@ -873,6 +1094,176 @@ impl WidthRetuner {
         self.cur = next;
         self.retunes += 1;
         Some(&self.candidates[self.cur].1)
+    }
+
+    /// Priced throughput comparison between two candidates: realized
+    /// acceptance scales each tree's *expected* acceptance, divided by the
+    /// pricer's predicted step seconds at the current serving shape. No
+    /// pricer means acceptance evidence alone decides (the pre-pricing
+    /// behavior).
+    fn priced_improves(&mut self, cur: usize, next: usize, realized: f64) -> bool {
+        let Some(mut pr) = self.pricer.take() else { return true };
+        let scale = realized.clamp(0.0, 1.0);
+        let score = |pr: &mut StepPricer, c: &(usize, VerificationTree, f64)| -> f64 {
+            let secs = pr.step_secs(&c.1, self.batch_hint, self.ctx_hint);
+            if secs.is_finite() { scale * c.2 / secs } else { 0.0 }
+        };
+        let s_cur = score(&mut pr, &self.candidates[cur]);
+        let s_next = score(&mut pr, &self.candidates[next]);
+        self.pricer = Some(pr);
+        s_next > s_cur
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Step pricer (calibrated candidate-width step-time oracle)
+// ---------------------------------------------------------------------------
+
+/// Prices a candidate verification tree's decode-step seconds on this
+/// host's calibrated simulator, memoized per (width, batch-bucket,
+/// ctx-bucket) — `tune_plan` per candidate is a hill-climb over simulated
+/// schedules, far too slow to run inside every retune epoch uncached.
+#[derive(Clone, Debug)]
+pub struct StepPricer {
+    kind: PricerKind,
+    cache: HashMap<(usize, usize, usize), f64>,
+}
+
+#[derive(Clone, Debug)]
+enum PricerKind {
+    /// Tune a partition plan for the candidate on the calibrated
+    /// simulator, then price the batched step under that plan.
+    Host { profile: Box<HostProfile>, cfg: ModelConfig },
+    /// Fixed width → seconds function (tests / synthetic curves).
+    Fixed(fn(usize) -> f64),
+}
+
+impl StepPricer {
+    pub fn host(profile: HostProfile, cfg: ModelConfig) -> Self {
+        Self { kind: PricerKind::Host { profile: Box::new(profile), cfg }, cache: HashMap::new() }
+    }
+
+    pub fn fixed(f: fn(usize) -> f64) -> Self {
+        Self { kind: PricerKind::Fixed(f), cache: HashMap::new() }
+    }
+
+    /// Predicted seconds for one batched decode step verifying `tree`, at
+    /// the bucketized serving shape. Degenerate predictions (non-finite or
+    /// non-positive) price as `INFINITY` so the caller's throughput score
+    /// treats the candidate as unaffordable rather than infinitely fast.
+    pub fn step_secs(&mut self, tree: &VerificationTree, batch: usize, ctx: usize) -> f64 {
+        let key = (tree.width(), batch_bucket(batch), ctx_bucket(ctx));
+        if let Some(&secs) = self.cache.get(&key) {
+            return secs;
+        }
+        let secs = match &self.kind {
+            PricerKind::Fixed(f) => f(key.0),
+            PricerKind::Host { profile, cfg } => {
+                let (w, batch_b, ctx_b) = key;
+                let pattern = (w > 1).then(|| tree.pattern());
+                let (plan, t1) = profile.tune_plan(cfg, w, ctx_b, pattern.as_ref());
+                if batch_b <= 1 {
+                    t1
+                } else {
+                    profile
+                        .simulator()
+                        .run(&build_batched_step(
+                            cfg,
+                            EngineKind::Ghidorah,
+                            batch_b,
+                            w,
+                            ctx_b,
+                            pattern.as_ref(),
+                            &plan,
+                        ))
+                        .total
+                }
+            }
+        };
+        let secs = if secs.is_finite() && secs > 0.0 { secs } else { f64::INFINITY };
+        self.cache.insert(key, secs);
+        secs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan persistence (scheduler → host-profile write-back)
+// ---------------------------------------------------------------------------
+
+/// The scheduler's write-back half of learned-plan persistence: at each
+/// applied retune, `note` records the converged knobs into the profile's
+/// `LearnedPlans` bucket and saves to disk — debounced so a burst of
+/// retune epochs costs one write, atomic-renamed so readers never see a
+/// torn profile. `flush` forces the final state out at shutdown.
+#[derive(Debug)]
+pub struct PlanPersist {
+    profile: HostProfile,
+    path: PathBuf,
+    width: usize,
+    batch: usize,
+    ctx: usize,
+    debounce_s: f64,
+    last_save: Option<Instant>,
+    dirty: bool,
+    /// Retune epochs recorded since construction.
+    pub epochs: u64,
+}
+
+impl PlanPersist {
+    pub fn new(profile: HostProfile, path: PathBuf, width: usize, batch: usize, ctx: usize) -> Self {
+        Self {
+            profile,
+            path,
+            width,
+            batch,
+            ctx,
+            debounce_s: 2.0,
+            last_save: None,
+            dirty: false,
+            epochs: 0,
+        }
+    }
+
+    /// Override the save debounce (tests use 0 to observe every write).
+    pub fn with_debounce(mut self, secs: f64) -> Self {
+        self.debounce_s = secs.max(0.0);
+        self
+    }
+
+    /// Record a retune epoch's converged knobs into the serving bucket and
+    /// save if the debounce window has elapsed. Invalid values are
+    /// rejected by `LearnedPlans::upsert` and leave the entry untouched.
+    pub fn note(&mut self, linear_ratio: f64, dense_split: Option<f64>, chosen_width: usize) {
+        self.epochs += 1;
+        let plan = LearnedPlan {
+            linear_ratio,
+            dense_split,
+            width: chosen_width,
+            epochs: self.epochs,
+        };
+        if !self.profile.learned.upsert(self.width, self.batch, self.ctx, plan) {
+            return;
+        }
+        self.dirty = true;
+        let due = match self.last_save {
+            None => true,
+            Some(t) => t.elapsed().as_secs_f64() >= self.debounce_s,
+        };
+        if due {
+            self.flush();
+        }
+    }
+
+    /// Force any pending learned-plan state to disk.
+    pub fn flush(&mut self) {
+        if !self.dirty {
+            return;
+        }
+        match self.profile.save(&self.path) {
+            Ok(()) => self.dirty = false,
+            Err(e) => eprintln!("ghidorah: learned-plan write-back failed: {e}"),
+        }
+        self.last_save = Some(Instant::now());
     }
 }
 
@@ -968,6 +1359,22 @@ mod tests {
                 ProbeSample { width: 16, flops: 1e6, bytes: 2e5, secs: 1e-4, sparse: false },
             )],
             dyn_split: Some(0.65),
+            learned: {
+                let mut l = LearnedPlans::new();
+                l.upsert(
+                    8,
+                    4,
+                    64,
+                    LearnedPlan { linear_ratio: 0.62, dense_split: Some(0.7), width: 8, epochs: 3 },
+                );
+                l.upsert(
+                    16,
+                    1,
+                    128,
+                    LearnedPlan { linear_ratio: 0.55, dense_split: None, width: 8, epochs: 1 },
+                );
+                l
+            },
         };
         let text = p.to_json().dump();
         let back = HostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -979,13 +1386,16 @@ mod tests {
         assert_eq!(back.probes, p.probes);
         assert!((back.fit_rms_rel_err - 0.07).abs() < 1e-12);
         assert_eq!(back.dyn_split, Some(0.65));
-        // profiles predating the split (no key) parse with None
+        assert_eq!(back.learned, p.learned);
+        // profiles predating the split / learned table (no keys) parse empty
         let legacy = {
             let mut q = p.clone();
             q.dyn_split = None;
+            q.learned = LearnedPlans::new();
             HostProfile::from_json(&Json::parse(&q.to_json().dump()).unwrap()).unwrap()
         };
         assert_eq!(legacy.dyn_split, None);
+        assert!(legacy.learned.is_empty());
     }
 
     #[test]
@@ -1004,6 +1414,7 @@ mod tests {
             fit_rms_rel_err: 0.0,
             probes: vec![],
             dyn_split: None,
+            learned: LearnedPlans::new(),
         };
         let cfg = ModelConfig::tiny();
         let tree = VerificationTree::chain(8);
@@ -1100,5 +1511,205 @@ mod tests {
         }
         assert_eq!(stepped, Some(8), "wasted verification must narrow the tree");
         assert_eq!(r.retunes, 2);
+    }
+
+    #[test]
+    fn priced_retuner_refuses_uneconomic_step_up() {
+        let heads = vec![vec![0.6, 0.2, 0.1], vec![0.45, 0.15, 0.05], vec![0.3, 0.1, 0.04]];
+        // superlinear step-time curve: the wider tree's verification cost
+        // grows faster than its acceptance — the priced gate must refuse
+        // even though acceptance evidence alone says widen
+        let mut r = WidthRetuner::new(&heads, &[4, 8, 16], 8)
+            .with_pricer(StepPricer::fixed(|w| (w * w) as f64 * 1e-3), 1, 64);
+        let expected = r.candidates[r.cur].2;
+        for _ in 0..r.window {
+            assert!(r.observe_acceptance(expected).is_none());
+        }
+        assert_eq!(r.width(), 8, "priced gate must refuse the uneconomic widening");
+        assert_eq!(r.refused_step_ups, 1);
+        assert_eq!(r.retunes, 0);
+        // flat step-time curve: wider tree is free, the same acceptance
+        // evidence now steps up
+        let mut r = WidthRetuner::new(&heads, &[4, 8, 16], 8)
+            .with_pricer(StepPricer::fixed(|_| 1e-3), 1, 64);
+        let expected = r.candidates[r.cur].2;
+        let mut stepped = None;
+        for _ in 0..r.window {
+            stepped = r.observe_acceptance(expected).map(|t| t.width());
+        }
+        assert_eq!(stepped, Some(16));
+        assert_eq!(r.refused_step_ups, 0);
+        // down-steps stay ungated regardless of the pricer
+        let mut stepped = None;
+        for _ in 0..r.window {
+            stepped = r.observe_acceptance(0.5).map(|t| t.width());
+        }
+        assert_eq!(stepped, Some(8), "narrowing must never be price-gated");
+    }
+
+    #[test]
+    fn width_retuner_drops_stale_width_samples() {
+        // regression for post-swap window pollution: after a swap, samples
+        // produced by the *old* tree must not be scored against the new
+        // tree's expectation (they'd read as under-delivery and oscillate
+        // the width straight back down)
+        let heads = vec![vec![0.6, 0.2, 0.1], vec![0.45, 0.15, 0.05], vec![0.3, 0.1, 0.04]];
+        let mut r = WidthRetuner::new(&heads, &[4, 8, 16], 8);
+        let old_width = r.width();
+        let expected = r.candidates[r.cur].2;
+        let mut stepped = None;
+        for _ in 0..r.window {
+            stepped = r.observe_acceptance_from(old_width, expected).map(|t| t.width());
+        }
+        assert_eq!(stepped, Some(16));
+        // a flood of stale old-tree samples (low in the new tree's terms)
+        // must be dropped, not trigger a down-step
+        for _ in 0..4 * r.window {
+            assert!(
+                r.observe_acceptance_from(old_width, 1.0).is_none(),
+                "stale-width samples must not close a window"
+            );
+        }
+        assert_eq!(r.width(), 16, "stale samples must not oscillate the width back");
+        assert_eq!(r.retunes, 1);
+        // non-finite samples are dropped too
+        assert!(r.observe_acceptance_from(16, f64::NAN).is_none());
+        // current-width samples still drive decisions normally
+        let mut stepped = None;
+        for _ in 0..r.window {
+            stepped = r.observe_acceptance_from(16, 0.8).map(|t| t.width());
+        }
+        assert_eq!(stepped, Some(8), "live-width under-delivery still narrows");
+    }
+
+    #[test]
+    fn learned_plans_roundtrip_and_reject_poison() {
+        let mut l = LearnedPlans::new();
+        assert!(l.is_empty());
+        assert!(l.upsert(
+            8,
+            3, // buckets to 4
+            100, // buckets to 128
+            LearnedPlan { linear_ratio: 0.6, dense_split: Some(0.7), width: 8, epochs: 2 },
+        ));
+        assert_eq!(l.len(), 1);
+        // lookup bucketizes the same way: batch 4 / ctx 128 hits
+        assert!(l.get(8, 4, 128).is_some());
+        assert!(l.get(8, 3, 100).is_some());
+        // different width / batch bucket / ctx bucket: unknown bucket is None
+        assert!(l.get(16, 4, 128).is_none());
+        assert!(l.get(8, 8, 128).is_none());
+        assert!(l.get(8, 4, 256).is_none());
+        // poisoned values are rejected on upsert...
+        assert!(!l.upsert(
+            8,
+            1,
+            64,
+            LearnedPlan { linear_ratio: f64::NAN, dense_split: None, width: 8, epochs: 1 },
+        ));
+        assert!(!l.upsert(
+            8,
+            1,
+            64,
+            LearnedPlan { linear_ratio: 0.5, dense_split: Some(f64::INFINITY), width: 8, epochs: 1 },
+        ));
+        assert!(!l.upsert(
+            8,
+            1,
+            64,
+            LearnedPlan { linear_ratio: 1.5, dense_split: None, width: 8, epochs: 1 },
+        ));
+        assert_eq!(l.len(), 1);
+        // ...and skipped on load (hand-edited JSON)
+        let text = r#"[
+            {"width": 8, "batch": 4, "ctx": 64, "linear_ratio": 0.55, "dense_split": null, "chosen_width": 8, "epochs": 1},
+            {"width": 8, "batch": 8, "ctx": 64, "linear_ratio": 9.0, "dense_split": null, "chosen_width": 8, "epochs": 1},
+            {"width": 0, "batch": 1, "ctx": 64, "linear_ratio": 0.5, "dense_split": null, "chosen_width": 8, "epochs": 1},
+            {"batch": 1, "ctx": 64, "linear_ratio": 0.5}
+        ]"#;
+        let loaded = LearnedPlans::from_json(&Json::parse(text).unwrap());
+        assert_eq!(loaded.len(), 1, "only the valid entry survives load");
+        assert!((loaded.get(8, 4, 64).unwrap().linear_ratio - 0.55).abs() < 1e-12);
+        // round-trip is exact
+        let back = LearnedPlans::from_json(&l.to_json());
+        assert_eq!(back, l);
+        // empty round-trips empty
+        assert_eq!(LearnedPlans::from_json(&LearnedPlans::new().to_json()), LearnedPlans::new());
+    }
+
+    #[test]
+    fn stale_dyn_split_is_not_reused_across_buckets() {
+        // regression: the bare persisted `dyn_split` used to be armed
+        // unconditionally, even for a (width, ctx) it was never tuned
+        // under. `dyn_split_for` only returns a persisted cut when the
+        // learned bucket matches; a mismatched shape re-tunes fresh.
+        let mut p = HostProfile {
+            solo: host_unit(),
+            wide: UnitSpec { name: "wide".into(), ..host_unit() },
+            narrow: UnitSpec { name: "narrow".into(), peak_flops: 3.0e9, ..host_unit() },
+            mem: UnifiedMemory { dram_bw: 12.0e9, contention_penalty: 0.1, sync_latency: 0.0 },
+            wide_threads: 4,
+            narrow_threads: 2,
+            fit_rms_rel_err: 0.0,
+            probes: vec![],
+            dyn_split: Some(0.123456), // stale un-bucketed legacy value
+            learned: LearnedPlans::new(),
+        };
+        let sentinel = 0.654321;
+        p.learned.upsert(
+            8,
+            1,
+            64,
+            LearnedPlan { linear_ratio: 0.6, dense_split: Some(sentinel), width: 8, epochs: 1 },
+        );
+        let cfg = ModelConfig::tiny();
+        let tree = VerificationTree::chain(8);
+        let pat = tree.pattern();
+        // matching bucket: the learned cut is armed verbatim
+        let hit = p.dyn_split_for(&cfg, 8, 1, 64, Some(&pat));
+        assert!((hit - sentinel).abs() < 1e-12, "matching bucket must arm the learned cut");
+        // mismatched width: re-tunes on the simulator — in particular it
+        // must NOT surface the legacy dyn_split or the other bucket's cut
+        let tree16 = VerificationTree::chain(16);
+        let pat16 = tree16.pattern();
+        let miss = p.dyn_split_for(&cfg, 16, 1, 64, Some(&pat16));
+        assert!((miss - 0.123456).abs() > 1e-9, "stale legacy dyn_split must not be reused");
+        assert!((miss - sentinel).abs() > 1e-9, "other bucket's cut must not leak");
+        let (tuned, _) = p.tune_plan_dyn(&cfg, 16, 64, Some(&pat16));
+        assert!(
+            (miss - tuned.attention.dense_gpu_frac).abs() < 1e-12,
+            "mismatched bucket must fall back to a fresh tune"
+        );
+    }
+
+    #[test]
+    fn plan_persist_debounces_and_survives_reload() {
+        let p = HostProfile {
+            solo: host_unit(),
+            wide: UnitSpec { name: "wide".into(), ..host_unit() },
+            narrow: UnitSpec { name: "narrow".into(), peak_flops: 3.0e9, ..host_unit() },
+            mem: UnifiedMemory { dram_bw: 12.0e9, contention_penalty: 0.1, sync_latency: 0.0 },
+            wide_threads: 4,
+            narrow_threads: 2,
+            fit_rms_rel_err: 0.0,
+            probes: vec![],
+            dyn_split: None,
+            learned: LearnedPlans::new(),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("ghidorah-plan-persist-{}.json", std::process::id()));
+        let mut ps = PlanPersist::new(p, path.clone(), 8, 4, 64).with_debounce(0.0);
+        ps.note(0.61, Some(0.7), 8);
+        ps.note(0.58, Some(0.7), 8);
+        ps.note(f64::NAN, None, 8); // poisoned epoch: rejected, entry untouched
+        ps.flush();
+        let back = HostProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lp = back.learned.get(8, 4, 64).expect("persisted bucket must reload");
+        assert!((lp.linear_ratio - 0.58).abs() < 1e-12, "last valid epoch wins");
+        assert_eq!(lp.dense_split, Some(0.7));
+        assert_eq!(lp.width, 8);
+        assert_eq!(lp.epochs, 2);
+        assert_eq!(ps.epochs, 3, "epoch counter counts notes, valid or not");
     }
 }

@@ -25,8 +25,9 @@ pub mod strategy;
 pub mod tree_builder;
 
 pub use autotune::{
-    calibrate as calibrate_host, fit_unit, CalibrationConfig, HostProfile, OnlineRetuner,
-    ProbeSample, RetuneConfig, WidthRetuner,
+    batch_bucket, calibrate as calibrate_host, ctx_bucket, fit_unit, CalibrationConfig,
+    HostProfile, LearnedPlan, LearnedPlans, OnlineRetuner, PlanPersist, ProbeSample, RetuneConfig,
+    StepPricer, WidthRetuner,
 };
 pub use calibrate::{fit_profile, DatasetTarget, PAPER_TABLE1};
 pub use profiler::{profile, profile_host, ProfileRow};

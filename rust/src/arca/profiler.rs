@@ -54,11 +54,7 @@ pub fn profile(
             plan,
         });
     }
-    let best = rows
-        .iter()
-        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
-        .expect("at least one width")
-        .clone();
+    let best = best_row(&rows).clone();
     let tree = build_tree(&drafter.heads, best.width);
 
     // dynamic partitioning buckets: re-tune the attention split per context
@@ -78,6 +74,18 @@ pub fn profile(
         partition: PartitionStrategy { buckets },
         rows,
     }
+}
+
+/// Highest-throughput row, ignoring non-finite throughputs (a degenerate
+/// simulator rate can price a width at NaN/inf; `partial_cmp(..).unwrap()`
+/// here used to abort the whole profiling pass on the first NaN). If every
+/// row is non-finite the first row wins — callers always pass ≥ 1 width.
+fn best_row(rows: &[ProfileRow]) -> &ProfileRow {
+    rows.iter()
+        .filter(|r| r.throughput.is_finite())
+        .max_by(|a, b| a.throughput.total_cmp(&b.throughput))
+        .or_else(|| rows.first())
+        .expect("at least one width")
 }
 
 /// The ARCA profiling pass priced on a *host-calibrated* simulator instead
@@ -119,6 +127,25 @@ pub fn baseline_step_time(
 mod tests {
     use super::*;
     use crate::arca::calibrate::{fit_profile, PAPER_TABLE1};
+
+    #[test]
+    fn best_row_ignores_non_finite_throughput() {
+        // regression: a NaN throughput (degenerate simulator rate) used to
+        // abort width selection via partial_cmp().unwrap()
+        let row = |width: usize, throughput: f64| ProfileRow {
+            width,
+            expected_acceptance: 1.0,
+            step_time: 1.0,
+            throughput,
+            plan: PartitionPlan::hcmp(0.5),
+        };
+        let rows =
+            vec![row(4, f64::NAN), row(8, 3.0), row(16, f64::INFINITY), row(32, f64::NEG_INFINITY)];
+        assert_eq!(best_row(&rows).width, 8, "only the finite row is eligible");
+        // all-non-finite degenerates to the first row instead of panicking
+        let rows = vec![row(4, f64::NAN), row(8, f64::INFINITY)];
+        assert_eq!(best_row(&rows).width, 4);
+    }
 
     #[test]
     fn ghidorah_sweet_spot_is_16() {

@@ -33,6 +33,43 @@ impl PartitionStrategy {
         }
         &self.buckets.last().expect("non-empty strategy").1
     }
+
+    /// Build a deployable per-context strategy from a host profile's
+    /// persisted learned plans: the (width, batch) slice of the learned
+    /// table becomes ascending ctx buckets, each arming the converged
+    /// ratio/split the scheduler actually measured on this host. `None`
+    /// when no learned bucket matches the slice — callers fall back to the
+    /// offline-profiled strategy.
+    pub fn from_learned(
+        learned: &crate::arca::autotune::LearnedPlans,
+        width: usize,
+        batch: usize,
+    ) -> Option<Self> {
+        let batch_b = crate::arca::autotune::batch_bucket(batch);
+        let mut buckets: Vec<(usize, PartitionPlan)> = learned
+            .iter()
+            .filter(|(&(w, b, _), _)| w == width && b == batch_b)
+            .map(|(&(_, _, ctx_b), lp)| {
+                let attention = match lp.dense_split {
+                    Some(f) => AttentionSplit { dense_gpu_frac: f, sparse_cpu_frac: 1.0 },
+                    None => AttentionSplit::static_affinity(),
+                };
+                (
+                    ctx_b,
+                    PartitionPlan {
+                        linear_ratio: lp.linear_ratio,
+                        attention,
+                        megatron_style: false,
+                    },
+                )
+            })
+            .collect();
+        if buckets.is_empty() {
+            return None;
+        }
+        buckets.sort_by_key(|(bound, _)| *bound);
+        Some(Self { buckets })
+    }
 }
 
 // ---- JSON ------------------------------------------------------------------
@@ -167,6 +204,39 @@ mod tests {
         assert_eq!(p.plan_for(512).linear_ratio, 0.4);
         assert_eq!(p.plan_for(513).linear_ratio, 0.5);
         assert_eq!(p.plan_for(99999).linear_ratio, 0.6);
+    }
+
+    #[test]
+    fn from_learned_slices_buckets_by_width_and_batch() {
+        use crate::arca::autotune::{LearnedPlan, LearnedPlans};
+
+        let mut l = LearnedPlans::new();
+        l.upsert(
+            16,
+            8,
+            64,
+            LearnedPlan { linear_ratio: 0.4, dense_split: None, width: 16, epochs: 1 },
+        );
+        l.upsert(
+            16,
+            8,
+            512,
+            LearnedPlan { linear_ratio: 0.6, dense_split: Some(0.7), width: 16, epochs: 1 },
+        );
+        l.upsert(
+            8, // other width: excluded from the slice
+            8,
+            64,
+            LearnedPlan { linear_ratio: 0.9, dense_split: None, width: 8, epochs: 1 },
+        );
+        let s = PartitionStrategy::from_learned(&l, 16, 8).expect("slice has buckets");
+        assert_eq!(s.buckets.len(), 2, "only the (16, batch 8) slice qualifies");
+        assert_eq!(s.plan_for(64).linear_ratio, 0.4);
+        assert_eq!(s.plan_for(64).attention, AttentionSplit::static_affinity());
+        assert_eq!(s.plan_for(300).linear_ratio, 0.6);
+        assert_eq!(s.plan_for(300).attention.dense_gpu_frac, 0.7);
+        assert_eq!(s.plan_for(99999).linear_ratio, 0.6, "past the last bucket: last plan");
+        assert!(PartitionStrategy::from_learned(&l, 32, 8).is_none(), "unknown slice is None");
     }
 
     #[test]

@@ -439,6 +439,11 @@ pub struct MeasuredOutcome {
     pub residual_cal: Option<f64>,
     /// Affinity-vs-dynamic attention comparison at the long-context point.
     pub dyn_compare: DynCompare,
+    /// Calibrated priced-throughput ranking over the swept widths —
+    /// expected acceptance / predicted step seconds on the host profile's
+    /// simulator, the score the priced `WidthRetuner` gates step-ups with.
+    /// `None` without a host profile.
+    pub priced_widths: Option<Vec<(usize, f64)>>,
 }
 
 /// Measured decode-step wall-clock, sequential engine vs HCMP-parallel
@@ -691,7 +696,34 @@ pub fn measured_sweep(
         dyn_compare.t_dyn_ms,
         dyn_compare.dyn_x,
     ));
-    MeasuredOutcome { text, rows, balance, residual_uncal, residual_cal, dyn_compare }
+
+    // priced width ranking on the calibrated simulator — the same
+    // acceptance/step-time score the online width retuner gates with
+    let priced_widths = host.map(|h| {
+        let mut pricer = crate::arca::StepPricer::host(h.clone(), cfg.clone());
+        let batch = batches[0].max(1);
+        widths
+            .iter()
+            .map(|&w| {
+                let tree = build_tree(&heads, w);
+                let acc = tree.expected_acceptance(&heads);
+                let secs = pricer.step_secs(&tree, batch, ctx_short);
+                (w, if secs.is_finite() { acc / secs } else { 0.0 })
+            })
+            .collect::<Vec<(usize, f64)>>()
+    });
+    if let Some(pw) = &priced_widths {
+        let ranking = pw
+            .iter()
+            .map(|(w, thr)| format!("w{w} {thr:.1} tok/s"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        text.push_str(&format!(
+            "priced width ranking (calibrated acceptance/step-time at B={}): {ranking}\n",
+            batches[0].max(1)
+        ));
+    }
+    MeasuredOutcome { text, rows, balance, residual_uncal, residual_cal, dyn_compare, priced_widths }
 }
 
 #[cfg(test)]
@@ -889,6 +921,14 @@ mod tests {
         let rc = out.residual_cal.expect("calibrated residual");
         assert!(rc.is_finite() && rc >= 0.0);
         assert!(out.text.contains("calibrated"));
+        // the priced ranking (the width retuner's step-up gate score) must
+        // cover every swept width with a finite, positive throughput
+        let pw = out.priced_widths.as_ref().expect("host profile prices the widths");
+        assert_eq!(pw.len(), 4, "one score per swept width");
+        for &(w, thr) in pw {
+            assert!(thr.is_finite() && thr > 0.0, "width {w} priced at {thr}");
+        }
+        assert!(out.text.contains("priced width ranking"));
     }
 
     /// The acceptance-criteria smoke bench: on a multi-core host in release

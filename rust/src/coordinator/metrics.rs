@@ -52,6 +52,11 @@ struct Inner {
     /// deployed plan; `stats` reports |predicted - measured| as the
     /// prediction residual.
     predicted_balance: Option<f64>,
+    /// True when the startup plan was armed from a persisted learned
+    /// bucket (`HostProfile.learned`) rather than the offline fit.
+    warm_start: bool,
+    /// Number of learned buckets in the loaded host profile.
+    learned_buckets: u64,
 }
 
 /// Thread-safe metrics sink shared by the scheduler and the server.
@@ -129,6 +134,15 @@ impl Metrics {
         m.current_ratio = ratio;
         m.current_width = Some(width as u64);
         m.predicted_balance = predicted_balance;
+    }
+
+    /// Record whether the startup plan was warm-started from a persisted
+    /// learned bucket, and how many learned buckets the profile carried
+    /// (called once at engine startup).
+    pub fn set_warm_start(&self, warm: bool, buckets: usize) {
+        let mut m = self.inner.lock().unwrap();
+        m.warm_start = warm;
+        m.learned_buckets = buckets as u64;
     }
 
     /// Record the dynamic context-split fraction deployed at startup
@@ -255,6 +269,8 @@ impl Metrics {
             ("current_dense_split", opt(m.current_dense_split)),
             ("predicted_balance", opt(m.predicted_balance)),
             ("prediction_residual", residual),
+            ("warm_start", Json::Bool(m.warm_start)),
+            ("learned_buckets", Json::num(m.learned_buckets as f64)),
         ])
     }
 }
@@ -331,6 +347,18 @@ mod tests {
         assert_eq!(j.get("current_width").unwrap().as_usize(), Some(8));
         let res = j.get("prediction_residual").unwrap().as_f64().unwrap();
         assert!((res - (0.9f64 - 0.6).abs()).abs() < 1e-9, "residual {res}");
+    }
+
+    #[test]
+    fn warm_start_surface_defaults_false_and_tracks_buckets() {
+        let m = Metrics::new();
+        let j = m.snapshot();
+        assert_eq!(j.get("warm_start").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("learned_buckets").unwrap().as_usize(), Some(0));
+        m.set_warm_start(true, 3);
+        let j = m.snapshot();
+        assert_eq!(j.get("warm_start").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("learned_buckets").unwrap().as_usize(), Some(3));
     }
 
     #[test]

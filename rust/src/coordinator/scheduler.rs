@@ -28,7 +28,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::arca::autotune::{OnlineRetuner, WidthRetuner};
+use crate::arca::autotune::{OnlineRetuner, PlanPersist, WidthRetuner};
 use crate::model::kv_cache::BatchKvCache;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::model::ModelConfig;
@@ -64,6 +64,16 @@ pub struct RetunePolicy {
     /// width swaps — rather than the startup plan.
     #[allow(clippy::type_complexity)]
     pub predict_balance: Option<Box<dyn Fn(f64, usize) -> f64 + Send>>,
+    /// Learned-plan write-back: at every applied retune the worker records
+    /// the converged (ratio, split, width) into the host profile's
+    /// `LearnedPlans` bucket and saves it (debounced, atomic rename), so
+    /// the next process warm-starts from the last learned plan.
+    pub persist: Option<PlanPersist>,
+    /// True when the startup plan was armed from a persisted learned
+    /// bucket rather than the offline fit — surfaced in `stats`.
+    pub warm_start: bool,
+    /// Number of learned buckets in the loaded host profile.
+    pub learned_buckets: usize,
 }
 
 impl RetunePolicy {
@@ -240,6 +250,9 @@ impl Scheduler {
                     tree.width(),
                     policy.predicted_balance,
                 );
+                metrics_w.set_warm_start(policy.warm_start, policy.learned_buckets);
+                // learned-plan write-back channel (None: nothing persists)
+                let mut persist = policy.persist.take();
                 let mut queue: VecDeque<Job> = VecDeque::new();
                 let mut inflight: HashMap<u64, InFlight> = HashMap::new();
                 let mut next_seq: u64 = 0;
@@ -335,6 +348,11 @@ impl Scheduler {
                                             .set_predicted_balance(f(new_ratio, tree.width())),
                                         None => metrics_w.clear_predicted_balance(),
                                     }
+                                    if let (Some(ps), Some(r)) =
+                                        (persist.as_mut(), engine.current_ratio())
+                                    {
+                                        ps.note(r, engine.dense_split(), tree.width());
+                                    }
                                 }
                             }
                         }
@@ -350,6 +368,11 @@ impl Scheduler {
                                     // split move it no longer describes the
                                     // executing merge tree
                                     metrics_w.clear_predicted_balance();
+                                    if let (Some(ps), Some(r)) =
+                                        (persist.as_mut(), engine.current_ratio())
+                                    {
+                                        ps.note(r, engine.dense_split(), tree.width());
+                                    }
                                 }
                             }
                         }
@@ -385,27 +408,25 @@ impl Scheduler {
                             // width re-tuning: finished requests report how
                             // much of the tree's expected acceptance the
                             // drafter realized — fed per verification step
-                            // (a 50-step request is 50 samples, not 1), and
-                            // only from lanes admitted under the *current*
-                            // candidate so a swap's stragglers don't get
-                            // scored against the wrong expectation. A
-                            // decided swap only affects future admissions
-                            // (in-flight lanes keep their tree — parity is
-                            // tree-independent).
+                            // (a 50-step request is 50 samples, not 1),
+                            // tagged with the lane's admitted width so the
+                            // retuner itself drops a swap's stragglers
+                            // instead of scoring them against the wrong
+                            // expectation. A decided swap only affects
+                            // future admissions (in-flight lanes keep their
+                            // tree — parity is tree-independent).
                             if let Some(wr) = policy.width.as_mut() {
                                 let mut new_tree: Option<VerificationTree> = None;
                                 'feed: for f in &finished {
                                     let Some(fl) = inflight.get(&f.id) else { continue };
-                                    if !fl.speculative
-                                        || f.outcome.steps == 0
-                                        || fl.admitted_width != wr.width()
-                                    {
+                                    if !fl.speculative || f.outcome.steps == 0 {
                                         continue;
                                     }
                                     for _ in 0..f.outcome.steps {
-                                        if let Some(t) =
-                                            wr.observe_acceptance(f.outcome.mean_acceptance())
-                                        {
+                                        if let Some(t) = wr.observe_acceptance_from(
+                                            fl.admitted_width,
+                                            f.outcome.mean_acceptance(),
+                                        ) {
                                             new_tree = Some(t.clone());
                                             break 'feed;
                                         }
@@ -424,6 +445,11 @@ impl Scheduler {
                                             .set_predicted_balance(f(rt.ratio(), tree.width())),
                                         (Some(_), None) => metrics_w.clear_predicted_balance(),
                                         _ => {}
+                                    }
+                                    if let (Some(ps), Some(r)) =
+                                        (persist.as_mut(), engine.current_ratio())
+                                    {
+                                        ps.note(r, engine.dense_split(), tree.width());
                                     }
                                 }
                             }
@@ -448,6 +474,11 @@ impl Scheduler {
                             }
                         }
                     }
+                }
+                // shutdown: force any pending learned-plan state to disk
+                // (debounce may have swallowed the final epochs)
+                if let Some(ps) = persist.as_mut() {
+                    ps.flush();
                 }
             })
             .expect("spawn engine worker");
@@ -689,6 +720,93 @@ mod tests {
             stats.get("retune_count").unwrap().as_usize().unwrap() as u64,
             s.metrics.retunes()
         );
+    }
+
+    #[test]
+    fn tuned_scheduler_persists_learned_plan() {
+        use crate::arca::autotune::{
+            HostProfile, LearnedPlans, OnlineRetuner, PlanPersist, RetuneConfig,
+        };
+        use crate::exec::ExecEngine;
+        use crate::hcmp::unit::{UnifiedMemory, UnitSpec};
+        use crate::hcmp::PartitionPlan;
+
+        let unit = |name: &str| UnitSpec {
+            name: name.into(),
+            peak_flops: 8.0e9,
+            solo_bw: 6.0e9,
+            launch_overhead: 20e-6,
+            wave: 1,
+            sweet_spot: 16,
+            decay_per_doubling: 0.7,
+            sparse_eff: 0.25,
+        };
+        let profile = HostProfile {
+            solo: unit("solo"),
+            wide: unit("wide"),
+            narrow: unit("narrow"),
+            mem: UnifiedMemory { dram_bw: 12.0e9, contention_penalty: 0.1, sync_latency: 0.0 },
+            wide_threads: 2,
+            narrow_threads: 2,
+            fit_rms_rel_err: 0.0,
+            probes: vec![],
+            dyn_split: None,
+            learned: LearnedPlans::new(),
+        };
+        let path = std::env::temp_dir()
+            .join(format!("ghidorah-sched-persist-{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+
+        // lopsided plan + aggressive retuner (as in the lossless test), but
+        // with the write-back channel armed: every applied retune must land
+        // in the profile's learned bucket on disk
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        let start_ratio = 0.95;
+        let tree = VerificationTree::chain(3);
+        let policy = RetunePolicy {
+            ratio: Some(OnlineRetuner::new(
+                start_ratio,
+                RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
+            )),
+            persist: Some(
+                PlanPersist::new(profile, path.clone(), tree.width(), DEFAULT_MAX_BATCH, 32)
+                    .with_debounce(0.0),
+            ),
+            ..Default::default()
+        };
+        let s = Scheduler::spawn_tuned(
+            move || ExecEngine::parallel(model, &PartitionPlan::hcmp(start_ratio), 2, 2),
+            tree,
+            8,
+            4,
+            DEFAULT_MAX_BATCH,
+            policy,
+        );
+        for id in 1..=3 {
+            s.submit(Request {
+                id,
+                prompt: "persist me".into(),
+                max_new: 12,
+                engine: EngineChoice::Ghidorah,
+            })
+            .unwrap();
+        }
+        assert!(s.metrics.retunes() > 0, "lopsided plan never re-tuned");
+        let stats = s.metrics.snapshot();
+        assert_eq!(stats.get("warm_start").unwrap().as_bool(), Some(false));
+        drop(s); // shutdown flushes the write-back
+
+        let back = HostProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let lp = back.learned.get(3, DEFAULT_MAX_BATCH, 32).expect("learned bucket persisted");
+        assert!(
+            lp.linear_ratio < start_ratio,
+            "persisted ratio must be the converged one: {}",
+            lp.linear_ratio
+        );
+        assert_eq!(lp.width, 3);
+        assert!(lp.epochs > 0);
     }
 
     #[test]

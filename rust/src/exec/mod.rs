@@ -302,6 +302,10 @@ impl BatchedStepExecutor for ExecEngine {
     fn dense_split(&self) -> Option<f64> {
         ExecEngine::dense_split(self)
     }
+
+    fn current_ratio(&self) -> Option<f64> {
+        ExecEngine::current_ratio(self)
+    }
 }
 
 #[cfg(test)]

@@ -11,7 +11,8 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use ghidorah::arca::autotune::{
-    CalibrationConfig, HostProfile, OnlineRetuner, RetuneConfig, WidthRetuner,
+    CalibrationConfig, HostProfile, LearnedPlan, OnlineRetuner, PlanPersist, RetuneConfig,
+    StepPricer, WidthRetuner,
 };
 use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
 use ghidorah::arca::profiler::profile;
@@ -58,7 +59,7 @@ USAGE:
                     [--autotune] [--host-profile PATH]
   ghidorah generate --prompt TEXT [--max-new 32] [--engine ghidorah|sequential] [--width 16]
                     [--parallel hcmp[:RATIO]|hcmp:dyn[:RATIO]|seq] [--wide N] [--narrow M]
-                    [--autotune] [--host-profile PATH]
+                    [--autotune] [--host-profile PATH] [--stats]
   ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256] [--host-profile PATH]
   ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|kernels|all
                     (measured also takes [--autotune] [--host-profile PATH];
@@ -82,7 +83,11 @@ USAGE:
   calibrated model when none was given explicitly, and keeps re-tuning the
   split online from measured step timings while serving. --host-profile
   PATH persists the calibration (with --autotune) or loads a previously
-  saved one (without).",
+  saved one (without); either way the scheduler writes converged plans
+  back into the profile's `learned` table at retune epochs, and later
+  runs warm-start from the matching (width, batch, ctx) bucket (`stats`
+  reports warm_start / learned_buckets). --stats prints the metrics
+  snapshot after a generate.",
         ghidorah::version()
     );
     std::process::exit(2);
@@ -245,32 +250,58 @@ fn apply_autotune(
     cfg: &ModelConfig,
     tree: &VerificationTree,
     heads: &[Vec<f64>],
+    max_batch: usize,
 ) -> (ParallelMode, RetunePolicy) {
     let (Some(p), ParallelMode::Hcmp { plan, explicit, dynamic }) = (profile, mode) else {
         return (mode, RetunePolicy::none());
     };
     let pattern = tree.pattern();
     let ctx = 64usize.min(cfg.max_ctx / 2); // representative serving context
-    let plan = if explicit {
-        plan
+    // warm start: a learned bucket persisted under the same serving shape
+    // supersedes the offline fit (a user-pinned ratio still wins)
+    let learned = if explicit { None } else { p.learned.get(tree.width(), max_batch, ctx) };
+    let (plan, initial_width) = if explicit {
+        (plan, tree.width())
+    } else if let Some(lp) = learned {
+        let plan = if dynamic {
+            let frac = lp.dense_split.unwrap_or_else(|| {
+                p.dyn_split_for(cfg, tree.width(), max_batch, ctx, Some(&pattern))
+            });
+            PartitionPlan::hcmp_dyn(lp.linear_ratio, frac)
+        } else {
+            PartitionPlan::hcmp(lp.linear_ratio)
+        };
+        eprintln!(
+            "ghidorah: warm start from learned bucket (w {} b {} ctx {}): ratio {:.2}, width {}",
+            tree.width(),
+            max_batch,
+            ctx,
+            lp.linear_ratio,
+            lp.width
+        );
+        (plan, lp.width)
     } else if dynamic {
-        // hill-climb ratio AND attention split on the calibrated simulator;
-        // a split already persisted in the profile wins over a fresh climb
+        // hill-climb ratio AND attention split on the calibrated simulator.
+        // Only a *bucket-matched* learned split is ever reused (above); the
+        // legacy bare `dyn_split` field carries no (width, ctx) record, so
+        // arming it here would reuse a cut tuned under a different shape.
         let (tuned, _t) = p.tune_plan_dyn(cfg, tree.width(), ctx, Some(&pattern));
-        let frac = p.dyn_split.unwrap_or(tuned.attention.dense_gpu_frac);
         eprintln!(
             "ghidorah: autotune initial ratio {:.2}, context split {:.2} \
              (host-calibrated tune_plan_dyn)",
-            tuned.linear_ratio, frac
+            tuned.linear_ratio, tuned.attention.dense_gpu_frac
         );
-        PartitionPlan::hcmp_dyn(tuned.linear_ratio, frac)
+        (
+            PartitionPlan::hcmp_dyn(tuned.linear_ratio, tuned.attention.dense_gpu_frac),
+            tree.width(),
+        )
     } else {
         let (tuned, _t) = p.tune_plan(cfg, tree.width(), ctx, Some(&pattern));
         eprintln!(
             "ghidorah: autotune initial ratio {:.2} (host-calibrated tune_plan)",
             tuned.linear_ratio
         );
-        PartitionPlan::hcmp(tuned.linear_ratio)
+        (PartitionPlan::hcmp(tuned.linear_ratio), tree.width())
     };
     let predicted = p.predict_balance(cfg, 1, tree.width(), ctx, Some(&pattern), &plan);
     // width candidates: the serving width itself always qualifies (so the
@@ -293,7 +324,15 @@ fn apply_autotune(
         dense_split: dynamic.then(|| {
             OnlineRetuner::new(plan.attention.dense_gpu_frac, RetuneConfig::dense_split())
         }),
-        width: Some(WidthRetuner::new(heads, &widths, tree.width())),
+        // width steps up only when throughput priced on the calibrated
+        // simulator improves, not merely when acceptance saturates
+        width: Some(
+            WidthRetuner::new(heads, &widths, initial_width).with_pricer(
+                StepPricer::host(p.clone(), cfg.clone()),
+                max_batch,
+                ctx,
+            ),
+        ),
         predicted_balance: Some(predicted),
         predict_balance: Some(Box::new(move |r, w| {
             let t = build_tree(&heads2, w);
@@ -306,6 +345,9 @@ fn apply_autotune(
                 &PartitionPlan::hcmp(r),
             )
         })),
+        persist: None, // armed by autotune_wiring when a profile path exists
+        warm_start: learned.is_some(),
+        learned_buckets: p.learned.len(),
     };
     (ParallelMode::Hcmp { plan, explicit: true, dynamic }, policy)
 }
@@ -320,6 +362,7 @@ fn autotune_wiring(
     cfg: &ModelConfig,
     tree: &VerificationTree,
     heads: &[Vec<f64>],
+    max_batch: usize,
 ) -> anyhow::Result<(ParallelMode, usize, usize, RetunePolicy, Vec<(usize, f64)>)> {
     let (wide, narrow) = pool_sizes(flags)?;
     let profile = match mode {
@@ -327,28 +370,47 @@ fn autotune_wiring(
         ParallelMode::Seq => None,
     };
     let (wide, narrow) = reconcile_pools(flags, profile.as_ref(), wide, narrow);
-    // dyn engines: tune the context-split fraction on the calibrated
-    // simulator once and expose it in the host profile, so a saved profile
-    // reproduces the same split on later runs
-    let mut profile = profile;
-    if let (Some(p), ParallelMode::Hcmp { dynamic: true, .. }) = (profile.as_mut(), mode) {
-        if p.dyn_split.is_none() {
-            let pattern = tree.pattern();
-            let ctx = 64usize.min(cfg.max_ctx / 2);
-            let (tuned, _t) = p.tune_plan_dyn(cfg, tree.width(), ctx, Some(&pattern));
-            p.dyn_split = Some(tuned.attention.dense_gpu_frac);
-            if flags.get("autotune").is_some() {
-                if let Some(path) = flags.get("host-profile") {
-                    p.save(&PathBuf::from(path))?;
-                    eprintln!(
-                        "ghidorah: host profile updated with context split {:.2}",
-                        tuned.attention.dense_gpu_frac
-                    );
-                }
-            }
+    let (mode, mut policy) = apply_autotune(mode, profile.as_ref(), cfg, tree, heads, max_batch);
+    // learned-plan write-back: whenever a profile path is given, arm the
+    // scheduler's persistence channel. The profile is seeded with the armed
+    // plan under this serving shape's bucket (first run only — an existing
+    // learned bucket is never clobbered by a startup seed), then updated at
+    // every applied retune epoch and saved debounced + atomic-renamed.
+    if let (Some(p), ParallelMode::Hcmp { plan, dynamic, .. }, Some(path)) =
+        (&profile, mode, flags.get("host-profile"))
+    {
+        let ctx = 64usize.min(cfg.max_ctx / 2);
+        let mut prof = p.clone();
+        if prof.learned.get(tree.width(), max_batch, ctx).is_none() {
+            prof.learned.upsert(
+                tree.width(),
+                max_batch,
+                ctx,
+                LearnedPlan {
+                    linear_ratio: plan.linear_ratio,
+                    dense_split: dynamic.then_some(plan.attention.dense_gpu_frac),
+                    width: policy.width.as_ref().map(|w| w.width()).unwrap_or(tree.width()),
+                    epochs: 0,
+                },
+            );
         }
+        if dynamic && prof.dyn_split.is_none() {
+            // legacy mirror: older readers of the profile still see a split
+            prof.dyn_split = Some(plan.attention.dense_gpu_frac);
+        }
+        let path = PathBuf::from(path);
+        if flags.get("autotune").is_some() {
+            prof.save(&path)?;
+            eprintln!(
+                "ghidorah: host profile seeded with the armed plan \
+                 (bucket w {} b {} ctx {})",
+                tree.width(),
+                max_batch,
+                ctx
+            );
+        }
+        policy.persist = Some(PlanPersist::new(prof, path, tree.width(), max_batch, ctx));
     }
-    let (mode, policy) = apply_autotune(mode, profile.as_ref(), cfg, tree, heads);
     let fracs = match (&profile, mode) {
         (Some(p), ParallelMode::Hcmp { .. }) => decode_width_fracs(p, cfg, tree.width()),
         _ => Vec::new(),
@@ -493,7 +555,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let sched = match parallel {
         Some(mode) => {
             let (mode, wide, narrow, policy, fracs) =
-                autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
+                autotune_wiring(flags, mode, &cfg, &tree, &heads, max_batch)?;
             Scheduler::spawn_tuned(
                 rust_engine_factory(cfg, mode, wide, narrow, fracs),
                 tree,
@@ -538,8 +600,14 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
     let (tree, heads) = serving_tree(&cfg, width);
     let sched = match parallel {
         Some(mode) => {
-            let (mode, wide, narrow, policy, fracs) =
-                autotune_wiring(flags, mode, &cfg, &tree, &heads)?;
+            let (mode, wide, narrow, policy, fracs) = autotune_wiring(
+                flags,
+                mode,
+                &cfg,
+                &tree,
+                &heads,
+                ghidorah::coordinator::DEFAULT_MAX_BATCH,
+            )?;
             Scheduler::spawn_tuned(
                 rust_engine_factory(cfg, mode, wide, narrow, fracs),
                 tree,
@@ -568,6 +636,12 @@ fn cmd_generate(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
         resp.latency_s * 1e3,
         resp.tokens as f64 / resp.latency_s
     );
+    // --stats: dump the metrics snapshot (warm_start, retune counters, ...)
+    // after the generation — the non-serving counterpart of the server's
+    // `stats` command, used by the CI warm-start smoke
+    if flags.get("stats").is_some() {
+        println!("stats: {}", sched.metrics.snapshot().dump());
+    }
     Ok(())
 }
 

@@ -88,6 +88,13 @@ pub trait BatchedStepExecutor {
     fn dense_split(&self) -> Option<f64> {
         None
     }
+
+    /// The executable linear column ratio currently armed, if the engine
+    /// runs a partition plan; `None` on sequential engines. The scheduler's
+    /// learned-plan write-back reads this to persist the converged ratio.
+    fn current_ratio(&self) -> Option<f64> {
+        None
+    }
 }
 
 impl BatchedStepExecutor for RustModel {

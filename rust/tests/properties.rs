@@ -788,6 +788,63 @@ fn prop_unit_fit_recovers_synthetic_tiers() {
     });
 }
 
+/// The persisted learned-plan table round-trips through its JSON form
+/// exactly for arbitrary valid contents (empty tables included), and the
+/// lenient loader drops injected poison entries — width 0, out-of-range
+/// ratios, missing or non-numeric fields — without disturbing the valid
+/// ones. This is the on-disk contract the warm-start path depends on.
+#[test]
+fn prop_learned_plans_json_roundtrip() {
+    use ghidorah::arca::{LearnedPlan, LearnedPlans};
+
+    check(
+        "learned-plans-roundtrip",
+        120,
+        |r| {
+            let mut l = LearnedPlans::new();
+            for _ in 0..r.below(6) {
+                let width = 1usize << r.range(1, 7); // 2..64
+                let plan = LearnedPlan {
+                    linear_ratio: r.f64(),
+                    dense_split: if r.chance(0.5) { Some(r.f64()) } else { None },
+                    width,
+                    epochs: r.below(1000) as u64,
+                };
+                assert!(l.upsert(width, r.range(1, 17), r.range(1, 513), plan));
+            }
+            l
+        },
+        |l| {
+            let dumped = l.to_json().dump();
+            let parsed = Json::parse(&dumped).map_err(|e| format!("parse failed: {e}"))?;
+            let back = LearnedPlans::from_json(&parsed);
+            if &back != l {
+                return Err(format!("roundtrip mismatch: {dumped}"));
+            }
+            // splice poison entries into the serialized array: the lenient
+            // loader must skip every one and recover the original table
+            let poison = concat!(
+                r#"{"width":0,"batch":1,"ctx":64,"linear_ratio":0.5,"chosen_width":1,"epochs":1},"#,
+                r#"{"width":4,"batch":1,"ctx":64,"linear_ratio":1.5,"chosen_width":4,"epochs":1},"#,
+                r#"{"width":4,"batch":1,"ctx":64,"linear_ratio":-0.1,"chosen_width":4,"epochs":1},"#,
+                r#"{"width":4,"batch":1,"ctx":64,"linear_ratio":"nan","chosen_width":4},"#,
+                r#"{"batch":1,"ctx":64,"linear_ratio":0.5}"#
+            );
+            let poisoned = if dumped == "[]" {
+                format!("[{poison}]")
+            } else {
+                format!("[{poison},{}", &dumped[1..])
+            };
+            let parsed = Json::parse(&poisoned).map_err(|e| format!("poisoned parse: {e}"))?;
+            let back = LearnedPlans::from_json(&parsed);
+            if &back != l {
+                return Err(format!("poison entries leaked into the table: {poisoned}"));
+            }
+            Ok(())
+        },
+    );
+}
+
 /// A simulator built from fitted host units prices wider steps at no less
 /// than narrower ones (monotone `SimReport` step time in width), so the
 /// predicted parallel ratio it yields is well-behaved across the width

@@ -1,0 +1,153 @@
+//! Warm-start integration: a tuned scheduler converges, persists its
+//! learned plan through the debounced write-back, and a restarted process
+//! arms exactly the persisted plan — with token streams identical to a
+//! cold engine, since ratio swaps only move shard bounds (lossless).
+
+use ghidorah::arca::{HostProfile, LearnedPlans, OnlineRetuner, PlanPersist, RetuneConfig};
+use ghidorah::coordinator::{EngineChoice, Request, RetunePolicy, Scheduler, DEFAULT_MAX_BATCH};
+use ghidorah::exec::ExecEngine;
+use ghidorah::hcmp::unit::{UnifiedMemory, UnitSpec};
+use ghidorah::hcmp::PartitionPlan;
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::weights::Weights;
+use ghidorah::model::ModelConfig;
+use ghidorah::spec::tree::VerificationTree;
+
+fn synthetic_profile() -> HostProfile {
+    let unit = |name: &str| UnitSpec {
+        name: name.into(),
+        peak_flops: 8.0e9,
+        solo_bw: 6.0e9,
+        launch_overhead: 20e-6,
+        wave: 1,
+        sweet_spot: 16,
+        decay_per_doubling: 0.7,
+        sparse_eff: 0.25,
+    };
+    HostProfile {
+        solo: unit("solo"),
+        wide: unit("wide"),
+        narrow: unit("narrow"),
+        mem: UnifiedMemory { dram_bw: 12.0e9, contention_penalty: 0.1, sync_latency: 0.0 },
+        wide_threads: 2,
+        narrow_threads: 2,
+        fit_rms_rel_err: 0.0,
+        probes: vec![],
+        dyn_split: None,
+        learned: LearnedPlans::new(),
+    }
+}
+
+fn submit_all(s: &Scheduler, n: u64, prompt: &str, max_new: usize) -> Vec<String> {
+    (1..=n)
+        .map(|id| {
+            s.submit(Request {
+                id,
+                prompt: prompt.into(),
+                max_new,
+                engine: EngineChoice::Ghidorah,
+            })
+            .unwrap()
+            .text
+        })
+        .collect()
+}
+
+#[test]
+fn converged_plan_survives_restart_and_warm_starts() {
+    let path = std::env::temp_dir()
+        .join(format!("ghidorah-warm-start-{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+
+    // golden reference: the static serial engine
+    let cfg = ModelConfig::tiny();
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let reference = Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4);
+    let want = submit_all(&reference, 3, "warm start", 12);
+
+    // first life: a deliberately lopsided plan plus an aggressive retuner,
+    // with the learned-plan write-back armed (no debounce, so every epoch
+    // reaches disk)
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let start_ratio = 0.95;
+    let tree = VerificationTree::chain(3);
+    let policy = RetunePolicy {
+        ratio: Some(OnlineRetuner::new(
+            start_ratio,
+            RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
+        )),
+        persist: Some(
+            PlanPersist::new(synthetic_profile(), path.clone(), tree.width(), DEFAULT_MAX_BATCH, 32)
+                .with_debounce(0.0),
+        ),
+        ..Default::default()
+    };
+    let s = Scheduler::spawn_tuned(
+        move || ExecEngine::parallel(model, &PartitionPlan::hcmp(start_ratio), 2, 2),
+        tree.clone(),
+        8,
+        4,
+        DEFAULT_MAX_BATCH,
+        policy,
+    );
+    let first = submit_all(&s, 3, "warm start", 12);
+    assert_eq!(first, want, "tuned engine diverged from the golden trace");
+    assert!(s.metrics.retunes() > 0, "lopsided plan never re-tuned");
+    let stats = s.metrics.snapshot();
+    assert_eq!(stats.get("warm_start").unwrap().as_bool(), Some(false));
+    drop(s); // shutdown flushes any pending write-back
+
+    // restart: load the profile and warm-arm the persisted bucket, exactly
+    // as `apply_autotune` does when a matching bucket exists
+    let back = HostProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    let lp = back.learned.get(3, DEFAULT_MAX_BATCH, 32).expect("learned bucket persisted");
+    assert!(
+        lp.linear_ratio < start_ratio && lp.linear_ratio > 0.0,
+        "persisted ratio must be the converged one: {}",
+        lp.linear_ratio
+    );
+    assert_eq!(lp.width, 3);
+    assert!(lp.epochs > 0);
+    let armed = lp.linear_ratio;
+    let learned_buckets = back.learned.len();
+
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let policy = RetunePolicy {
+        ratio: Some(OnlineRetuner::new(
+            armed,
+            RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
+        )),
+        warm_start: true,
+        learned_buckets,
+        ..Default::default()
+    };
+    let s = Scheduler::spawn_tuned(
+        move || ExecEngine::parallel(model, &PartitionPlan::hcmp(armed), 2, 2),
+        tree,
+        8,
+        4,
+        DEFAULT_MAX_BATCH,
+        policy,
+    );
+    // the armed plan is surfaced at worker startup, before any step has
+    // run — what we read here is the warm-start arming, not a retune
+    let mut surfaced = None;
+    for _ in 0..400 {
+        if let Some(r) = s.metrics.current_ratio() {
+            surfaced = Some(r);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let surfaced = surfaced.expect("armed ratio surfaced");
+    assert!(
+        (surfaced - armed).abs() < 1e-12,
+        "warm-armed ratio {surfaced} != persisted {armed}"
+    );
+    let warm = submit_all(&s, 3, "warm start", 12);
+    assert_eq!(warm, want, "warm-started engine diverged from the golden trace");
+    let stats = s.metrics.snapshot();
+    assert_eq!(stats.get("warm_start").unwrap().as_bool(), Some(true));
+    assert!(stats.get("learned_buckets").unwrap().as_usize().unwrap() >= 1);
+}
