@@ -292,6 +292,13 @@ impl LearnedPlans {
         true
     }
 
+    /// Evict the bucket a load maps to (staleness eviction: a warm-started
+    /// plan that immediately churned is removed so a fresh tune can
+    /// re-learn the bucket from scratch).
+    pub fn remove(&mut self, width: usize, batch: usize, ctx: usize) -> Option<LearnedPlan> {
+        self.entries.remove(&(width, batch_bucket(batch), ctx_bucket(ctx)))
+    }
+
     fn valid(p: &LearnedPlan) -> bool {
         let ratio_ok = p.linear_ratio.is_finite() && (0.0..=1.0).contains(&p.linear_ratio);
         let split_ok = match p.dense_split {
@@ -350,6 +357,105 @@ impl LearnedPlans {
 }
 
 // ---------------------------------------------------------------------------
+// Profile fingerprint (what configuration a learned table was tuned under)
+// ---------------------------------------------------------------------------
+
+/// The serving configuration a host profile's learned table was tuned
+/// under. A learned plan is only meaningful on the configuration that
+/// produced it: re-arm a ratio converged on 4+2 pinned pools onto a 2+2
+/// unpinned build and the "warm start" is actively worse than the offline
+/// fit. The fingerprint pins pool sizes, the active cargo features that
+/// change execution (`core-pinning`, `pjrt`), the crate version, and a
+/// hash of the model config — warm start refuses the table on any
+/// mismatch instead of arming cross-config plans.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProfileFingerprint {
+    pub wide_threads: usize,
+    pub narrow_threads: usize,
+    /// `+`-joined active feature list (empty string: no relevant features).
+    pub features: String,
+    /// Crate version that wrote the table.
+    pub version: String,
+    /// FNV-1a hash of the model config (0 = unknown/wildcard — calibration
+    /// runs that never load a model stamp 0 and match any model).
+    pub model_hash: u64,
+}
+
+impl ProfileFingerprint {
+    /// The execution-relevant cargo features compiled into this binary.
+    pub fn active_features() -> String {
+        let mut fs: Vec<&str> = Vec::new();
+        if cfg!(feature = "core-pinning") {
+            fs.push("core-pinning");
+        }
+        if cfg!(feature = "pjrt") {
+            fs.push("pjrt");
+        }
+        fs.join("+")
+    }
+
+    /// The fingerprint of *this* process: the given pool sizes, the
+    /// compiled feature set, the crate version, and the model hash
+    /// (`ModelConfig::config_hash`, or 0 when no model is in play).
+    pub fn current(wide_threads: usize, narrow_threads: usize, model_hash: u64) -> Self {
+        Self {
+            wide_threads,
+            narrow_threads,
+            features: Self::active_features(),
+            version: crate::version().to_string(),
+            model_hash,
+        }
+    }
+
+    /// Whether a persisted fingerprint describes the same configuration as
+    /// the current one. `model_hash == 0` on either side is a wildcard
+    /// (profiles written by `bench measured` carry no model).
+    pub fn matches(&self, other: &Self) -> bool {
+        self.wide_threads == other.wide_threads
+            && self.narrow_threads == other.narrow_threads
+            && self.features == other.features
+            && self.version == other.version
+            && (self.model_hash == 0
+                || other.model_hash == 0
+                || self.model_hash == other.model_hash)
+    }
+
+    /// One-line human description for mismatch marker lines.
+    pub fn describe(&self) -> String {
+        format!(
+            "pools {}+{} features [{}] v{} model {:016x}",
+            self.wide_threads, self.narrow_threads, self.features, self.version, self.model_hash
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wide_threads", Json::num(self.wide_threads as f64)),
+            ("narrow_threads", Json::num(self.narrow_threads as f64)),
+            ("features", Json::str(&self.features)),
+            ("version", Json::str(&self.version)),
+            // u64 doesn't survive a round-trip through a JSON double, so
+            // the hash is persisted as fixed-width hex
+            ("model_hash", Json::str(&format!("{:016x}", self.model_hash))),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(Self {
+            wide_threads: j.get("wide_threads")?.as_usize()?,
+            narrow_threads: j.get("narrow_threads")?.as_usize()?,
+            features: j.get("features")?.as_str()?.to_string(),
+            version: j.get("version")?.as_str()?.to_string(),
+            model_hash: j
+                .get("model_hash")
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .unwrap_or(0),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Host profile
 // ---------------------------------------------------------------------------
 
@@ -378,6 +484,10 @@ pub struct HostProfile {
     /// written back by the scheduler at retune epochs, warm-started from
     /// on the next process start.
     pub learned: LearnedPlans,
+    /// The configuration the learned table was tuned under. `None` on
+    /// profiles written before fingerprinting existed — those are trusted
+    /// only while their learned table is empty.
+    pub fingerprint: Option<ProfileFingerprint>,
 }
 
 impl HostProfile {
@@ -487,6 +597,26 @@ impl HostProfile {
         self.tune_plan_dyn(cfg, width, ctx, pattern).0.attention.dense_gpu_frac
     }
 
+    // ---- fingerprint gating ------------------------------------------------
+
+    /// Whether the profile's learned table may be trusted under `current`'s
+    /// configuration. Unstamped profiles (pre-fingerprint writers) are
+    /// trusted only while their learned table is empty — an unstamped
+    /// *non-empty* table could have been tuned under anything.
+    pub fn fingerprint_matches(&self, current: &ProfileFingerprint) -> bool {
+        match &self.fingerprint {
+            Some(fp) => fp.matches(current),
+            None => self.learned.is_empty(),
+        }
+    }
+
+    /// The learned table, gated on the fingerprint: `None` means the table
+    /// must be ignored (mismatched configuration) and the caller should
+    /// fall back to the offline fit.
+    pub fn learned_if_current(&self, current: &ProfileFingerprint) -> Option<&LearnedPlans> {
+        self.fingerprint_matches(current).then_some(&self.learned)
+    }
+
     // ---- persistence (the host-profile JSON, see README) ------------------
 
     pub fn to_json(&self) -> Json {
@@ -508,6 +638,10 @@ impl HostProfile {
                 self.dyn_split.map(Json::num).unwrap_or(Json::Null),
             ),
             ("learned", self.learned.to_json()),
+            (
+                "fingerprint",
+                self.fingerprint.as_ref().map(ProfileFingerprint::to_json).unwrap_or(Json::Null),
+            ),
         ])
     }
 
@@ -548,6 +682,10 @@ impl HostProfile {
                 .filter(|f| f.is_finite() && (0.0..=1.0).contains(f)),
             // optional (older profiles predate learned plans)
             learned: j.get("learned").map(LearnedPlans::from_json).unwrap_or_default(),
+            // optional (older profiles predate fingerprinting); a partial
+            // hand-edited fingerprint parses as None, which gates a
+            // non-empty learned table off rather than arming it blindly
+            fingerprint: j.get("fingerprint").and_then(ProfileFingerprint::from_json),
         })
     }
 
@@ -834,6 +972,10 @@ pub fn calibrate(
         probes,
         dyn_split: None,
         learned: LearnedPlans::new(),
+        // stamped at calibration: any learned plans written later belong to
+        // these pools/features/version (model hash 0 = wildcard until a
+        // serving process refines it)
+        fingerprint: Some(ProfileFingerprint::current(wide_threads, narrow_threads, 0)),
     }
 }
 
@@ -1023,16 +1165,25 @@ impl WidthRetuner {
     /// Arm a step-time pricer evaluated at the given serving shape.
     pub fn with_pricer(mut self, pricer: StepPricer, batch: usize, ctx: usize) -> Self {
         self.pricer = Some(pricer);
-        self.batch_hint = batch.max(1);
-        self.ctx_hint = ctx.max(1);
+        self.set_load_hint(batch, ctx);
         self
     }
 
     /// Update the serving shape the pricer evaluates candidates at (the
-    /// pricer's cache is keyed by bucket, so hint churn is cheap).
+    /// pricer's cache is keyed by bucket, so hint churn is cheap). Hints
+    /// are stored *bucketized* with the same floors `LearnedPlans` keys by
+    /// (`batch_bucket`/`ctx_bucket`), so the shape the pricer evaluates
+    /// and the bucket a converged plan persists under can never disagree —
+    /// the raw-`max(1)` clamp used to leave a ctx hint of 0 priced at 1
+    /// while the persist bucket floored it at 32.
     pub fn set_load_hint(&mut self, batch: usize, ctx: usize) {
-        self.batch_hint = batch.max(1);
-        self.ctx_hint = ctx.max(1);
+        self.batch_hint = batch_bucket(batch);
+        self.ctx_hint = ctx_bucket(ctx);
+    }
+
+    /// The (batch, ctx) bucket the pricer currently evaluates at.
+    pub fn load_bucket(&self) -> (usize, usize) {
+        (self.batch_hint, self.ctx_hint)
     }
 
     pub fn width(&self) -> usize {
@@ -1192,31 +1343,34 @@ impl StepPricer {
 
 /// The scheduler's write-back half of learned-plan persistence: at each
 /// applied retune, `note` records the converged knobs into the profile's
-/// `LearnedPlans` bucket and saves to disk — debounced so a burst of
-/// retune epochs costs one write, atomic-renamed so readers never see a
-/// torn profile. `flush` forces the final state out at shutdown.
+/// `LearnedPlans` bucket for the load the retune was *measured at* and
+/// saves to disk — debounced so a burst of retune epochs costs one write,
+/// atomic-renamed so readers never see a torn profile. `flush` forces the
+/// final state out at shutdown.
+///
+/// Keying is per-note, not per-construction: a plan converged while
+/// serving B=1 short prompts lands in the (1, 32) bucket, not whatever
+/// max-batch shape the scheduler was configured for at startup (the
+/// construction-key variant durably mis-filed every plan).
 #[derive(Debug)]
 pub struct PlanPersist {
     profile: HostProfile,
     path: PathBuf,
     width: usize,
-    batch: usize,
-    ctx: usize,
     debounce_s: f64,
     last_save: Option<Instant>,
     dirty: bool,
-    /// Retune epochs recorded since construction.
+    /// Retune epochs *accepted* into the learned table since construction
+    /// (rejected/poisoned notes do not count — they never contributed).
     pub epochs: u64,
 }
 
 impl PlanPersist {
-    pub fn new(profile: HostProfile, path: PathBuf, width: usize, batch: usize, ctx: usize) -> Self {
+    pub fn new(profile: HostProfile, path: PathBuf, width: usize) -> Self {
         Self {
             profile,
             path,
             width,
-            batch,
-            ctx,
             debounce_s: 2.0,
             last_save: None,
             dirty: false,
@@ -1230,20 +1384,32 @@ impl PlanPersist {
         self
     }
 
-    /// Record a retune epoch's converged knobs into the serving bucket and
-    /// save if the debounce window has elapsed. Invalid values are
-    /// rejected by `LearnedPlans::upsert` and leave the entry untouched.
-    pub fn note(&mut self, linear_ratio: f64, dense_split: Option<f64>, chosen_width: usize) {
-        self.epochs += 1;
+    /// Record a retune epoch's converged knobs into the bucket of the load
+    /// it was measured at, and save if the debounce window has elapsed.
+    /// Invalid values are rejected by `LearnedPlans::upsert` and leave the
+    /// entry (and the accepted-epoch counter) untouched. The entry's
+    /// `epochs` continues from whatever the bucket already held, so a
+    /// re-learned plan after an eviction restarts its epoch count.
+    pub fn note(
+        &mut self,
+        linear_ratio: f64,
+        dense_split: Option<f64>,
+        chosen_width: usize,
+        batch: usize,
+        ctx: usize,
+    ) {
+        let prev =
+            self.profile.learned.get(self.width, batch, ctx).map(|lp| lp.epochs).unwrap_or(0);
         let plan = LearnedPlan {
             linear_ratio,
             dense_split,
             width: chosen_width,
-            epochs: self.epochs,
+            epochs: prev + 1,
         };
-        if !self.profile.learned.upsert(self.width, self.batch, self.ctx, plan) {
+        if !self.profile.learned.upsert(self.width, batch, ctx, plan) {
             return;
         }
+        self.epochs += 1;
         self.dirty = true;
         let due = match self.last_save {
             None => true,
@@ -1252,6 +1418,18 @@ impl PlanPersist {
         if due {
             self.flush();
         }
+    }
+
+    /// Evict the learned bucket a load maps to (staleness eviction) and
+    /// persist the removal immediately. Returns whether a plan was
+    /// actually removed.
+    pub fn evict(&mut self, batch: usize, ctx: usize) -> bool {
+        if self.profile.learned.remove(self.width, batch, ctx).is_none() {
+            return false;
+        }
+        self.dirty = true;
+        self.flush();
+        true
     }
 
     /// Force any pending learned-plan state to disk.
@@ -1264,6 +1442,82 @@ impl PlanPersist {
             Err(e) => eprintln!("ghidorah: learned-plan write-back failed: {e}"),
         }
         self.last_save = Some(Instant::now());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Warm-start staleness (did the armed plan survive contact with reality?)
+// ---------------------------------------------------------------------------
+
+/// Detects a stale warm start: a learned plan was armed at startup, and
+/// the ratio retuner's first applied nudges immediately walked far away
+/// from it — the persisted plan no longer describes this host/load, so the
+/// bucket should be evicted and re-tuned fresh rather than slowly dragged
+/// into place (and re-persisted with its stale epoch weight intact).
+///
+/// Pure decision logic on applied-retune ratios: the scheduler feeds every
+/// applied ratio within the probation window; `observe_applied` returns
+/// true exactly once, when the drift from the armed ratio crosses the
+/// threshold inside probation.
+#[derive(Clone, Debug)]
+pub struct WarmStartChurn {
+    /// The ratio the warm start armed.
+    pub armed_ratio: f64,
+    /// The serving load the plan was looked up at (the bucket to evict).
+    pub batch: usize,
+    pub ctx: usize,
+    /// Applied retunes still inside the probation window.
+    probation: u32,
+    /// Absolute ratio drift from the armed value that declares staleness.
+    threshold: f64,
+    fired: bool,
+}
+
+impl WarmStartChurn {
+    /// Applied retunes inspected after a warm start before the plan is
+    /// considered settled.
+    pub const PROBATION: u32 = 6;
+    /// Drift from the armed ratio that declares the plan stale. Well above
+    /// one retune epoch's max nudge (`RetuneConfig::max_step` = 0.06), so
+    /// ordinary convergence noise cannot fire it — sustained one-direction
+    /// drift within probation can.
+    pub const THRESHOLD: f64 = 0.10;
+
+    pub fn new(armed_ratio: f64, batch: usize, ctx: usize) -> Self {
+        Self {
+            armed_ratio,
+            batch,
+            ctx,
+            probation: Self::PROBATION,
+            threshold: Self::THRESHOLD,
+            fired: false,
+        }
+    }
+
+    /// Override the probation length / drift threshold (tests).
+    pub fn with_limits(mut self, probation: u32, threshold: f64) -> Self {
+        self.probation = probation;
+        self.threshold = threshold.max(0.0);
+        self
+    }
+
+    /// Feed one *applied* retune ratio. Returns true exactly once, when
+    /// the drift from the armed ratio crosses the threshold within the
+    /// probation window — the signal to evict and re-tune fresh.
+    pub fn observe_applied(&mut self, ratio: f64) -> bool {
+        if self.fired || self.probation == 0 || !ratio.is_finite() {
+            return false;
+        }
+        self.probation -= 1;
+        if (ratio - self.armed_ratio).abs() > self.threshold {
+            self.fired = true;
+            return true;
+        }
+        false
+    }
+
+    pub fn fired(&self) -> bool {
+        self.fired
     }
 }
 
@@ -1375,6 +1629,13 @@ mod tests {
                 );
                 l
             },
+            fingerprint: Some(ProfileFingerprint {
+                wide_threads: 4,
+                narrow_threads: 2,
+                features: "core-pinning".into(),
+                version: "0.1.0".into(),
+                model_hash: 0xdeadbeefcafe1234,
+            }),
         };
         let text = p.to_json().dump();
         let back = HostProfile::from_json(&Json::parse(&text).unwrap()).unwrap();
@@ -1387,15 +1648,19 @@ mod tests {
         assert!((back.fit_rms_rel_err - 0.07).abs() < 1e-12);
         assert_eq!(back.dyn_split, Some(0.65));
         assert_eq!(back.learned, p.learned);
-        // profiles predating the split / learned table (no keys) parse empty
+        assert_eq!(back.fingerprint, p.fingerprint, "fingerprint must round-trip (hex hash)");
+        // profiles predating the split / learned table / fingerprint
+        // (no keys) parse empty
         let legacy = {
             let mut q = p.clone();
             q.dyn_split = None;
             q.learned = LearnedPlans::new();
+            q.fingerprint = None;
             HostProfile::from_json(&Json::parse(&q.to_json().dump()).unwrap()).unwrap()
         };
         assert_eq!(legacy.dyn_split, None);
         assert!(legacy.learned.is_empty());
+        assert_eq!(legacy.fingerprint, None);
     }
 
     #[test]
@@ -1415,6 +1680,7 @@ mod tests {
             probes: vec![],
             dyn_split: None,
             learned: LearnedPlans::new(),
+            fingerprint: None,
         };
         let cfg = ModelConfig::tiny();
         let tree = VerificationTree::chain(8);
@@ -1654,6 +1920,7 @@ mod tests {
             probes: vec![],
             dyn_split: Some(0.123456), // stale un-bucketed legacy value
             learned: LearnedPlans::new(),
+            fingerprint: None,
         };
         let sentinel = 0.654321;
         p.learned.upsert(
@@ -1682,9 +1949,8 @@ mod tests {
         );
     }
 
-    #[test]
-    fn plan_persist_debounces_and_survives_reload() {
-        let p = HostProfile {
+    fn plain_profile() -> HostProfile {
+        HostProfile {
             solo: host_unit(),
             wide: UnitSpec { name: "wide".into(), ..host_unit() },
             narrow: UnitSpec { name: "narrow".into(), peak_flops: 3.0e9, ..host_unit() },
@@ -1695,13 +1961,18 @@ mod tests {
             probes: vec![],
             dyn_split: None,
             learned: LearnedPlans::new(),
-        };
+            fingerprint: None,
+        }
+    }
+
+    #[test]
+    fn plan_persist_debounces_and_survives_reload() {
         let path = std::env::temp_dir()
             .join(format!("ghidorah-plan-persist-{}.json", std::process::id()));
-        let mut ps = PlanPersist::new(p, path.clone(), 8, 4, 64).with_debounce(0.0);
-        ps.note(0.61, Some(0.7), 8);
-        ps.note(0.58, Some(0.7), 8);
-        ps.note(f64::NAN, None, 8); // poisoned epoch: rejected, entry untouched
+        let mut ps = PlanPersist::new(plain_profile(), path.clone(), 8).with_debounce(0.0);
+        ps.note(0.61, Some(0.7), 8, 4, 64);
+        ps.note(0.58, Some(0.7), 8, 4, 64);
+        ps.note(f64::NAN, None, 8, 4, 64); // poisoned epoch: rejected, entry untouched
         ps.flush();
         let back = HostProfile::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
@@ -1710,6 +1981,126 @@ mod tests {
         assert_eq!(lp.dense_split, Some(0.7));
         assert_eq!(lp.width, 8);
         assert_eq!(lp.epochs, 2);
-        assert_eq!(ps.epochs, 3, "epoch counter counts notes, valid or not");
+        assert_eq!(ps.epochs, 2, "epoch counter counts accepted upserts only");
+    }
+
+    #[test]
+    fn plan_persist_keys_by_live_load_and_evicts() {
+        let path = std::env::temp_dir()
+            .join(format!("ghidorah-plan-live-key-{}.json", std::process::id()));
+        let mut ps = PlanPersist::new(plain_profile(), path.clone(), 3).with_debounce(0.0);
+        // two epochs measured at B=1, short context; one at B=5, ctx 100 —
+        // they must land in *different* buckets, keyed by what was measured
+        ps.note(0.61, None, 3, 1, 20);
+        ps.note(0.58, None, 3, 1, 20);
+        ps.note(0.40, Some(0.7), 3, 5, 100);
+        ps.flush();
+        let back = HostProfile::load(&path).unwrap();
+        let low = back.learned.get(3, 1, 20).expect("B=1 plan in the B=1 bucket");
+        assert!((low.linear_ratio - 0.58).abs() < 1e-12);
+        assert_eq!(low.epochs, 2, "per-bucket epochs count that bucket's notes");
+        let high = back.learned.get(3, 5, 100).expect("B=5 plan in its own bucket");
+        assert!((high.linear_ratio - 0.40).abs() < 1e-12);
+        assert_eq!(high.epochs, 1);
+        assert_eq!(back.learned.len(), 2, "distinct loads must not share a bucket");
+        // eviction removes exactly the stale bucket and persists the removal
+        assert!(ps.evict(1, 20), "eviction must report the removed plan");
+        assert!(!ps.evict(1, 20), "double-evict is a no-op");
+        let back = HostProfile::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(back.learned.get(3, 1, 20).is_none(), "evicted bucket must be gone on disk");
+        assert!(back.learned.get(3, 5, 100).is_some(), "other buckets survive eviction");
+        // a re-learned plan restarts the bucket's epoch count
+        ps.note(0.50, None, 3, 1, 20);
+        assert_eq!(ps.epochs, 4);
+    }
+
+    #[test]
+    fn load_hint_and_persist_buckets_agree_at_boundaries() {
+        // the hint bucket the pricer evaluates at and the bucket a
+        // converged plan persists under must be the same function of the
+        // live load — including the 0 and below-32-ctx boundary cases the
+        // raw max(1) clamp used to get wrong
+        let heads = vec![vec![0.6, 0.2, 0.1], vec![0.45, 0.15, 0.05]];
+        let mut r = WidthRetuner::new(&heads, &[4, 8], 8)
+            .with_pricer(StepPricer::fixed(|_| 1e-3), 0, 0);
+        assert_eq!(r.load_bucket(), (1, 32), "zero load must price at the floor bucket");
+        for batch in [0usize, 1, 3, 31, 32, 33] {
+            for ctx in [0usize, 1, 31, 32, 33] {
+                r.set_load_hint(batch, ctx);
+                assert_eq!(
+                    r.load_bucket(),
+                    (batch_bucket(batch), ctx_bucket(ctx)),
+                    "hint bucket must equal persist bucket at ({batch}, {ctx})"
+                );
+            }
+        }
+        // pin the floor semantics themselves
+        assert_eq!(batch_bucket(0), 1);
+        assert_eq!(batch_bucket(1), 1);
+        assert_eq!(batch_bucket(33), 64);
+        assert_eq!(ctx_bucket(0), 32);
+        assert_eq!(ctx_bucket(31), 32);
+        assert_eq!(ctx_bucket(32), 32);
+        assert_eq!(ctx_bucket(33), 64);
+    }
+
+    #[test]
+    fn fingerprint_gates_learned_table() {
+        let fp = ProfileFingerprint::current(4, 2, 0x1234);
+        // round-trip through JSON (the hash crosses as hex, not a double)
+        let back = ProfileFingerprint::from_json(&fp.to_json()).expect("fingerprint parses back");
+        assert_eq!(back, fp);
+        assert!(fp.matches(&fp));
+        // model hash 0 is a wildcard on either side
+        let nomodel = ProfileFingerprint::current(4, 2, 0);
+        assert!(fp.matches(&nomodel) && nomodel.matches(&fp));
+        // any other field mismatching refuses
+        let other_pools = ProfileFingerprint::current(5, 2, 0x1234);
+        assert!(!fp.matches(&other_pools));
+        let other_model = ProfileFingerprint::current(4, 2, 0x9999);
+        assert!(!fp.matches(&other_model));
+
+        let mut p = plain_profile();
+        p.fingerprint = Some(fp.clone());
+        p.learned.upsert(
+            8,
+            1,
+            64,
+            LearnedPlan { linear_ratio: 0.6, dense_split: None, width: 8, epochs: 1 },
+        );
+        assert!(p.learned_if_current(&fp).is_some(), "matching fingerprint arms the table");
+        assert!(
+            p.learned_if_current(&other_pools).is_none(),
+            "mismatched pools must refuse the learned table"
+        );
+        // unstamped profile: trusted only while its table is empty
+        p.fingerprint = None;
+        assert!(
+            p.learned_if_current(&fp).is_none(),
+            "unstamped non-empty table could be from anywhere — refuse it"
+        );
+        p.learned = LearnedPlans::new();
+        assert!(p.learned_if_current(&fp).is_some(), "unstamped empty table is harmless");
+    }
+
+    #[test]
+    fn warm_start_churn_fires_once_within_probation() {
+        // drift beyond the threshold inside probation fires exactly once
+        let mut ws = WarmStartChurn::new(0.9, 1, 32).with_limits(4, 0.1);
+        assert!(!ws.observe_applied(0.85), "small drift must not fire");
+        assert!(ws.observe_applied(0.7), "large drift inside probation must fire");
+        assert!(ws.fired());
+        assert!(!ws.observe_applied(0.1), "fires at most once");
+        // drift after probation expires never fires
+        let mut ws = WarmStartChurn::new(0.9, 1, 32).with_limits(2, 0.1);
+        assert!(!ws.observe_applied(0.88));
+        assert!(!ws.observe_applied(0.87));
+        assert!(!ws.observe_applied(0.2), "post-probation drift is ordinary convergence");
+        assert!(!ws.fired());
+        // non-finite applied ratios are ignored (and don't burn probation)
+        let mut ws = WarmStartChurn::new(0.9, 1, 32).with_limits(1, 0.1);
+        assert!(!ws.observe_applied(f64::NAN));
+        assert!(ws.observe_applied(0.5), "NaN must not consume the probation budget");
     }
 }

@@ -26,8 +26,8 @@ pub mod tree_builder;
 
 pub use autotune::{
     batch_bucket, calibrate as calibrate_host, ctx_bucket, fit_unit, CalibrationConfig,
-    HostProfile, LearnedPlan, LearnedPlans, OnlineRetuner, PlanPersist, ProbeSample, RetuneConfig,
-    StepPricer, WidthRetuner,
+    HostProfile, LearnedPlan, LearnedPlans, OnlineRetuner, PlanPersist, ProbeSample,
+    ProfileFingerprint, RetuneConfig, StepPricer, WarmStartChurn, WidthRetuner,
 };
 pub use calibrate::{fit_profile, DatasetTarget, PAPER_TABLE1};
 pub use profiler::{profile, profile_host, ProfileRow};

@@ -70,6 +70,21 @@ impl PartitionStrategy {
         buckets.sort_by_key(|(bound, _)| *bound);
         Some(Self { buckets })
     }
+
+    /// Fingerprint-gated variant of [`from_learned`]: builds the strategy
+    /// from a host profile's learned table only when the profile's
+    /// fingerprint matches the current configuration — a table tuned under
+    /// different pools/features/model must not arm cross-config plans.
+    ///
+    /// [`from_learned`]: PartitionStrategy::from_learned
+    pub fn from_profile(
+        profile: &crate::arca::autotune::HostProfile,
+        current: &crate::arca::autotune::ProfileFingerprint,
+        width: usize,
+        batch: usize,
+    ) -> Option<Self> {
+        Self::from_learned(profile.learned_if_current(current)?, width, batch)
+    }
 }
 
 // ---- JSON ------------------------------------------------------------------
@@ -237,6 +252,52 @@ mod tests {
         assert_eq!(s.plan_for(300).attention.dense_gpu_frac, 0.7);
         assert_eq!(s.plan_for(99999).linear_ratio, 0.6, "past the last bucket: last plan");
         assert!(PartitionStrategy::from_learned(&l, 32, 8).is_none(), "unknown slice is None");
+    }
+
+    #[test]
+    fn from_profile_refuses_mismatched_fingerprint() {
+        use crate::arca::autotune::{LearnedPlan, LearnedPlans, ProfileFingerprint};
+        use crate::hcmp::unit::{UnifiedMemory, UnitSpec};
+
+        let unit = |name: &str| UnitSpec {
+            name: name.into(),
+            peak_flops: 8.0e9,
+            solo_bw: 6.0e9,
+            launch_overhead: 20e-6,
+            wave: 1,
+            sweet_spot: 16,
+            decay_per_doubling: 0.7,
+            sparse_eff: 0.25,
+        };
+        let fp = ProfileFingerprint::current(4, 2, 0);
+        let mut profile = crate::arca::autotune::HostProfile {
+            solo: unit("solo"),
+            wide: unit("wide"),
+            narrow: unit("narrow"),
+            mem: UnifiedMemory { dram_bw: 12.0e9, contention_penalty: 0.1, sync_latency: 0.0 },
+            wide_threads: 4,
+            narrow_threads: 2,
+            fit_rms_rel_err: 0.0,
+            probes: vec![],
+            dyn_split: None,
+            learned: LearnedPlans::new(),
+            fingerprint: Some(fp.clone()),
+        };
+        profile.learned.upsert(
+            16,
+            8,
+            64,
+            LearnedPlan { linear_ratio: 0.4, dense_split: None, width: 16, epochs: 1 },
+        );
+        assert!(
+            PartitionStrategy::from_profile(&profile, &fp, 16, 8).is_some(),
+            "matching fingerprint must build the learned strategy"
+        );
+        let other = ProfileFingerprint::current(6, 2, 0);
+        assert!(
+            PartitionStrategy::from_profile(&profile, &other, 16, 8).is_none(),
+            "mismatched pools must refuse the learned strategy"
+        );
     }
 
     #[test]

@@ -57,6 +57,15 @@ struct Inner {
     warm_start: bool,
     /// Number of learned buckets in the loaded host profile.
     learned_buckets: u64,
+    /// True when a loaded profile carried a learned table that was refused
+    /// because its fingerprint doesn't describe this configuration.
+    fingerprint_mismatch: bool,
+    /// Warm-started plans evicted as stale (immediate retune churn).
+    warm_start_evictions: u64,
+    /// The (batch, ctx) bucket the width pricer currently evaluates at —
+    /// also the bucket retune epochs persist under.
+    priced_batch_bucket: Option<u64>,
+    priced_ctx_bucket: Option<u64>,
 }
 
 /// Thread-safe metrics sink shared by the scheduler and the server.
@@ -70,6 +79,14 @@ impl Metrics {
         Self::default()
     }
 
+    /// Lock the metrics state, recovering from a poisoned mutex: a worker
+    /// that panicked mid-record leaves at worst one half-updated counter,
+    /// and observability failing *because* the server is in trouble is the
+    /// worst possible time for `stats` to start panicking too.
+    fn lock(&self) -> std::sync::MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     pub fn record_request(
         &self,
         tokens: usize,
@@ -78,7 +95,7 @@ impl Metrics {
         mean_acceptance: f64,
         queue_delay_s: f64,
     ) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.requests += 1;
         m.tokens_out += tokens as u64;
         m.decode_steps += steps as u64;
@@ -98,7 +115,7 @@ impl Metrics {
     const STEP_WINDOW: usize = 4096;
 
     pub fn record_step(&self, occupancy: usize, step_time_s: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.occupancy.push(occupancy as f64);
         m.occupancy_max = m.occupancy_max.max(occupancy as u64);
         m.decode_time_s += step_time_s;
@@ -115,7 +132,7 @@ impl Metrics {
     /// Accumulate per-unit busy time measured on the engine's worker pools
     /// (a *delta* since the previous call, in occupancy-seconds per unit).
     pub fn record_unit_busy(&self, wide_s: f64, narrow_s: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.wide_busy_s += wide_s.max(0.0);
         m.narrow_busy_s += narrow_s.max(0.0);
         m.era_wide_busy_s += wide_s.max(0.0);
@@ -124,37 +141,59 @@ impl Metrics {
 
     /// Cumulative per-unit busy occupancy-seconds (wide, narrow).
     pub fn unit_busy(&self) -> (f64, f64) {
-        let m = self.inner.lock().unwrap();
+        let m = self.lock();
         (m.wide_busy_s, m.narrow_busy_s)
     }
 
     /// Record the initial deployed plan (called once at engine startup).
     pub fn set_plan(&self, ratio: Option<f64>, width: usize, predicted_balance: Option<f64>) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.current_ratio = ratio;
         m.current_width = Some(width as u64);
         m.predicted_balance = predicted_balance;
     }
 
     /// Record whether the startup plan was warm-started from a persisted
-    /// learned bucket, and how many learned buckets the profile carried
+    /// learned bucket, how many learned buckets the profile carried, and
+    /// whether a learned table was refused on a fingerprint mismatch
     /// (called once at engine startup).
-    pub fn set_warm_start(&self, warm: bool, buckets: usize) {
-        let mut m = self.inner.lock().unwrap();
+    pub fn set_warm_start(&self, warm: bool, buckets: usize, fingerprint_mismatch: bool) {
+        let mut m = self.lock();
         m.warm_start = warm;
         m.learned_buckets = buckets as u64;
+        m.fingerprint_mismatch = fingerprint_mismatch;
+    }
+
+    /// Record a stale warm-started plan being evicted from the learned
+    /// table (the staleness tracker fired within its probation window).
+    pub fn record_warm_start_eviction(&self) {
+        self.lock().warm_start_evictions += 1;
+    }
+
+    /// Warm-started plans evicted as stale so far.
+    pub fn warm_start_evictions(&self) -> u64 {
+        self.lock().warm_start_evictions
+    }
+
+    /// Record the (batch, ctx) bucket the width pricer currently evaluates
+    /// candidates at (re-recorded whenever the live load drifts across a
+    /// pow2 bucket edge).
+    pub fn set_priced_bucket(&self, batch: usize, ctx: usize) {
+        let mut m = self.lock();
+        m.priced_batch_bucket = Some(batch as u64);
+        m.priced_ctx_bucket = Some(ctx as u64);
     }
 
     /// Record the dynamic context-split fraction deployed at startup
     /// (None when the engine runs the bitwise affinity path).
     pub fn set_dense_split(&self, frac: Option<f64>) {
-        self.inner.lock().unwrap().current_dense_split = frac;
+        self.lock().current_dense_split = frac;
     }
 
     /// Record an applied online dense-split re-tune (a plan swap — starts a
     /// new measurement era like ratio/width swaps do).
     pub fn record_dense_split_retune(&self, new_frac: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.retune_count += 1;
         m.current_dense_split = Some(new_frac);
         m.era_wide_busy_s = 0.0;
@@ -163,13 +202,13 @@ impl Metrics {
 
     /// The currently executing dynamic context-split fraction, if any.
     pub fn current_dense_split(&self) -> Option<f64> {
-        self.inner.lock().unwrap().current_dense_split
+        self.lock().current_dense_split
     }
 
     /// Record an applied online ratio re-tune. Starts a new measurement
     /// era: the residual now scores the new plan only.
     pub fn record_retune(&self, new_ratio: f64) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.retune_count += 1;
         m.current_ratio = Some(new_ratio);
         m.era_wide_busy_s = 0.0;
@@ -179,19 +218,19 @@ impl Metrics {
     /// Refresh the cost model's predicted balance after a plan swap, so
     /// the residual keeps scoring the plan actually executing.
     pub fn set_predicted_balance(&self, predicted: f64) {
-        self.inner.lock().unwrap().predicted_balance = Some(predicted);
+        self.lock().predicted_balance = Some(predicted);
     }
 
     /// Drop the predicted balance (the executing plan is no longer the one
     /// it described); `prediction_residual` reports null until refreshed.
     pub fn clear_predicted_balance(&self) {
-        self.inner.lock().unwrap().predicted_balance = None;
+        self.lock().predicted_balance = None;
     }
 
     /// Record an applied draft-tree width re-tune (also starts a new
     /// measurement era — the workload shape changed).
     pub fn record_width_retune(&self, new_width: usize) {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         m.retune_count += 1;
         m.current_width = Some(new_width as u64);
         m.era_wide_busy_s = 0.0;
@@ -200,26 +239,26 @@ impl Metrics {
 
     /// Plan swaps applied so far (ratio + width).
     pub fn retunes(&self) -> u64 {
-        self.inner.lock().unwrap().retune_count
+        self.lock().retune_count
     }
 
     /// The currently executing wide-unit column ratio, if any.
     pub fn current_ratio(&self) -> Option<f64> {
-        self.inner.lock().unwrap().current_ratio
+        self.lock().current_ratio
     }
 
     pub fn requests(&self) -> u64 {
-        self.inner.lock().unwrap().requests
+        self.lock().requests
     }
 
     /// Highest batch occupancy observed so far.
     pub fn occupancy_max(&self) -> u64 {
-        self.inner.lock().unwrap().occupancy_max
+        self.lock().occupancy_max
     }
 
     /// Snapshot as JSON (served by the `stats` command).
     pub fn snapshot(&self) -> Json {
-        let mut m = self.inner.lock().unwrap();
+        let mut m = self.lock();
         let thr = if m.decode_time_s > 0.0 { m.tokens_out as f64 / m.decode_time_s } else { 0.0 };
         let (p50, p95) = (m.latency_ms.p50(), m.latency_ms.p95());
         let (q50, q95, q99) =
@@ -271,6 +310,10 @@ impl Metrics {
             ("prediction_residual", residual),
             ("warm_start", Json::Bool(m.warm_start)),
             ("learned_buckets", Json::num(m.learned_buckets as f64)),
+            ("fingerprint_mismatch", Json::Bool(m.fingerprint_mismatch)),
+            ("warm_start_evictions", Json::num(m.warm_start_evictions as f64)),
+            ("priced_batch_bucket", opt(m.priced_batch_bucket.map(|b| b as f64))),
+            ("priced_ctx_bucket", opt(m.priced_ctx_bucket.map(|c| c as f64))),
         ])
     }
 }
@@ -355,10 +398,53 @@ mod tests {
         let j = m.snapshot();
         assert_eq!(j.get("warm_start").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("learned_buckets").unwrap().as_usize(), Some(0));
-        m.set_warm_start(true, 3);
+        assert_eq!(j.get("fingerprint_mismatch").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("warm_start_evictions").unwrap().as_usize(), Some(0));
+        m.set_warm_start(true, 3, false);
         let j = m.snapshot();
         assert_eq!(j.get("warm_start").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("learned_buckets").unwrap().as_usize(), Some(3));
+        // a refused table surfaces both the refusal and the armed fallback
+        m.set_warm_start(false, 2, true);
+        m.record_warm_start_eviction();
+        let j = m.snapshot();
+        assert_eq!(j.get("warm_start").unwrap().as_bool(), Some(false));
+        assert_eq!(j.get("fingerprint_mismatch").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("warm_start_evictions").unwrap().as_usize(), Some(1));
+        assert_eq!(m.warm_start_evictions(), 1);
+    }
+
+    #[test]
+    fn priced_bucket_surface_tracks_live_load() {
+        let m = Metrics::new();
+        let j = m.snapshot();
+        assert_eq!(j.get("priced_batch_bucket"), Some(&Json::Null));
+        assert_eq!(j.get("priced_ctx_bucket"), Some(&Json::Null));
+        m.set_priced_bucket(4, 128);
+        let j = m.snapshot();
+        assert_eq!(j.get("priced_batch_bucket").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("priced_ctx_bucket").unwrap().as_usize(), Some(128));
+    }
+
+    #[test]
+    fn metrics_survive_lock_poisoning() {
+        // a worker panicking while holding the metrics lock must not take
+        // down every later stats call — observability has to survive the
+        // exact situations it exists to diagnose
+        let m = Metrics::new();
+        m.record_step(1, 0.01);
+        let poison = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = m.inner.lock().unwrap();
+            panic!("worker dies holding the metrics lock");
+        }));
+        assert!(poison.is_err());
+        assert!(m.inner.is_poisoned(), "the mutex must actually be poisoned for this test");
+        // recording and snapshotting both still work
+        m.record_step(3, 0.02);
+        let j = m.snapshot();
+        assert_eq!(j.get("batch_steps").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("batch_occupancy_max").unwrap().as_usize(), Some(3));
+        assert_eq!(m.occupancy_max(), 3);
     }
 
     #[test]

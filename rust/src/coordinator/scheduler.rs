@@ -28,7 +28,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::arca::autotune::{OnlineRetuner, PlanPersist, WidthRetuner};
+use crate::arca::autotune::{
+    batch_bucket, ctx_bucket, OnlineRetuner, PlanPersist, WarmStartChurn, WidthRetuner,
+};
 use crate::model::kv_cache::BatchKvCache;
 use crate::model::tokenizer::ByteTokenizer;
 use crate::model::ModelConfig;
@@ -74,6 +76,19 @@ pub struct RetunePolicy {
     pub warm_start: bool,
     /// Number of learned buckets in the loaded host profile.
     pub learned_buckets: usize,
+    /// True when the loaded profile carried a learned table that was
+    /// refused because its fingerprint doesn't match this configuration —
+    /// surfaced in `stats`.
+    pub fingerprint_mismatch: bool,
+    /// Armed after a warm start: watches the first applied ratio retunes
+    /// for immediate churn away from the armed plan. When it fires, the
+    /// worker evicts the stale bucket and re-tunes fresh.
+    pub stale: Option<WarmStartChurn>,
+    /// Fresh plan source for staleness recovery: maps the serving
+    /// `(width, ctx)` to a freshly tuned `(linear_ratio, dense_split)` on
+    /// the calibrated simulator (`tune_plan` / `tune_plan_dyn`).
+    #[allow(clippy::type_complexity)]
+    pub retune_fresh: Option<Box<dyn Fn(usize, usize) -> (f64, Option<f64>) + Send>>,
 }
 
 impl RetunePolicy {
@@ -250,9 +265,17 @@ impl Scheduler {
                     tree.width(),
                     policy.predicted_balance,
                 );
-                metrics_w.set_warm_start(policy.warm_start, policy.learned_buckets);
+                metrics_w.set_warm_start(
+                    policy.warm_start,
+                    policy.learned_buckets,
+                    policy.fingerprint_mismatch,
+                );
                 // learned-plan write-back channel (None: nothing persists)
                 let mut persist = policy.persist.take();
+                // (batch, ctx) bucket the width pricer currently evaluates
+                // at — re-surfaced in `stats` whenever the live load
+                // crosses a pow2 bucket edge
+                let mut priced_bucket: Option<(usize, usize)> = None;
                 let mut queue: VecDeque<Job> = VecDeque::new();
                 let mut inflight: HashMap<u64, InFlight> = HashMap::new();
                 let mut next_seq: u64 = 0;
@@ -325,6 +348,22 @@ impl Scheduler {
                         continue; // nothing admitted (e.g. all rejected)
                     }
                     let occupancy = dec.active();
+                    // live load: the measured batch occupancy and longest
+                    // in-flight context are what the width pricer evaluates
+                    // candidates at and what retune epochs persist under —
+                    // NOT the startup construction shape (a plan converged
+                    // at B=1 must land in the B=1 bucket)
+                    let live_ctx = dec.max_lane_len(&caches);
+                    if let Some(wr) = policy.width.as_mut() {
+                        wr.set_load_hint(occupancy, live_ctx);
+                    }
+                    if policy.width.is_some() || persist.is_some() {
+                        let bucket = (batch_bucket(occupancy), ctx_bucket(live_ctx));
+                        if priced_bucket != Some(bucket) {
+                            priced_bucket = Some(bucket);
+                            metrics_w.set_priced_bucket(bucket.0, bucket.1);
+                        }
+                    }
                     let step_started = Instant::now();
                     let step_result = dec.step(&mut engine, &mut caches);
                     metrics_w.record_step(occupancy, step_started.elapsed().as_secs_f64());
@@ -336,9 +375,11 @@ impl Scheduler {
                         // out — applied here, at the step boundary, so the
                         // next forward re-shards without touching any
                         // in-flight math
+                        let mut applied_ratio: Option<f64> = None;
                         if let Some(rt) = policy.ratio.as_mut() {
                             if let Some(new_ratio) = rt.observe_step(dw, dn) {
                                 if engine.retune_ratio(new_ratio) {
+                                    applied_ratio = Some(new_ratio);
                                     metrics_w.record_retune(new_ratio);
                                     // refresh (or, without a predictor,
                                     // clear) the prediction so the residual
@@ -351,7 +392,13 @@ impl Scheduler {
                                     if let (Some(ps), Some(r)) =
                                         (persist.as_mut(), engine.current_ratio())
                                     {
-                                        ps.note(r, engine.dense_split(), tree.width());
+                                        ps.note(
+                                            r,
+                                            engine.dense_split(),
+                                            tree.width(),
+                                            occupancy,
+                                            live_ctx,
+                                        );
                                     }
                                 }
                             }
@@ -371,7 +418,68 @@ impl Scheduler {
                                     if let (Some(ps), Some(r)) =
                                         (persist.as_mut(), engine.current_ratio())
                                     {
-                                        ps.note(r, engine.dense_split(), tree.width());
+                                        ps.note(
+                                            r,
+                                            engine.dense_split(),
+                                            tree.width(),
+                                            occupancy,
+                                            live_ctx,
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                        // staleness: a warm-started plan whose ratio
+                        // immediately walked away from the armed value was
+                        // tuned for some other life — evict its bucket,
+                        // re-tune fresh on the calibrated simulator, and
+                        // reset the retuner so the fresh plan (with a
+                        // restarted epoch count) is what gets re-learned
+                        if let (Some(ws), Some(r)) = (policy.stale.as_mut(), applied_ratio) {
+                            if ws.observe_applied(r) {
+                                metrics_w.record_warm_start_eviction();
+                                if let Some(ps) = persist.as_mut() {
+                                    ps.evict(ws.batch, ws.ctx);
+                                }
+                                if let Some(fresh) = policy.retune_fresh.as_ref() {
+                                    let (fresh_ratio, fresh_split) = fresh(tree.width(), ws.ctx);
+                                    if engine.retune_ratio(fresh_ratio) {
+                                        metrics_w.record_retune(fresh_ratio);
+                                        if let Some(rt) = policy.ratio.as_mut() {
+                                            *rt = OnlineRetuner::new(fresh_ratio, rt.cfg);
+                                        }
+                                        match &policy.predict_balance {
+                                            Some(f) => metrics_w.set_predicted_balance(f(
+                                                fresh_ratio,
+                                                tree.width(),
+                                            )),
+                                            None => metrics_w.clear_predicted_balance(),
+                                        }
+                                    }
+                                    if let Some(split) = fresh_split {
+                                        if engine.retune_dense_split(split) {
+                                            metrics_w.record_dense_split_retune(split);
+                                            if let Some(rt) = policy.dense_split.as_mut() {
+                                                *rt = OnlineRetuner::new(split, rt.cfg);
+                                            }
+                                        }
+                                    }
+                                    eprintln!(
+                                        "ghidorah: stale warm start (armed ratio {:.2} \
+                                         drifted to {r:.2}) — evicted bucket (B={}, \
+                                         ctx={}), re-tuned fresh to {fresh_ratio:.2}",
+                                        ws.armed_ratio, ws.batch, ws.ctx,
+                                    );
+                                    if let (Some(ps), Some(cur)) =
+                                        (persist.as_mut(), engine.current_ratio())
+                                    {
+                                        ps.note(
+                                            cur,
+                                            engine.dense_split(),
+                                            tree.width(),
+                                            occupancy,
+                                            live_ctx,
+                                        );
                                     }
                                 }
                             }
@@ -449,7 +557,13 @@ impl Scheduler {
                                     if let (Some(ps), Some(r)) =
                                         (persist.as_mut(), engine.current_ratio())
                                     {
-                                        ps.note(r, engine.dense_split(), tree.width());
+                                        ps.note(
+                                            r,
+                                            engine.dense_split(),
+                                            tree.width(),
+                                            occupancy,
+                                            live_ctx,
+                                        );
                                     }
                                 }
                             }
@@ -752,6 +866,7 @@ mod tests {
             probes: vec![],
             dyn_split: None,
             learned: LearnedPlans::new(),
+            fingerprint: None,
         };
         let path = std::env::temp_dir()
             .join(format!("ghidorah-sched-persist-{}.json", std::process::id()));
@@ -769,10 +884,7 @@ mod tests {
                 start_ratio,
                 RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
             )),
-            persist: Some(
-                PlanPersist::new(profile, path.clone(), tree.width(), DEFAULT_MAX_BATCH, 32)
-                    .with_debounce(0.0),
-            ),
+            persist: Some(PlanPersist::new(profile, path.clone(), tree.width()).with_debounce(0.0)),
             ..Default::default()
         };
         let s = Scheduler::spawn_tuned(
@@ -799,7 +911,14 @@ mod tests {
 
         let back = HostProfile::load(&path).unwrap();
         std::fs::remove_file(&path).ok();
-        let lp = back.learned.get(3, DEFAULT_MAX_BATCH, 32).expect("learned bucket persisted");
+        // requests ran one at a time (blocking submits), so the measured
+        // load was B=1 at short context — the plan must land in the (1, 32)
+        // bucket, NOT under the scheduler's max-batch construction shape
+        let lp = back.learned.get(3, 1, 32).expect("learned bucket persisted at the live load");
+        assert!(
+            back.learned.get(3, DEFAULT_MAX_BATCH, 32).is_none(),
+            "plan must not be mis-filed under the startup max-batch key"
+        );
         assert!(
             lp.linear_ratio < start_ratio,
             "persisted ratio must be the converged one: {}",

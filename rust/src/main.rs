@@ -11,8 +11,8 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use ghidorah::arca::autotune::{
-    CalibrationConfig, HostProfile, LearnedPlan, OnlineRetuner, PlanPersist, RetuneConfig,
-    StepPricer, WidthRetuner,
+    CalibrationConfig, HostProfile, LearnedPlan, OnlineRetuner, PlanPersist, ProfileFingerprint,
+    RetuneConfig, StepPricer, WarmStartChurn, WidthRetuner,
 };
 use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
 use ghidorah::arca::profiler::profile;
@@ -251,15 +251,29 @@ fn apply_autotune(
     tree: &VerificationTree,
     heads: &[Vec<f64>],
     max_batch: usize,
+    fp: &ProfileFingerprint,
 ) -> (ParallelMode, RetunePolicy) {
     let (Some(p), ParallelMode::Hcmp { plan, explicit, dynamic }) = (profile, mode) else {
         return (mode, RetunePolicy::none());
     };
     let pattern = tree.pattern();
     let ctx = 64usize.min(cfg.max_ctx / 2); // representative serving context
+    // fingerprint gate: a learned table tuned under different pools,
+    // features, or model shape must not arm cross-config plans
+    let table = p.learned_if_current(fp);
+    let fingerprint_mismatch = table.is_none() && !p.learned.is_empty();
+    if fingerprint_mismatch {
+        eprintln!(
+            "ghidorah: learned table ignored (host-profile fingerprint mismatch — profile {}, \
+             current {})",
+            p.fingerprint.as_ref().map(|f| f.describe()).unwrap_or_else(|| "unstamped".into()),
+            fp.describe()
+        );
+    }
     // warm start: a learned bucket persisted under the same serving shape
     // supersedes the offline fit (a user-pinned ratio still wins)
-    let learned = if explicit { None } else { p.learned.get(tree.width(), max_batch, ctx) };
+    let learned =
+        if explicit { None } else { table.and_then(|t| t.get(tree.width(), max_batch, ctx)) };
     let (plan, initial_width) = if explicit {
         (plan, tree.width())
     } else if let Some(lp) = learned {
@@ -348,6 +362,24 @@ fn apply_autotune(
         persist: None, // armed by autotune_wiring when a profile path exists
         warm_start: learned.is_some(),
         learned_buckets: p.learned.len(),
+        fingerprint_mismatch,
+        // a warm-started plan is on probation: immediate retune churn away
+        // from the armed ratio marks the bucket stale
+        stale: learned.map(|lp| WarmStartChurn::new(lp.linear_ratio, max_batch, ctx)),
+        retune_fresh: learned.map(|_| {
+            let (p3, cfg3, heads3) = (p.clone(), cfg.clone(), heads.to_vec());
+            Box::new(move |w: usize, c: usize| {
+                let t = build_tree(&heads3, w);
+                let pat = t.pattern();
+                if dynamic {
+                    let (tuned, _t) = p3.tune_plan_dyn(&cfg3, t.width(), c, Some(&pat));
+                    (tuned.linear_ratio, Some(tuned.attention.dense_gpu_frac))
+                } else {
+                    let (tuned, _t) = p3.tune_plan(&cfg3, t.width(), c, Some(&pat));
+                    (tuned.linear_ratio, None)
+                }
+            }) as Box<dyn Fn(usize, usize) -> (f64, Option<f64>) + Send>
+        }),
     };
     (ParallelMode::Hcmp { plan, explicit: true, dynamic }, policy)
 }
@@ -370,46 +402,61 @@ fn autotune_wiring(
         ParallelMode::Seq => None,
     };
     let (wide, narrow) = reconcile_pools(flags, profile.as_ref(), wide, narrow);
-    let (mode, mut policy) = apply_autotune(mode, profile.as_ref(), cfg, tree, heads, max_batch);
-    // learned-plan write-back: whenever a profile path is given, arm the
-    // scheduler's persistence channel. The profile is seeded with the armed
-    // plan under this serving shape's bucket (first run only — an existing
-    // learned bucket is never clobbered by a startup seed), then updated at
-    // every applied retune epoch and saved debounced + atomic-renamed.
+    // the identity this serving session tunes under: the reconciled pools,
+    // the crate's feature set/version, and the model shape
+    let fp = ProfileFingerprint::current(wide, narrow, cfg.config_hash());
+    let (mode, mut policy) =
+        apply_autotune(mode, profile.as_ref(), cfg, tree, heads, max_batch, &fp);
+    // learned-plan write-back: whenever a profile path is given AND the
+    // profile's fingerprint matches this configuration, arm the scheduler's
+    // persistence channel. The profile is seeded with the armed plan under
+    // this serving shape's bucket (first run only — an existing learned
+    // bucket is never clobbered by a startup seed), stamped with the
+    // current fingerprint, then updated at every applied retune epoch and
+    // saved debounced + atomic-renamed. A mismatched profile is left
+    // byte-for-byte alone: learned plans from another configuration must
+    // not be mixed with this one's.
     if let (Some(p), ParallelMode::Hcmp { plan, dynamic, .. }, Some(path)) =
         (&profile, mode, flags.get("host-profile"))
     {
-        let ctx = 64usize.min(cfg.max_ctx / 2);
-        let mut prof = p.clone();
-        if prof.learned.get(tree.width(), max_batch, ctx).is_none() {
-            prof.learned.upsert(
-                tree.width(),
-                max_batch,
-                ctx,
-                LearnedPlan {
-                    linear_ratio: plan.linear_ratio,
-                    dense_split: dynamic.then_some(plan.attention.dense_gpu_frac),
-                    width: policy.width.as_ref().map(|w| w.width()).unwrap_or(tree.width()),
-                    epochs: 0,
-                },
-            );
-        }
-        if dynamic && prof.dyn_split.is_none() {
-            // legacy mirror: older readers of the profile still see a split
-            prof.dyn_split = Some(plan.attention.dense_gpu_frac);
-        }
-        let path = PathBuf::from(path);
-        if flags.get("autotune").is_some() {
-            prof.save(&path)?;
+        if !p.fingerprint_matches(&fp) {
             eprintln!(
-                "ghidorah: host profile seeded with the armed plan \
-                 (bucket w {} b {} ctx {})",
-                tree.width(),
-                max_batch,
-                ctx
+                "ghidorah: learned-plan write-back disabled (host-profile fingerprint mismatch)"
             );
+        } else {
+            let ctx = 64usize.min(cfg.max_ctx / 2);
+            let mut prof = p.clone();
+            prof.fingerprint = Some(fp.clone());
+            if prof.learned.get(tree.width(), max_batch, ctx).is_none() {
+                prof.learned.upsert(
+                    tree.width(),
+                    max_batch,
+                    ctx,
+                    LearnedPlan {
+                        linear_ratio: plan.linear_ratio,
+                        dense_split: dynamic.then_some(plan.attention.dense_gpu_frac),
+                        width: policy.width.as_ref().map(|w| w.width()).unwrap_or(tree.width()),
+                        epochs: 0,
+                    },
+                );
+            }
+            if dynamic && prof.dyn_split.is_none() {
+                // legacy mirror: older readers of the profile still see a split
+                prof.dyn_split = Some(plan.attention.dense_gpu_frac);
+            }
+            let path = PathBuf::from(path);
+            if flags.get("autotune").is_some() {
+                prof.save(&path)?;
+                eprintln!(
+                    "ghidorah: host profile seeded with the armed plan \
+                     (bucket w {} b {} ctx {})",
+                    tree.width(),
+                    max_batch,
+                    ctx
+                );
+            }
+            policy.persist = Some(PlanPersist::new(prof, path, tree.width()));
         }
-        policy.persist = Some(PlanPersist::new(prof, path, tree.width(), max_batch, ctx));
     }
     let fracs = match (&profile, mode) {
         (Some(p), ParallelMode::Hcmp { .. }) => decode_width_fracs(p, cfg, tree.width()),

@@ -82,6 +82,30 @@ impl ModelConfig {
         self.n_heads * self.head_dim
     }
 
+    /// FNV-1a hash over every hyperparameter — the model half of the
+    /// host-profile fingerprint. A learned plan tuned for one model shape
+    /// must not warm-start a different one, so any field change (including
+    /// `rope_base`, hashed by bit pattern) produces a different hash.
+    pub fn config_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut mix = |v: u64| {
+            for b in v.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        mix(self.vocab as u64);
+        mix(self.d_model as u64);
+        mix(self.n_layers as u64);
+        mix(self.n_heads as u64);
+        mix(self.head_dim as u64);
+        mix(self.ffn as u64);
+        mix(self.n_medusa as u64);
+        mix(self.max_ctx as u64);
+        mix(self.rope_base.to_bits() as u64);
+        h
+    }
+
     pub fn from_manifest(j: &Json) -> anyhow::Result<Self> {
         let m = j.get("model").ok_or_else(|| anyhow::anyhow!("manifest missing 'model'"))?;
         let u = |k: &str| -> anyhow::Result<usize> {
@@ -186,6 +210,18 @@ mod tests {
         .unwrap();
         let cfg = ModelConfig::from_manifest(&j).unwrap();
         assert_eq!(cfg, ModelConfig::tiny());
+    }
+
+    #[test]
+    fn config_hash_distinguishes_shapes() {
+        let tiny = ModelConfig::tiny();
+        assert_eq!(tiny.config_hash(), ModelConfig::tiny().config_hash(), "hash is stable");
+        assert_ne!(tiny.config_hash(), 0, "0 is reserved as the wildcard hash");
+        assert_ne!(tiny.config_hash(), ModelConfig::test_small().config_hash());
+        assert_ne!(tiny.config_hash(), ModelConfig::vicuna_7b().config_hash());
+        let mut rope = tiny.clone();
+        rope.rope_base = 500000.0;
+        assert_ne!(tiny.config_hash(), rope.config_hash(), "rope_base must be hashed");
     }
 
     #[test]

@@ -170,6 +170,13 @@ impl BatchedDecoder {
         self.seqs.len()
     }
 
+    /// Longest in-flight context across the batch's KV lanes (0 when the
+    /// batch is empty) — the live `ctx` half of the load the re-tuners
+    /// price and learned plans persist under.
+    pub fn max_lane_len(&self, caches: &BatchKvCache) -> usize {
+        self.seqs.iter().map(|s| caches.lane(s.lane).len()).max().unwrap_or(0)
+    }
+
     /// Admit a sequence into the running batch (it joins at the next step
     /// boundary). `lane` must be an allocated lane of `caches`.
     pub fn admit<E: BatchedStepExecutor>(

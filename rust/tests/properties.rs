@@ -926,3 +926,41 @@ fn prop_fitted_simreport_monotone_in_width() {
         Ok(())
     });
 }
+
+/// The width re-tuner's live-load bucket always agrees with the persistence
+/// bucketing: whatever (batch, ctx) the scheduler hints, `load_bucket()`
+/// lands on exactly the `(batch_bucket, ctx_bucket)` key a `PlanPersist`
+/// note under the same load would write to — the invariant behind live
+/// keying (a priced plan is persisted under the bucket it was priced at).
+#[test]
+fn prop_load_hint_agrees_with_persist_bucketing() {
+    use ghidorah::arca::autotune::{batch_bucket, ctx_bucket, WidthRetuner};
+
+    check(
+        "load-hint-vs-persist-bucket",
+        200,
+        |r| (r.below(130), r.below(5000), r.next_u64()),
+        |&(batch, ctx, seed)| {
+            let mut rng = Rng::new(seed);
+            let heads =
+                vec![vec![0.6, 0.2, 0.1], vec![0.45, 0.15, 0.05], vec![0.3, 0.1, 0.04]];
+            let mut wr = WidthRetuner::new(&heads, &[4, 8, 16], 8);
+            // a few random hints first: only the latest hint may matter
+            for _ in 0..rng.below(4) {
+                wr.set_load_hint(rng.below(64), rng.below(1024));
+            }
+            wr.set_load_hint(batch, ctx);
+            let want = (batch_bucket(batch), ctx_bucket(ctx));
+            if wr.load_bucket() != want {
+                return Err(format!(
+                    "load_bucket {:?} != persist bucket {want:?} for batch {batch} ctx {ctx}",
+                    wr.load_bucket()
+                ));
+            }
+            if !want.0.is_power_of_two() || !want.1.is_power_of_two() {
+                return Err(format!("bucket {want:?} not pow2"));
+            }
+            Ok(())
+        },
+    );
+}

@@ -3,7 +3,10 @@
 //! arms exactly the persisted plan — with token streams identical to a
 //! cold engine, since ratio swaps only move shard bounds (lossless).
 
-use ghidorah::arca::{HostProfile, LearnedPlans, OnlineRetuner, PlanPersist, RetuneConfig};
+use ghidorah::arca::{
+    HostProfile, LearnedPlan, LearnedPlans, OnlineRetuner, PlanPersist, ProfileFingerprint,
+    RetuneConfig, WarmStartChurn,
+};
 use ghidorah::coordinator::{EngineChoice, Request, RetunePolicy, Scheduler, DEFAULT_MAX_BATCH};
 use ghidorah::exec::ExecEngine;
 use ghidorah::hcmp::unit::{UnifiedMemory, UnitSpec};
@@ -35,6 +38,7 @@ fn synthetic_profile() -> HostProfile {
         probes: vec![],
         dyn_split: None,
         learned: LearnedPlans::new(),
+        fingerprint: None,
     }
 }
 
@@ -77,8 +81,7 @@ fn converged_plan_survives_restart_and_warm_starts() {
             RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
         )),
         persist: Some(
-            PlanPersist::new(synthetic_profile(), path.clone(), tree.width(), DEFAULT_MAX_BATCH, 32)
-                .with_debounce(0.0),
+            PlanPersist::new(synthetic_profile(), path.clone(), tree.width()).with_debounce(0.0),
         ),
         ..Default::default()
     };
@@ -101,7 +104,17 @@ fn converged_plan_survives_restart_and_warm_starts() {
     // as `apply_autotune` does when a matching bucket exists
     let back = HostProfile::load(&path).unwrap();
     std::fs::remove_file(&path).ok();
-    let lp = back.learned.get(3, DEFAULT_MAX_BATCH, 32).expect("learned bucket persisted");
+    // requests were submitted serially, so the scheduler measured B=1 with
+    // short contexts: the plan must land in the (B=1, ctx=32) bucket it was
+    // measured at, not under the scheduler's configured max batch
+    let lp = back
+        .learned
+        .get(3, 1, 32)
+        .expect("learned bucket persisted under the live-measured load");
+    assert!(
+        back.learned.get(3, DEFAULT_MAX_BATCH, 32).is_none(),
+        "plan must not be mis-filed under the startup max-batch key"
+    );
     assert!(
         lp.linear_ratio < start_ratio && lp.linear_ratio > 0.0,
         "persisted ratio must be the converged one: {}",
@@ -150,4 +163,134 @@ fn converged_plan_survives_restart_and_warm_starts() {
     let stats = s.metrics.snapshot();
     assert_eq!(stats.get("warm_start").unwrap().as_bool(), Some(true));
     assert!(stats.get("learned_buckets").unwrap().as_usize().unwrap() >= 1);
+}
+
+#[test]
+fn fingerprint_mismatch_refuses_warm_start() {
+    // a profile stamped for other pools, carrying a learned plan
+    let mut profile = synthetic_profile();
+    profile.fingerprint = Some(ProfileFingerprint::current(2, 2, 0));
+    profile.learned.upsert(
+        3,
+        1,
+        32,
+        LearnedPlan { linear_ratio: 0.33, dense_split: None, width: 3, epochs: 5 },
+    );
+
+    // library-level gate: the same pools expose the table, changed pools
+    // refuse it (this is what apply_autotune consults before warm-starting)
+    let same = ProfileFingerprint::current(2, 2, 0);
+    assert!(profile.fingerprint_matches(&same));
+    assert!(profile.learned_if_current(&same).is_some());
+    let other = ProfileFingerprint::current(4, 2, 0);
+    assert!(!profile.fingerprint_matches(&other), "changed pools must not match");
+    assert!(
+        profile.learned_if_current(&other).is_none(),
+        "mismatched fingerprint must hide the learned table"
+    );
+
+    // scheduler surface: on mismatch the policy arms the offline fit (no
+    // warm start) and flags the refusal, which `stats` must report
+    let cfg = ModelConfig::tiny();
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let policy = RetunePolicy {
+        ratio: Some(OnlineRetuner::new(0.5, RetuneConfig::default())),
+        warm_start: false,
+        learned_buckets: profile.learned.len(),
+        fingerprint_mismatch: true,
+        ..Default::default()
+    };
+    let s = Scheduler::spawn_tuned(
+        move || ExecEngine::parallel(model, &PartitionPlan::hcmp(0.5), 2, 2),
+        VerificationTree::chain(3),
+        8,
+        4,
+        DEFAULT_MAX_BATCH,
+        policy,
+    );
+    submit_all(&s, 1, "fingerprint", 8);
+    let stats = s.metrics.snapshot();
+    assert_eq!(stats.get("warm_start").unwrap().as_bool(), Some(false));
+    assert_eq!(stats.get("fingerprint_mismatch").unwrap().as_bool(), Some(true));
+    assert_eq!(stats.get("warm_start_evictions").unwrap().as_f64(), Some(0.0));
+}
+
+#[test]
+fn stale_warm_start_evicts_and_retunes_fresh() {
+    let path = std::env::temp_dir()
+        .join(format!("ghidorah-stale-warm-start-{}.json", std::process::id()));
+    std::fs::remove_file(&path).ok();
+
+    // golden reference: the static serial engine (eviction + fresh re-tune
+    // only move shard bounds, so tokens must not change)
+    let cfg = ModelConfig::tiny();
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let reference = Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4);
+    let want = submit_all(&reference, 3, "stale start", 12);
+
+    // a profile whose (B=1, ctx=32) bucket carries a long-lived but badly
+    // stale plan: ratio 0.95 after 99 epochs. Warm-starting it makes the
+    // retuner walk away immediately, which must trip the churn tracker.
+    let stale_ratio = 0.95;
+    let mut profile = synthetic_profile();
+    profile.learned.upsert(
+        3,
+        1,
+        32,
+        LearnedPlan { linear_ratio: stale_ratio, dense_split: None, width: 3, epochs: 99 },
+    );
+
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let tree = VerificationTree::chain(3);
+    let policy = RetunePolicy {
+        ratio: Some(OnlineRetuner::new(
+            stale_ratio,
+            RetuneConfig { window: 3, deadband: 0.02, ..Default::default() },
+        )),
+        warm_start: true,
+        learned_buckets: 1,
+        // tight limits so the integration test fires within one request
+        stale: Some(WarmStartChurn::new(stale_ratio, 1, 32).with_limits(6, 0.02)),
+        retune_fresh: Some(Box::new(|_w, _c| (0.5, None))),
+        persist: Some(
+            PlanPersist::new(profile, path.clone(), tree.width()).with_debounce(0.0),
+        ),
+        ..Default::default()
+    };
+    let s = Scheduler::spawn_tuned(
+        move || ExecEngine::parallel(model, &PartitionPlan::hcmp(stale_ratio), 2, 2),
+        tree,
+        8,
+        4,
+        DEFAULT_MAX_BATCH,
+        policy,
+    );
+    let got = submit_all(&s, 3, "stale start", 12);
+    assert_eq!(got, want, "eviction + fresh re-tune diverged from the golden trace");
+    assert!(
+        s.metrics.warm_start_evictions() >= 1,
+        "stale warm start never evicted (retunes: {})",
+        s.metrics.retunes()
+    );
+    let stats = s.metrics.snapshot();
+    assert!(stats.get("warm_start_evictions").unwrap().as_f64().unwrap() >= 1.0);
+    drop(s); // shutdown flushes any pending write-back
+
+    // the stale bucket must not survive as-written: either it was evicted
+    // outright, or the fresh plan re-learned it with a restarted epoch
+    // count far from the stale ratio
+    let back = HostProfile::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    if let Some(lp) = back.learned.get(3, 1, 32) {
+        assert!(
+            lp.epochs < 99,
+            "re-learned bucket must restart its epoch count, got {}",
+            lp.epochs
+        );
+        assert!(
+            (lp.linear_ratio - stale_ratio).abs() > 0.02,
+            "re-learned ratio {} still pinned at the stale plan",
+            lp.linear_ratio
+        );
+    }
 }
