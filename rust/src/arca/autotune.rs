@@ -299,6 +299,34 @@ impl LearnedPlans {
         self.entries.remove(&(width, batch_bucket(batch), ctx_bucket(ctx)))
     }
 
+    /// Near-miss fallback for warm start: when nothing was persisted under
+    /// the exact (width, batch-bucket, ctx-bucket) key, return the same
+    /// width's plan from the nearest neighboring pow2 bucket instead of
+    /// silently falling back to the offline fit. Distance is measured in
+    /// bucket steps (|Δlog2 batch| + |Δlog2 ctx|), ties resolved toward
+    /// the smaller bucket (deterministic BTreeMap order). Returns the
+    /// donor key alongside the plan so the caller can surface which
+    /// bucket seeded the retuners. The exact hit, when present, is always
+    /// distance 0 — callers may use this in place of [`LearnedPlans::get`]
+    /// and test the returned key for exactness. A width mismatch is never
+    /// interpolated across: a different tree width prices a different
+    /// workload entirely.
+    pub fn get_nearest(
+        &self,
+        width: usize,
+        batch: usize,
+        ctx: usize,
+    ) -> Option<(&(usize, usize, usize), &LearnedPlan)> {
+        let want = (batch_bucket(batch), ctx_bucket(ctx));
+        let steps = |a: usize, b: usize| {
+            (a.max(1).ilog2() as i64 - b.max(1).ilog2() as i64).unsigned_abs()
+        };
+        self.entries
+            .iter()
+            .filter(|((w, _, _), _)| *w == width)
+            .min_by_key(|((_, b, c), _)| steps(*b, want.0) + steps(*c, want.1))
+    }
+
     fn valid(p: &LearnedPlan) -> bool {
         let ratio_ok = p.linear_ratio.is_finite() && (0.0..=1.0).contains(&p.linear_ratio);
         let split_ok = match p.dense_split {
@@ -1901,6 +1929,37 @@ mod tests {
         assert_eq!(back, l);
         // empty round-trips empty
         assert_eq!(LearnedPlans::from_json(&LearnedPlans::new().to_json()), LearnedPlans::new());
+    }
+
+    #[test]
+    fn nearest_bucket_lookup_interpolates_near_misses() {
+        let plan = |r: f64| LearnedPlan { linear_ratio: r, dense_split: None, width: 8, epochs: 1 };
+        let mut l = LearnedPlans::new();
+        assert!(l.get_nearest(8, 4, 64).is_none(), "empty table has no neighbor");
+        l.upsert(8, 2, 64, plan(0.3));
+        l.upsert(8, 8, 64, plan(0.7));
+        l.upsert(16, 4, 64, plan(0.9)); // other width: never a donor
+        // exact hit is distance 0 and wins over any neighbor
+        l.upsert(8, 4, 64, plan(0.5));
+        let (key, p) = l.get_nearest(8, 4, 64).unwrap();
+        assert_eq!((*key, p.linear_ratio), ((8, 4, 64), 0.5));
+        l.remove(8, 4, 64);
+        // near miss: B=4 sits one bucket step from both B=2 and B=8 — the
+        // tie resolves deterministically toward the smaller bucket
+        let (key, p) = l.get_nearest(8, 4, 64).unwrap();
+        assert_eq!((*key, p.linear_ratio), ((8, 2, 64), 0.3));
+        // B=7 buckets to 8: the B=8 entry is now strictly closer
+        let (key, _) = l.get_nearest(8, 7, 64).unwrap();
+        assert_eq!(*key, (8, 8, 64));
+        // distance sums both axes: querying (8, 64) with donors at
+        // (2, 64) — two batch steps — and (8, 128) — one ctx step — the
+        // ctx neighbor is strictly closer
+        l.upsert(8, 8, 128, plan(0.6));
+        l.remove(8, 8, 64);
+        let (key, _) = l.get_nearest(8, 8, 64).unwrap();
+        assert_eq!(*key, (8, 8, 128), "one ctx step beats two batch steps");
+        // a width with no entries at all interpolates nothing
+        assert!(l.get_nearest(4, 4, 64).is_none());
     }
 
     #[test]

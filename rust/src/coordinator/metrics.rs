@@ -27,6 +27,12 @@ struct Inner {
     /// Active sequences per batched step.
     occupancy: OnlineStats,
     occupancy_max: u64,
+    /// Per-step occupancy histogram: `occupancy_hist[i]` counts the steps
+    /// that ran with exactly `i + 1` active sequences. This is the proof
+    /// surface for load tests — a mean near 1.0 can hide a workload that
+    /// never actually batched, while the histogram shows every batch
+    /// bucket the scheduler reached and for how many steps it held it.
+    occupancy_hist: Vec<u64>,
     /// Busy occupancy-seconds of the wide-unit (GPU-analogue) pool.
     wide_busy_s: f64,
     /// Busy occupancy-seconds of the narrow-unit (CPU-analogue) pool.
@@ -55,6 +61,10 @@ struct Inner {
     /// True when the startup plan was armed from a persisted learned
     /// bucket (`HostProfile.learned`) rather than the offline fit.
     warm_start: bool,
+    /// True when the armed bucket was not an exact (width, batch, ctx)
+    /// match but the nearest neighboring pow2 bucket's plan (near-miss
+    /// interpolation instead of the all-or-nothing fallback).
+    warm_start_interpolated: bool,
     /// Number of learned buckets in the loaded host profile.
     learned_buckets: u64,
     /// True when a loaded profile carried a learned table that was refused
@@ -118,6 +128,12 @@ impl Metrics {
         let mut m = self.lock();
         m.occupancy.push(occupancy as f64);
         m.occupancy_max = m.occupancy_max.max(occupancy as u64);
+        if occupancy > 0 {
+            if m.occupancy_hist.len() < occupancy {
+                m.occupancy_hist.resize(occupancy, 0);
+            }
+            m.occupancy_hist[occupancy - 1] += 1;
+        }
         m.decode_time_s += step_time_s;
         let ms = step_time_s * 1e3;
         if m.step_ms.len() < Self::STEP_WINDOW {
@@ -162,6 +178,13 @@ impl Metrics {
         m.warm_start = warm;
         m.learned_buckets = buckets as u64;
         m.fingerprint_mismatch = fingerprint_mismatch;
+    }
+
+    /// Record that the warm-started plan came from the nearest neighboring
+    /// pow2 bucket rather than an exact (width, batch, ctx) hit (called
+    /// once at engine startup, only meaningful alongside `warm_start`).
+    pub fn set_warm_start_interpolated(&self, interpolated: bool) {
+        self.lock().warm_start_interpolated = interpolated;
     }
 
     /// Record a stale warm-started plan being evicted from the learned
@@ -256,6 +279,19 @@ impl Metrics {
         self.lock().occupancy_max
     }
 
+    /// Per-step occupancy histogram: element `i` counts the steps that ran
+    /// with exactly `i + 1` active sequences.
+    pub fn occupancy_hist(&self) -> Vec<u64> {
+        self.lock().occupancy_hist.clone()
+    }
+
+    /// Steps that ran with at least `min_occupancy` active sequences —
+    /// what load tests assert on ("the batch actually held B > 1").
+    pub fn steps_at_occupancy_ge(&self, min_occupancy: usize) -> u64 {
+        let m = self.lock();
+        m.occupancy_hist.iter().skip(min_occupancy.saturating_sub(1)).sum()
+    }
+
     /// Snapshot as JSON (served by the `stats` command).
     pub fn snapshot(&self) -> Json {
         let mut m = self.lock();
@@ -299,6 +335,10 @@ impl Metrics {
             ("batch_steps", Json::num(occ_steps as f64)),
             ("batch_occupancy_mean", Json::num(occ_mean)),
             ("batch_occupancy_max", Json::num(occ_max as f64)),
+            (
+                "batch_occupancy_hist",
+                Json::arr(m.occupancy_hist.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
             ("unit_wide_busy_s", Json::num(m.wide_busy_s)),
             ("unit_narrow_busy_s", Json::num(m.narrow_busy_s)),
             ("unit_balance", Json::num(unit_balance)),
@@ -309,6 +349,7 @@ impl Metrics {
             ("predicted_balance", opt(m.predicted_balance)),
             ("prediction_residual", residual),
             ("warm_start", Json::Bool(m.warm_start)),
+            ("warm_start_interpolated", Json::Bool(m.warm_start_interpolated)),
             ("learned_buckets", Json::num(m.learned_buckets as f64)),
             ("fingerprint_mismatch", Json::Bool(m.fingerprint_mismatch)),
             ("warm_start_evictions", Json::num(m.warm_start_evictions as f64)),
@@ -351,6 +392,26 @@ mod tests {
         let mean = j.get("batch_occupancy_mean").unwrap().as_f64().unwrap();
         assert!((mean - 2.4).abs() < 1e-9);
         assert_eq!(j.get("batch_occupancy_max").unwrap().as_usize(), Some(4));
+    }
+
+    #[test]
+    fn occupancy_histogram_counts_per_bucket_steps() {
+        let m = Metrics::new();
+        // empty until the first step, and zero-occupancy steps never count
+        assert!(m.occupancy_hist().is_empty());
+        assert_eq!(m.steps_at_occupancy_ge(1), 0);
+        for occ in [1usize, 3, 2, 4, 2, 1, 4] {
+            m.record_step(occ, 0.01);
+        }
+        assert_eq!(m.occupancy_hist(), vec![2, 2, 1, 2]);
+        assert_eq!(m.steps_at_occupancy_ge(1), 7);
+        assert_eq!(m.steps_at_occupancy_ge(2), 5, "steps that actually batched");
+        assert_eq!(m.steps_at_occupancy_ge(4), 2);
+        assert_eq!(m.steps_at_occupancy_ge(5), 0);
+        let j = m.snapshot();
+        let hist = j.get("batch_occupancy_hist").unwrap().as_arr().unwrap();
+        let got: Vec<usize> = hist.iter().map(|x| x.as_usize().unwrap()).collect();
+        assert_eq!(got, vec![2, 2, 1, 2], "stats surface must mirror the histogram");
     }
 
     #[test]
@@ -400,9 +461,12 @@ mod tests {
         assert_eq!(j.get("learned_buckets").unwrap().as_usize(), Some(0));
         assert_eq!(j.get("fingerprint_mismatch").unwrap().as_bool(), Some(false));
         assert_eq!(j.get("warm_start_evictions").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("warm_start_interpolated").unwrap().as_bool(), Some(false));
         m.set_warm_start(true, 3, false);
+        m.set_warm_start_interpolated(true);
         let j = m.snapshot();
         assert_eq!(j.get("warm_start").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("warm_start_interpolated").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("learned_buckets").unwrap().as_usize(), Some(3));
         // a refused table surfaces both the refusal and the armed fallback
         m.set_warm_start(false, 2, true);

@@ -74,6 +74,10 @@ pub struct RetunePolicy {
     /// True when the startup plan was armed from a persisted learned
     /// bucket rather than the offline fit — surfaced in `stats`.
     pub warm_start: bool,
+    /// True when the armed bucket was not an exact (width, batch, ctx)
+    /// hit but the nearest neighboring pow2 bucket's learned plan —
+    /// surfaced in `stats` as `warm_start_interpolated`.
+    pub warm_start_interpolated: bool,
     /// Number of learned buckets in the loaded host profile.
     pub learned_buckets: usize,
     /// True when the loaded profile carried a learned table that was
@@ -270,6 +274,7 @@ impl Scheduler {
                     policy.learned_buckets,
                     policy.fingerprint_mismatch,
                 );
+                metrics_w.set_warm_start_interpolated(policy.warm_start_interpolated);
                 // learned-plan write-back channel (None: nothing persists)
                 let mut persist = policy.persist.take();
                 // (batch, ctx) bucket the width pricer currently evaluates
@@ -589,8 +594,21 @@ impl Scheduler {
                         }
                     }
                 }
-                // shutdown: force any pending learned-plan state to disk
-                // (debounce may have swallowed the final epochs)
+                // shutdown: every job that never reached a lane must hear
+                // an explicit error. Relying on reply-channel drop would
+                // surface as an opaque "engine worker died" at the client,
+                // and a job racing into `rx` between the Disconnected
+                // detection and this point would otherwise vanish — drain
+                // both the local queue and the channel buffer.
+                let bye = "scheduler shut down before the request was served".to_string();
+                for (_req, reply, _enq) in queue.drain(..) {
+                    let _ = reply.send(Err(bye.clone()));
+                }
+                while let Ok((_req, reply, _enq)) = rx.try_recv() {
+                    let _ = reply.send(Err(bye.clone()));
+                }
+                // force any pending learned-plan state to disk (debounce
+                // may have swallowed the final epochs)
                 if let Some(ps) = persist.as_mut() {
                     ps.flush();
                 }
@@ -636,7 +654,23 @@ fn prepare(
         EngineChoice::Sequential => VerificationTree::root_only(),
         EngineChoice::Ghidorah => arca_tree.clone(),
     };
-    let max_new = req.max_new.min(cfg.max_ctx.saturating_sub(prompt.len() + tree.width()));
+    // A prompt that fills the context up to the tree's decode footprint
+    // leaves no room to generate: the old clamp silently set `max_new` to
+    // 0 and still admitted the request, burning a KV lane (and a queue
+    // slot under load) on a guaranteed zero-token generation. Reject it
+    // up front with an error the client can act on instead.
+    let room = cfg.max_ctx.saturating_sub(prompt.len() + tree.width());
+    if room == 0 || req.max_new == 0 {
+        return Err(format!(
+            "no room to generate: prompt ({} tokens) + draft tree (width {}) \
+             leaves {room} of max_ctx {} for the {} requested tokens",
+            prompt.len(),
+            tree.width(),
+            cfg.max_ctx,
+            req.max_new,
+        ));
+    }
+    let max_new = req.max_new.min(room);
     Ok((prompt, max_new, tree))
 }
 
@@ -1007,6 +1041,85 @@ mod tests {
             .unwrap();
         assert_eq!(r.tokens, 4);
         assert_eq!(s.metrics.current_dense_split(), None);
+    }
+
+    #[test]
+    fn full_context_prompt_is_rejected_not_admitted() {
+        // boundary: BOS + 254 bytes + the sequential tree's width-1
+        // footprint lands exactly on max_ctx (256) — zero room to
+        // generate. The old clamp admitted this as a zero-token
+        // generation that burned a KV lane; it must error instead.
+        let s = sched();
+        let cfg = ModelConfig::tiny();
+        let boundary = "x".repeat(cfg.max_ctx - 2); // +BOS +tree width == max_ctx
+        let err = s
+            .submit(Request {
+                id: 1,
+                prompt: boundary,
+                max_new: 4,
+                engine: EngineChoice::Sequential,
+            })
+            .unwrap_err();
+        assert!(err.contains("no room to generate"), "unexpected error: {err}");
+        // one token of room: the request right inside the edge still serves
+        let edge = "x".repeat(cfg.max_ctx - 3);
+        let r = s
+            .submit(Request { id: 2, prompt: edge, max_new: 4, engine: EngineChoice::Sequential })
+            .unwrap();
+        assert_eq!(r.tokens, 1, "exactly one token of context room");
+        // an explicit zero-token request must not burn a lane either
+        let err = s
+            .submit(Request {
+                id: 3,
+                prompt: "hi".into(),
+                max_new: 0,
+                engine: EngineChoice::Sequential,
+            })
+            .unwrap_err();
+        assert!(err.contains("no room"), "unexpected error: {err}");
+        // speculative requests hit the boundary earlier: the draft tree's
+        // width counts against the context footprint too
+        let spec_boundary = "x".repeat(cfg.max_ctx - 1 - VerificationTree::chain(3).width());
+        let err = s
+            .submit(Request {
+                id: 4,
+                prompt: spec_boundary,
+                max_new: 4,
+                engine: EngineChoice::Ghidorah,
+            })
+            .unwrap_err();
+        assert!(err.contains("no room to generate"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn shutdown_under_load_replies_to_every_request() {
+        // drop the scheduler while more requests are queued than lanes
+        // exist: Drop closes the queue and joins the worker, which must
+        // serve or explicitly fail every job — no submit may ever see the
+        // opaque channel-drop "engine worker died".
+        let s = Arc::new(sched());
+        let mut handles = vec![];
+        for i in 0..(DEFAULT_MAX_BATCH as u64 + 8) {
+            let s2 = Arc::clone(&s);
+            handles.push(std::thread::spawn(move || {
+                s2.submit(Request {
+                    id: i,
+                    prompt: "load".into(),
+                    max_new: 16,
+                    engine: EngineChoice::Sequential,
+                })
+            }));
+        }
+        drop(s); // the main handle goes away while submits are in flight
+        for h in handles {
+            match h.join().unwrap() {
+                Ok(r) => assert_eq!(r.tokens, 16),
+                Err(e) => assert!(
+                    e.contains("shut down"),
+                    "reply must be an explicit error, not a dropped channel: {e}"
+                ),
+            }
+        }
     }
 
     #[test]

@@ -5,14 +5,15 @@
 //!   generate --prompt TEXT [--max-new N] [--engine seq|ghidorah]
 //!   arca    [--dataset NAME] [--ctx N]            run the ARCA preprocessing pass
 //!   bench   table1|fig9|fig10a|fig10b|measured|kernels  regenerate a paper artifact
+//!   bench   serve-load [--clients N] [--arrival closed|poisson:R]  concurrent load smoke
 //!   info                                          artifact + model summary
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use ghidorah::arca::autotune::{
-    CalibrationConfig, HostProfile, LearnedPlan, OnlineRetuner, PlanPersist, ProfileFingerprint,
-    RetuneConfig, StepPricer, WarmStartChurn, WidthRetuner,
+    batch_bucket, ctx_bucket, CalibrationConfig, HostProfile, LearnedPlan, OnlineRetuner,
+    PlanPersist, ProfileFingerprint, RetuneConfig, StepPricer, WarmStartChurn, WidthRetuner,
 };
 use ghidorah::arca::calibrate::{fit_profile, PAPER_TABLE1};
 use ghidorah::arca::profiler::profile;
@@ -27,6 +28,7 @@ use ghidorah::model::weights::Weights;
 use ghidorah::model::ModelConfig;
 use ghidorah::runtime::{Artifacts, Runtime};
 use ghidorah::spec::tree::VerificationTree;
+use ghidorah::workload::loadgen::{self, LoadGenConfig, Pacing};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, BTreeMap<String, String>) {
     let mut pos = Vec::new();
@@ -61,9 +63,15 @@ USAGE:
                     [--parallel hcmp[:RATIO]|hcmp:dyn[:RATIO]|seq] [--wide N] [--narrow M]
                     [--autotune] [--host-profile PATH] [--stats]
   ghidorah arca     [--dataset MT-Bench|GSM8K|MBPP|HumanEval] [--ctx 256] [--host-profile PATH]
-  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|measured|kernels|all
+  ghidorah bench    table1|fig9|fig10a|fig10b|ablation|serve-load|measured|kernels|all
                     (measured also takes [--autotune] [--host-profile PATH];
-                     kernels prints scalar vs packed GEMM GFLOP/s, takes [--reps N])
+                     kernels prints scalar vs packed GEMM GFLOP/s, takes [--reps N];
+                     serve-load drives a live scheduler with N concurrent clients:
+                     [--clients 6] [--requests 8] [--arrival closed|poisson:R|fixed:R]
+                     [--mean-prompt N] [--mean-new N] [--spec-frac 0.5] [--stagger S]
+                     [--seed 42] [--hold-steps 8] [--stats] plus the serve flags
+                     --batch/--width/--topk/--parallel/--autotune/--host-profile;
+                     fails unless batched occupancy B > 1 held for --hold-steps steps)
   ghidorah info
 
   --parallel selects the pure-Rust execution engine: `hcmp[:RATIO]` runs the
@@ -271,12 +279,21 @@ fn apply_autotune(
         );
     }
     // warm start: a learned bucket persisted under the same serving shape
-    // supersedes the offline fit (a user-pinned ratio still wins)
-    let learned =
-        if explicit { None } else { table.and_then(|t| t.get(tree.width(), max_batch, ctx)) };
+    // supersedes the offline fit (a user-pinned ratio still wins). A
+    // near-miss — no plan under the exact (width, batch, ctx) bucket —
+    // seeds from the nearest neighboring pow2 bucket's plan instead of
+    // silently reverting to the offline fit; the staleness tracker below
+    // evicts an interpolation that turns out not to transfer.
+    let learned = if explicit {
+        None
+    } else {
+        table.and_then(|t| t.get_nearest(tree.width(), max_batch, ctx))
+    };
+    let exact_key = (tree.width(), batch_bucket(max_batch), ctx_bucket(ctx));
+    let interpolated = learned.is_some_and(|(key, _)| *key != exact_key);
     let (plan, initial_width) = if explicit {
         (plan, tree.width())
-    } else if let Some(lp) = learned {
+    } else if let Some((src, lp)) = learned {
         let plan = if dynamic {
             let frac = lp.dense_split.unwrap_or_else(|| {
                 p.dyn_split_for(cfg, tree.width(), max_batch, ctx, Some(&pattern))
@@ -287,12 +304,15 @@ fn apply_autotune(
         };
         eprintln!(
             "ghidorah: warm start from learned bucket (w {} b {} ctx {}): ratio {:.2}, width {}",
-            tree.width(),
-            max_batch,
-            ctx,
-            lp.linear_ratio,
-            lp.width
+            src.0, src.1, src.2, lp.linear_ratio, lp.width
         );
+        if interpolated {
+            eprintln!(
+                "ghidorah: warm start interpolated — nearest bucket (b {} ctx {}) stands in \
+                 for the unlearned load (b {} ctx {})",
+                src.1, src.2, exact_key.1, exact_key.2
+            );
+        }
         (plan, lp.width)
     } else if dynamic {
         // hill-climb ratio AND attention split on the calibrated simulator.
@@ -361,11 +381,15 @@ fn apply_autotune(
         })),
         persist: None, // armed by autotune_wiring when a profile path exists
         warm_start: learned.is_some(),
+        warm_start_interpolated: interpolated,
         learned_buckets: p.learned.len(),
         fingerprint_mismatch,
         // a warm-started plan is on probation: immediate retune churn away
-        // from the armed ratio marks the bucket stale
-        stale: learned.map(|lp| WarmStartChurn::new(lp.linear_ratio, max_batch, ctx)),
+        // from the armed ratio marks the bucket stale. The churn is keyed
+        // to the LIVE load bucket (not an interpolation donor's): evicting
+        // there is what lets the fresh re-tune own this load's bucket
+        // while the donor keeps serving its own.
+        stale: learned.map(|(_, lp)| WarmStartChurn::new(lp.linear_ratio, max_batch, ctx)),
         retune_fresh: learned.map(|_| {
             let (p3, cfg3, heads3) = (p.clone(), cfg.clone(), heads.to_vec());
             Box::new(move |w: usize, c: usize| {
@@ -754,6 +778,7 @@ fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()
             println!("{}", bench::fig10b(reps).text);
         }
         "ablation" => println!("{}", bench::ablation().text),
+        "serve-load" => cmd_serve_load(flags)?,
         "kernels" => {
             let reps: usize = flags.get("reps").map(|s| s.parse()).transpose()?.unwrap_or(40);
             println!("{}", bench::kernels(reps).text);
@@ -775,6 +800,100 @@ fn cmd_bench(which: &str, flags: &BTreeMap<String, String>) -> anyhow::Result<()
         }
         _ => usage(),
     }
+    Ok(())
+}
+
+/// `bench serve-load`: drive a live scheduler with the closed-loop
+/// concurrent load generator and report occupancy, throughput, and
+/// latency/queue-delay percentiles. Exits non-zero when the run never
+/// held batched occupancy (B > 1) for `--hold-steps` decode steps, so CI
+/// can assert the continuous-batching path actually formed batches —
+/// the report and optional stats snapshot are printed first either way.
+fn cmd_serve_load(flags: &BTreeMap<String, String>) -> anyhow::Result<()> {
+    let width: usize = flags.get("width").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let top_k: usize = flags.get("topk").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let max_batch: usize = flags
+        .get("batch")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(ghidorah::coordinator::DEFAULT_MAX_BATCH);
+    let pacing = match flags.get("arrival") {
+        Some(s) => Pacing::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad arrival '{s}' (closed|poisson:R|fixed:R)"))?,
+        None => Pacing::ClosedLoop,
+    };
+    // no PJRT fallback here: the load harness targets the pure-Rust
+    // engines, defaulting to the sequential one
+    let mode = parse_parallel(flags)?.unwrap_or(ParallelMode::Seq);
+    let cfg = load_cfg_or_tiny();
+    let (tree, heads) = serving_tree(&cfg, width);
+    let (mode, wide, narrow, policy, fracs) =
+        autotune_wiring(flags, mode, &cfg, &tree, &heads, max_batch)?;
+
+    // length caps keyed to the model context so every sampled request
+    // leaves decode room even with several lanes resident
+    let cap = (cfg.max_ctx / 4).max(8);
+    let smoke = LoadGenConfig::smoke();
+    let lg = LoadGenConfig {
+        clients: flags.get("clients").map(|s| s.parse()).transpose()?.unwrap_or(smoke.clients),
+        requests_per_client: flags
+            .get("requests")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(smoke.requests_per_client),
+        pacing,
+        mean_prompt: flags
+            .get("mean-prompt")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(smoke.mean_prompt.min(cap)),
+        max_prompt: cap,
+        mean_new: flags
+            .get("mean-new")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(smoke.mean_new.min(cap)),
+        max_new: cap,
+        spec_frac: flags
+            .get("spec-frac")
+            .map(|s| s.parse())
+            .transpose()?
+            .unwrap_or(smoke.spec_frac),
+        stagger_s: flags.get("stagger").map(|s| s.parse()).transpose()?.unwrap_or(0.0),
+        seed: flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(smoke.seed),
+    };
+    let hold_steps: u64 = flags.get("hold-steps").map(|s| s.parse()).transpose()?.unwrap_or(8);
+
+    let sched = std::sync::Arc::new(Scheduler::spawn_tuned(
+        rust_engine_factory(cfg, mode, wide, narrow, fracs),
+        tree,
+        64,
+        top_k,
+        max_batch,
+        policy,
+    ));
+    eprintln!(
+        "ghidorah: serve-load — {} clients x {} requests ({:?}), max batch {max_batch}",
+        lg.clients, lg.requests_per_client, lg.pacing
+    );
+    let report = loadgen::run(&sched, &lg);
+    eprintln!("{}", report.render());
+    println!("serve-load: {}", report.to_json().dump());
+    if flags.get("stats").is_some() {
+        println!("stats: {}", sched.metrics.snapshot().dump());
+    }
+    anyhow::ensure!(
+        report.errors == 0,
+        "{} of {} requests failed under load",
+        report.errors,
+        report.submitted
+    );
+    anyhow::ensure!(
+        report.batched_steps >= hold_steps,
+        "occupancy never held B > 1 for {hold_steps} steps (batched {} of {} steps)",
+        report.batched_steps,
+        report.total_steps
+    );
     Ok(())
 }
 

@@ -1,0 +1,403 @@
+//! Closed-loop concurrent load generator: real client threads driving the
+//! scheduler's `submit` API.
+//!
+//! The trace generator in the parent module produces *offline* request
+//! traces for the simulator experiments; this module is its online
+//! counterpart — N client threads holding a configurable target
+//! concurrency against a live [`Scheduler`], so the continuous-batching
+//! join/leave path, the B > 1 buckets of the learned-plan table, and the
+//! width pricer's batch pricing are exercised end to end instead of only
+//! ever being driven at occupancy 1 by serial submits. Everything is
+//! seeded: the same [`LoadGenConfig`] replays the same prompts, lengths,
+//! engine choices, and think times.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{EngineChoice, Request, Scheduler};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+
+use super::{sample_geometric, synthetic_prompt};
+
+/// Per-client pacing between a reply and the client's next submit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Pacing {
+    /// Closed loop: the next request goes out the moment the previous
+    /// reply lands — sustained concurrency equals the client count.
+    ClosedLoop,
+    /// Poisson think time: exponential gaps at `rate` requests/second per
+    /// client (open-loop-ish arrivals while keeping backpressure bounded).
+    Poisson { rate: f64 },
+    /// Fixed think time of `1/rate` seconds per client.
+    Fixed { rate: f64 },
+}
+
+impl Pacing {
+    /// Parse `closed`, `poisson:RATE`, or `fixed:RATE`.
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "closed" {
+            return Some(Self::ClosedLoop);
+        }
+        let rate_in = |r: &str| r.parse::<f64>().ok().filter(|r| *r > 0.0 && r.is_finite());
+        if let Some(r) = s.strip_prefix("poisson:") {
+            return rate_in(r).map(|rate| Self::Poisson { rate });
+        }
+        if let Some(r) = s.strip_prefix("fixed:") {
+            return rate_in(r).map(|rate| Self::Fixed { rate });
+        }
+        None
+    }
+
+    /// Seconds this client thinks before its next submit.
+    fn think_s(&self, rng: &mut Rng) -> f64 {
+        match *self {
+            Pacing::ClosedLoop => 0.0,
+            Pacing::Poisson { rate } => -rng.f64().max(1e-12).ln() / rate.max(1e-9),
+            Pacing::Fixed { rate } => 1.0 / rate.max(1e-9),
+        }
+    }
+}
+
+/// Load-generator shape: how many clients, how they pace themselves, and
+/// the request distributions they draw from.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Concurrent client threads (the target concurrency).
+    pub clients: usize,
+    /// Requests each client submits before leaving.
+    pub requests_per_client: usize,
+    pub pacing: Pacing,
+    /// Mean prompt length in bytes (geometric distribution).
+    pub mean_prompt: usize,
+    /// Hard prompt-length cap so every request fits the model context.
+    pub max_prompt: usize,
+    /// Mean `max_new` (geometric distribution).
+    pub mean_new: usize,
+    /// Hard `max_new` cap.
+    pub max_new: usize,
+    /// Fraction of requests decoded speculatively (`ghidorah` engine);
+    /// the rest run sequentially, so mixed-width batches are exercised.
+    pub spec_frac: f64,
+    /// Client `i` joins `i * stagger_s` seconds after start (staggered
+    /// joins; clients also leave at different times as their request
+    /// budgets run out).
+    pub stagger_s: f64,
+    /// Root RNG seed: every client forks a deterministic child stream.
+    pub seed: u64,
+}
+
+impl LoadGenConfig {
+    /// A small deterministic smoke shape: enough concurrency to hold
+    /// B > 1 on an 8-lane scheduler without taking minutes in CI.
+    pub fn smoke() -> Self {
+        Self {
+            clients: 6,
+            requests_per_client: 8,
+            pacing: Pacing::ClosedLoop,
+            mean_prompt: 24,
+            max_prompt: 64,
+            mean_new: 24,
+            max_new: 48,
+            spec_frac: 0.5,
+            stagger_s: 0.0,
+            seed: 42,
+        }
+    }
+}
+
+/// What a load run measured, combining the clients' view (latency,
+/// queue delay, errors) with the scheduler's own occupancy histogram.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub submitted: usize,
+    pub completed: usize,
+    pub errors: usize,
+    pub tokens_out: u64,
+    pub wall_s: f64,
+    /// Client-observed aggregate throughput (tokens / wall time).
+    pub throughput_tok_s: f64,
+    pub latency_ms_p50: f64,
+    pub latency_ms_p95: f64,
+    pub latency_ms_p99: f64,
+    pub queue_delay_ms_p50: f64,
+    pub queue_delay_ms_p95: f64,
+    pub queue_delay_ms_p99: f64,
+    pub occupancy_mean: f64,
+    pub occupancy_max: u64,
+    /// Element `i`: steps that ran with exactly `i + 1` active sequences.
+    pub occupancy_hist: Vec<u64>,
+    /// Steps that actually batched (occupancy >= 2) — the sustained
+    /// B > 1 window a load smoke asserts on.
+    pub batched_steps: u64,
+    pub total_steps: u64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("clients", Json::num(self.clients as f64)),
+            ("submitted", Json::num(self.submitted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("tokens_out", Json::num(self.tokens_out as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("throughput_tok_s", Json::num(self.throughput_tok_s)),
+            ("latency_ms_p50", Json::num(self.latency_ms_p50)),
+            ("latency_ms_p95", Json::num(self.latency_ms_p95)),
+            ("latency_ms_p99", Json::num(self.latency_ms_p99)),
+            ("queue_delay_ms_p50", Json::num(self.queue_delay_ms_p50)),
+            ("queue_delay_ms_p95", Json::num(self.queue_delay_ms_p95)),
+            ("queue_delay_ms_p99", Json::num(self.queue_delay_ms_p99)),
+            ("occupancy_mean", Json::num(self.occupancy_mean)),
+            ("occupancy_max", Json::num(self.occupancy_max as f64)),
+            (
+                "occupancy_hist",
+                Json::arr(self.occupancy_hist.iter().map(|&n| Json::num(n as f64)).collect()),
+            ),
+            ("batched_steps", Json::num(self.batched_steps as f64)),
+            ("total_steps", Json::num(self.total_steps as f64)),
+        ])
+    }
+
+    /// Human-readable summary (one metric per line).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "serve-load: {} clients, {}/{} requests ok ({} errors), {} tokens in {:.2}s \
+             ({:.1} tok/s)\n",
+            self.clients,
+            self.completed,
+            self.submitted,
+            self.errors,
+            self.tokens_out,
+            self.wall_s,
+            self.throughput_tok_s,
+        ));
+        out.push_str(&format!(
+            "  latency ms     p50 {:.1}  p95 {:.1}  p99 {:.1}\n",
+            self.latency_ms_p50, self.latency_ms_p95, self.latency_ms_p99
+        ));
+        out.push_str(&format!(
+            "  queue delay ms p50 {:.1}  p95 {:.1}  p99 {:.1}\n",
+            self.queue_delay_ms_p50, self.queue_delay_ms_p95, self.queue_delay_ms_p99
+        ));
+        out.push_str(&format!(
+            "  occupancy mean {:.2}  max {}  batched steps {}/{}  hist {:?}",
+            self.occupancy_mean,
+            self.occupancy_max,
+            self.batched_steps,
+            self.total_steps,
+            self.occupancy_hist,
+        ));
+        out
+    }
+}
+
+/// What one client thread brings home.
+struct ClientTally {
+    latencies_ms: Vec<f64>,
+    queue_delays_ms: Vec<f64>,
+    tokens: u64,
+    completed: usize,
+    errors: usize,
+}
+
+/// Run the load against a live scheduler and collect the report. Blocks
+/// until every client has drained its request budget.
+pub fn run(sched: &Arc<Scheduler>, cfg: &LoadGenConfig) -> LoadReport {
+    let started = Instant::now();
+    let mut root = Rng::new(cfg.seed);
+    let mut handles = Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        let sched = Arc::clone(sched);
+        let mut rng = root.fork(c as u64 + 1);
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut tally = ClientTally {
+                latencies_ms: Vec::with_capacity(cfg.requests_per_client),
+                queue_delays_ms: Vec::with_capacity(cfg.requests_per_client),
+                tokens: 0,
+                completed: 0,
+                errors: 0,
+            };
+            if cfg.stagger_s > 0.0 && c > 0 {
+                std::thread::sleep(Duration::from_secs_f64(cfg.stagger_s * c as f64));
+            }
+            for r in 0..cfg.requests_per_client {
+                let prompt_len = sample_geometric(&mut rng, cfg.mean_prompt)
+                    .clamp(1, cfg.max_prompt.max(1));
+                let max_new =
+                    sample_geometric(&mut rng, cfg.mean_new).clamp(1, cfg.max_new.max(1));
+                let engine = if rng.chance(cfg.spec_frac) {
+                    EngineChoice::Ghidorah
+                } else {
+                    EngineChoice::Sequential
+                };
+                let req = Request {
+                    id: (c * cfg.requests_per_client + r) as u64,
+                    prompt: synthetic_prompt(&mut rng, prompt_len),
+                    max_new,
+                    engine,
+                };
+                match sched.submit(req) {
+                    Ok(resp) => {
+                        tally.latencies_ms.push(resp.latency_s * 1e3);
+                        tally.queue_delays_ms.push(resp.queue_delay_s * 1e3);
+                        tally.tokens += resp.tokens as u64;
+                        tally.completed += 1;
+                    }
+                    Err(_) => tally.errors += 1,
+                }
+                let think = cfg.pacing.think_s(&mut rng);
+                if think > 0.0 {
+                    std::thread::sleep(Duration::from_secs_f64(think));
+                }
+            }
+            tally
+        }));
+    }
+
+    let mut latency = Samples::new();
+    let mut queue_delay = Samples::new();
+    let (mut tokens, mut completed, mut errors) = (0u64, 0usize, 0usize);
+    for h in handles {
+        // a panicked client is a harness bug, not a serving result
+        let tally = h.join().expect("load client panicked");
+        for x in tally.latencies_ms {
+            latency.push(x);
+        }
+        for x in tally.queue_delays_ms {
+            queue_delay.push(x);
+        }
+        tokens += tally.tokens;
+        completed += tally.completed;
+        errors += tally.errors;
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+
+    let occupancy_hist = sched.metrics.occupancy_hist();
+    let total_steps: u64 = occupancy_hist.iter().sum();
+    let batched_steps = sched.metrics.steps_at_occupancy_ge(2);
+    let snap = sched.metrics.snapshot();
+    let mean = snap.get("batch_occupancy_mean").and_then(Json::as_f64).unwrap_or(0.0);
+    LoadReport {
+        clients: cfg.clients,
+        submitted: cfg.clients * cfg.requests_per_client,
+        completed,
+        errors,
+        tokens_out: tokens,
+        wall_s,
+        throughput_tok_s: if wall_s > 0.0 { tokens as f64 / wall_s } else { 0.0 },
+        latency_ms_p50: latency.p50(),
+        latency_ms_p95: latency.p95(),
+        latency_ms_p99: latency.p99(),
+        queue_delay_ms_p50: queue_delay.p50(),
+        queue_delay_ms_p95: queue_delay.p95(),
+        queue_delay_ms_p99: queue_delay.p99(),
+        occupancy_mean: mean,
+        occupancy_max: sched.metrics.occupancy_max(),
+        occupancy_hist,
+        batched_steps,
+        total_steps,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::forward::RustModel;
+    use crate::model::weights::Weights;
+    use crate::model::ModelConfig;
+    use crate::spec::tree::VerificationTree;
+
+    fn sched() -> Arc<Scheduler> {
+        let cfg = ModelConfig::tiny();
+        let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+        Arc::new(Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4))
+    }
+
+    #[test]
+    fn pacing_parses_and_rejects_garbage() {
+        assert_eq!(Pacing::parse("closed"), Some(Pacing::ClosedLoop));
+        assert_eq!(Pacing::parse("poisson:4"), Some(Pacing::Poisson { rate: 4.0 }));
+        assert_eq!(Pacing::parse("fixed:2.5"), Some(Pacing::Fixed { rate: 2.5 }));
+        assert_eq!(Pacing::parse("poisson:0"), None, "rate must be positive");
+        assert_eq!(Pacing::parse("poisson:-1"), None);
+        assert_eq!(Pacing::parse("fixed:nan"), None);
+        assert_eq!(Pacing::parse("open"), None);
+    }
+
+    #[test]
+    fn closed_loop_load_holds_batched_occupancy() {
+        let s = sched();
+        let cfg = LoadGenConfig {
+            clients: 4,
+            requests_per_client: 3,
+            mean_new: 16,
+            max_new: 24,
+            ..LoadGenConfig::smoke()
+        };
+        let report = run(&s, &cfg);
+        assert_eq!(report.submitted, 12);
+        assert_eq!(report.completed, 12, "errors: {}", report.errors);
+        assert_eq!(report.errors, 0);
+        assert!(report.tokens_out > 0);
+        assert!(report.throughput_tok_s > 0.0);
+        assert!(report.latency_ms_p50 > 0.0);
+        assert!(report.latency_ms_p99 >= report.latency_ms_p50);
+        // 4 closed-loop clients against 8 lanes: the batch must actually
+        // form, and the histogram must account for every step
+        assert!(report.occupancy_max >= 2, "load never batched");
+        assert!(report.batched_steps > 0, "histogram shows no B > 1 steps");
+        assert_eq!(report.occupancy_hist.iter().sum::<u64>(), report.total_steps);
+        // the report mirrors the scheduler's own counters
+        assert_eq!(report.batched_steps, s.metrics.steps_at_occupancy_ge(2));
+        assert_eq!(report.occupancy_max, s.metrics.occupancy_max());
+        let j = report.to_json();
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(12));
+        assert!(j.get("occupancy_hist").unwrap().as_arr().is_some());
+        assert!(report.render().contains("serve-load:"));
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_request_stream() {
+        // two runs against fresh schedulers: identical per-request token
+        // counts prove the sampled prompts/lengths/engines replayed
+        let report_tokens = |seed: u64| {
+            let s = sched();
+            let cfg = LoadGenConfig {
+                clients: 3,
+                requests_per_client: 2,
+                seed,
+                ..LoadGenConfig::smoke()
+            };
+            let r = run(&s, &cfg);
+            (r.tokens_out, r.completed)
+        };
+        let (a_tokens, a_done) = report_tokens(7);
+        let (b_tokens, b_done) = report_tokens(7);
+        assert_eq!(a_done, b_done);
+        assert_eq!(a_tokens, b_tokens, "seeded load must be reproducible");
+        let (c_tokens, _) = report_tokens(8);
+        let (d_tokens, _) = report_tokens(8);
+        assert_eq!(c_tokens, d_tokens, "every seed replays its own stream");
+    }
+
+    #[test]
+    fn staggered_clients_still_complete() {
+        let s = sched();
+        let cfg = LoadGenConfig {
+            clients: 3,
+            requests_per_client: 2,
+            stagger_s: 0.005,
+            pacing: Pacing::Fixed { rate: 200.0 },
+            ..LoadGenConfig::smoke()
+        };
+        let report = run(&s, &cfg);
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.errors, 0);
+    }
+}

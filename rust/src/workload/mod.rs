@@ -6,6 +6,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod loadgen;
+
 /// Arrival process of a synthetic request trace.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Arrival {
@@ -45,9 +47,7 @@ impl TraceGenerator {
 
     /// Sample a geometric-ish length with the given mean (min 1).
     fn sample_len(rng: &mut Rng, mean: usize) -> usize {
-        let u = rng.f64().max(1e-12);
-        let x = (-u.ln() * mean as f64).round() as usize;
-        x.max(1)
+        sample_geometric(rng, mean)
     }
 
     /// Generate `n` requests.
@@ -91,6 +91,15 @@ impl TraceGenerator {
             max_new: Self::sample_len(rng, self.mean_new),
         }
     }
+}
+
+/// Sample a geometric-ish length with the given mean (min 1); shared by
+/// the offline trace generator and the online load generator so both draw
+/// from the same distribution.
+pub fn sample_geometric(rng: &mut Rng, mean: usize) -> usize {
+    let u = rng.f64().max(1e-12);
+    let x = (-u.ln() * mean as f64).round() as usize;
+    x.max(1)
 }
 
 /// Random printable prompt of a given byte length (for the byte tokenizer).

@@ -1,0 +1,128 @@
+//! Load-generator-level continuous-batching integration: staggered
+//! concurrent clients must get byte-identical answers to their
+//! single-client references while the scheduler's occupancy histogram
+//! proves the decodes actually shared B > 1 steps, and the width
+//! re-tuner's load-hint buckets must track every occupancy the histogram
+//! witnessed.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use ghidorah::arca::autotune::{batch_bucket, ctx_bucket, WidthRetuner};
+use ghidorah::coordinator::{EngineChoice, Request, Scheduler};
+use ghidorah::model::forward::RustModel;
+use ghidorah::model::weights::Weights;
+use ghidorah::model::ModelConfig;
+use ghidorah::spec::tree::VerificationTree;
+use ghidorah::workload::loadgen::{self, LoadGenConfig, Pacing};
+
+const N_CLIENTS: usize = 8;
+const MAX_NEW: usize = 32;
+
+fn scheduler() -> Scheduler {
+    let cfg = ModelConfig::tiny();
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4)
+}
+
+/// 8 fixed probe requests with mixed engines — the golden workload both
+/// the serial reference and the concurrent run decode.
+fn probes() -> Vec<Request> {
+    let prompts =
+        ["alpha", "bravo charlie", "delta", "echo foxtrot", "golf", "hotel india", "jul", "kilo x"];
+    prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request {
+            id: i as u64,
+            prompt: p.to_string(),
+            max_new: MAX_NEW,
+            engine: if i % 2 == 0 { EngineChoice::Sequential } else { EngineChoice::Ghidorah },
+        })
+        .collect()
+}
+
+#[test]
+fn staggered_concurrent_load_matches_single_client_golden_traces() {
+    // single-client references through a fresh identical engine
+    let reference: Vec<String> = {
+        let sched = scheduler();
+        probes().into_iter().map(|r| sched.submit(r).unwrap().text).collect()
+    };
+
+    // same workload, but concurrent: clients join in staggered pairs
+    // (pair k waits k ms) and each leaves whenever its own decode drains,
+    // so the batch composition churns the whole run while every join
+    // window still overlaps its neighbors
+    let sched = Arc::new(scheduler());
+    let mut clients = Vec::new();
+    for (i, req) in probes().into_iter().enumerate() {
+        let sched = Arc::clone(&sched);
+        clients.push(std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis((i / 2) as u64));
+            (i, sched.submit(req).unwrap().text)
+        }));
+    }
+    for c in clients {
+        let (i, text) = c.join().unwrap();
+        assert_eq!(
+            text, reference[i],
+            "client {i}: answer under staggered concurrent load differs from its \
+             single-client reference"
+        );
+    }
+
+    // the histogram must show a sustained B > 1 window, not a lone
+    // coincidental overlap, and it must account for every decode step
+    let hist = sched.metrics.occupancy_hist();
+    let total: u64 = hist.iter().sum();
+    let batched = sched.metrics.steps_at_occupancy_ge(2);
+    assert!(total > 0, "no decode steps recorded");
+    assert!(
+        batched >= 8,
+        "staggered clients never held B > 1 (batched {batched} of {total} steps, hist {hist:?})"
+    );
+    assert!(sched.metrics.occupancy_max() >= 2);
+    assert_eq!(hist[0] + batched, total, "histogram buckets must partition the steps");
+}
+
+#[test]
+fn width_retuner_load_hints_track_histogram_occupancies() {
+    // drive real load through the loadgen harness to materialize a
+    // multi-bucket occupancy histogram
+    let sched = Arc::new(scheduler());
+    let cfg = LoadGenConfig {
+        clients: N_CLIENTS,
+        requests_per_client: 3,
+        pacing: Pacing::ClosedLoop,
+        stagger_s: 0.002,
+        mean_new: 16,
+        max_new: 24,
+        ..LoadGenConfig::smoke()
+    };
+    let report = loadgen::run(&sched, &cfg);
+    assert_eq!(report.errors, 0, "load errors: {}", report.errors);
+    assert!(report.batched_steps > 0, "load never batched: hist {:?}", report.occupancy_hist);
+
+    // every occupancy the histogram witnessed must bucket exactly where
+    // the scheduler's load hints would steer the width re-tuner — this is
+    // the contract that keeps per-bucket learned plans keyed to real load
+    let heads = vec![vec![0.6, 0.2, 0.1], vec![0.45, 0.15, 0.05], vec![0.3, 0.1, 0.04]];
+    let ctx = 64;
+    let mut retuner = WidthRetuner::new(&heads, &[4, 8, 16], 8);
+    let mut beyond_b1 = false;
+    for (i, &count) in report.occupancy_hist.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let occupancy = i + 1;
+        retuner.set_load_hint(occupancy, ctx);
+        assert_eq!(
+            retuner.load_bucket(),
+            (batch_bucket(occupancy), ctx_bucket(ctx)),
+            "load hint for occupancy {occupancy} landed in the wrong bucket"
+        );
+        beyond_b1 |= batch_bucket(occupancy) > 1;
+    }
+    assert!(beyond_b1, "histogram never reached a batch bucket beyond B=1");
+}

@@ -216,6 +216,67 @@ fn fingerprint_mismatch_refuses_warm_start() {
 }
 
 #[test]
+fn near_miss_warm_start_interpolates_from_nearest_bucket() {
+    // a profile that only ever learned the (B=1, ctx=32) bucket
+    let mut profile = synthetic_profile();
+    profile.learned.upsert(
+        3,
+        1,
+        32,
+        LearnedPlan { linear_ratio: 0.33, dense_split: None, width: 3, epochs: 5 },
+    );
+
+    // library-level: a B=4 / ctx=64 load has no exact bucket, but the
+    // nearest-neighbor lookup still finds the B=1 plan — with a donor key
+    // that reveals the near miss (this is what apply_autotune arms and
+    // surfaces as warm_start_interpolated instead of silently falling
+    // back to the offline fit)
+    assert!(profile.learned.get(3, 4, 64).is_none(), "near miss by construction");
+    let (src, lp) = profile.learned.get_nearest(3, 4, 64).expect("neighbor must be found");
+    assert_eq!(*src, (3, 1, 32), "nearest pow2 bucket is the donor");
+    assert!((lp.linear_ratio - 0.33).abs() < 1e-12);
+    // widths are never interpolated across — a different tree prices a
+    // different workload entirely
+    assert!(profile.learned.get_nearest(5, 4, 64).is_none());
+
+    // golden reference: the static serial engine
+    let cfg = ModelConfig::tiny();
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let reference = Scheduler::spawn(move || Ok(model), VerificationTree::chain(3), 8, 4);
+    let want = submit_all(&reference, 2, "near miss", 10);
+
+    // scheduler surface: arming the interpolated plan keeps the golden
+    // trace (ratio swaps only move shard bounds) and `stats` reports the
+    // interpolation alongside the warm start
+    let armed = lp.linear_ratio;
+    let model = RustModel::new(cfg.clone(), Weights::random(&cfg, 42));
+    let policy = RetunePolicy {
+        ratio: Some(OnlineRetuner::new(armed, RetuneConfig::default())),
+        warm_start: true,
+        warm_start_interpolated: true,
+        learned_buckets: profile.learned.len(),
+        ..Default::default()
+    };
+    let s = Scheduler::spawn_tuned(
+        move || ExecEngine::parallel(model, &PartitionPlan::hcmp(armed), 2, 2),
+        VerificationTree::chain(3),
+        8,
+        4,
+        DEFAULT_MAX_BATCH,
+        policy,
+    );
+    let got = submit_all(&s, 2, "near miss", 10);
+    assert_eq!(got, want, "interpolated warm start diverged from the golden trace");
+    let stats = s.metrics.snapshot();
+    assert_eq!(stats.get("warm_start").unwrap().as_bool(), Some(true));
+    assert_eq!(stats.get("warm_start_interpolated").unwrap().as_bool(), Some(true));
+
+    // an exact hit, by contrast, must not report interpolation
+    let (src, _) = profile.learned.get_nearest(3, 1, 32).expect("exact bucket");
+    assert_eq!(*src, (3, 1, 32), "exact hit is its own nearest bucket");
+}
+
+#[test]
 fn stale_warm_start_evicts_and_retunes_fresh() {
     let path = std::env::temp_dir()
         .join(format!("ghidorah-stale-warm-start-{}.json", std::process::id()));
